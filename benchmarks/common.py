@@ -1,0 +1,58 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DualLoopController, MaxFreqController
+from repro.core.hardware import A100_SXM4_40G
+from repro.sim import PlantModel, profile_decode_table
+
+HW = A100_SXM4_40G
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def make_decode_controller(cfg_name: str, tbt_slo=0.100, seed=8):
+    plant = PlantModel(cfg=get_config(cfg_name), hw=HW, n_chips=1,
+                       noise_sigma=0.0, seed=seed)
+    table = profile_decode_table(plant, tbt_slo)
+    return DualLoopController(HW, table)
+
+
+def run_decode_bench(cfg_name: str, controller, tps_fn, duration: float,
+                     ctx: int = 640, seed: int = 9):
+    """Single decode worker driven at a target aggregate TPS; concurrency is
+    adjusted each step to hold the target (paper's decode microbenchmark)."""
+    plant = PlantModel(cfg=get_config(cfg_name), hw=HW, n_chips=1,
+                       noise_sigma=0.01, seed=seed)
+    t, energy, tokens = 0.0, 0.0, 0
+    last = 0.03
+    tbts: List[float] = []
+    freqs: List[Tuple[float, float, float]] = []
+    while t < duration:
+        f = controller.maybe_tick(t)
+        tps = max(tps_fn(t), 1.0)
+        batch = int(np.clip(np.ceil(tps * last), 1, 512))
+        dur = plant.decode_step_latency(batch, ctx, f)
+        power = plant.decode_power(batch, ctx, f, dur)
+        energy += power * dur
+        tokens += batch
+        controller.record_tokens(t + dur, batch, dur)
+        tbts.append(dur)
+        freqs.append((t, f, tps))
+        last = dur
+        t += dur
+    return {"energy_j": energy, "tokens": tokens,
+            "tbt_p90": float(np.percentile(tbts, 90)),
+            "tbt_p95": float(np.percentile(tbts, 95)),
+            "tbt_p99": float(np.percentile(tbts, 99)),
+            "freqs": freqs}

@@ -1,0 +1,264 @@
+"""One benchmark per paper figure/table (deliverable d)."""
+from __future__ import annotations
+
+import copy
+from typing import List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import MaxFreqController, SLOConfig
+from repro.data import get_trace, sinusoidal_decode_load
+from repro.sim import (PlantModel, ReplayConfig, profile_power,
+                       profile_prefill_latency, replay)
+from .common import HW, Row, make_decode_controller, run_decode_bench, timed
+
+
+# -- Fig. 1: sinusoidal tracking -------------------------------------------------------
+
+def bench_fig1_sinusoid() -> List[Row]:
+    _, tps = sinusoidal_decode_load()
+    tps_fn = lambda t: float(np.interp(t % 120.0, np.arange(0, 120, 0.5), tps))
+    def run():
+        green = run_decode_bench("qwen3-14b", make_decode_controller("qwen3-14b"),
+                                 tps_fn, 120.0)
+        base = run_decode_bench("qwen3-14b", MaxFreqController(HW), tps_fn, 120.0)
+        return green, base
+    (green, base), us = timed(run)
+    g_f = np.asarray([f for _, f, _ in green["freqs"]])
+    saving = 1 - green["energy_j"] / base["energy_j"]
+    rows = [
+        ("fig1_sinusoid/freq_range_mhz", us, f"{g_f.min():.0f}-{g_f.max():.0f}"),
+        ("fig1_sinusoid/p99_tbt_green_ms", us, f"{green['tbt_p99']*1e3:.1f}"),
+        ("fig1_sinusoid/p99_tbt_default_ms", us, f"{base['tbt_p99']*1e3:.1f}"),
+        ("fig1_sinusoid/decode_energy_saving", us, f"{saving:.3f}"),
+    ]
+    return rows
+
+
+# -- Fig. 3: U-shaped energy curves -------------------------------------------------------
+
+def bench_fig3_energy_curves() -> List[Row]:
+    cfg = get_config("qwen3-14b")
+    rows = []
+    def run():
+        out = {}
+        # (a) prefill energy vs f
+        plant = PlantModel(cfg=cfg, hw=HW, n_chips=2, noise_sigma=0.0)
+        ladder = HW.ladder()
+        E = []
+        for f in ladder:
+            t = plant.prefill_latency(1024, f)
+            E.append(plant.prefill_power(1024, f, t) * t)
+        E = np.asarray(E)
+        out["prefill_knee"] = ladder[int(np.argmin(E))] / HW.f_max
+        out["prefill_u"] = (E[0] > E.min()) and (E[-1] > E.min())
+        # (b) decode energy/token vs f
+        Ed = []
+        dp = PlantModel(cfg=cfg, hw=HW, n_chips=1, noise_sigma=0.0)
+        for f in ladder:
+            t = dp.decode_step_latency(64, 1000, f)
+            Ed.append(dp.decode_power(64, 1000, f, t) * t / 64)
+        Ed = np.asarray(Ed)
+        out["decode_knee"] = ladder[int(np.argmin(Ed))] / HW.f_max
+        out["decode_u"] = (Ed[0] > Ed.min()) and (Ed[-1] > Ed.min())
+        # (c) fixed-frequency trace sweep
+        trace = get_trace("chat_8qps", duration=60)
+        Es = {}
+        for f in (HW.f_min, 660.0, 900.0, 1140.0, HW.f_max):
+            m = replay(cfg, trace, ReplayConfig(governor="fixed", fixed_freq=f))
+            Es[f] = m.total_energy_j
+        best = min(Es, key=Es.get)
+        out["trace_opt_f"] = best / HW.f_max
+        out["trace_saving_vs_fmax"] = 1 - Es[best] / Es[HW.f_max]
+        return out
+    out, us = timed(run)
+    return [
+        ("fig3a_prefill_knee_frac", us, f"{out['prefill_knee']:.2f}"),
+        ("fig3a_prefill_is_u", us, str(out["prefill_u"])),
+        ("fig3b_decode_knee_frac", us, f"{out['decode_knee']:.2f}"),
+        ("fig3b_decode_knee_below_prefill", us,
+         str(out["decode_knee"] <= out["prefill_knee"])),
+        ("fig3c_trace_opt_f_frac", us, f"{out['trace_opt_f']:.2f}"),
+        ("fig3c_saving_vs_fmax", us, f"{out['trace_saving_vs_fmax']:.3f}"),
+    ]
+
+
+# -- Fig. 5: routing TTFT distribution ------------------------------------------------------
+
+def bench_fig5_routing() -> List[Row]:
+    cfg = get_config("qwen3-14b")
+    trace = get_trace("chat_8qps", duration=90)
+    def run():
+        base = replay(cfg, trace, ReplayConfig(governor="defaultNV"))
+        split = replay(cfg, trace, ReplayConfig(governor="prefillsplit"))
+        return base, split
+    (base, split), us = timed(run)
+    return [
+        ("fig5_slo_pass_default", us, f"{base.ttft_pass:.3f}"),
+        ("fig5_slo_pass_routed", us, f"{split.ttft_pass:.3f}"),
+        ("fig5_p90_ttft_sm_default_s", us, f"{base.p90_ttft.get('SM', 0):.3f}"),
+        ("fig5_p90_ttft_sm_routed_s", us, f"{split.p90_ttft.get('SM', 0):.3f}"),
+    ]
+
+
+# -- Fig. 7/8: fit quality --------------------------------------------------------------------
+
+def bench_fig7_latency_fit() -> List[Row]:
+    plant = PlantModel(cfg=get_config("qwen3-14b"), hw=HW, n_chips=2,
+                       noise_sigma=0.01, seed=5)
+    def run():
+        m = profile_prefill_latency(plant)
+        L = np.linspace(64, 8192, 30)
+        t = [plant.prefill_latency(int(x), HW.f_max) for x in L]
+        return m, m.r2(L, t)
+    (m, r2), us = timed(run)
+    return [("fig7_quadratic_fit_r2", us, f"{r2:.4f}"),
+            ("fig7_coeff_a", us, f"{m.a:.3e}")]
+
+
+def bench_fig8_power_fit() -> List[Row]:
+    plant = PlantModel(cfg=get_config("qwen3-14b"), hw=HW, n_chips=2,
+                       noise_sigma=0.01, seed=6)
+    def run():
+        m = profile_power(plant)
+        f = HW.ladder()
+        meas = []
+        for x in f:
+            t = plant.prefill_latency(1024, x)
+            meas.append(plant.prefill_power(1024, x, t) / plant.n_chips)
+        pred = m.predict(f)
+        ss = 1 - np.sum((pred - meas) ** 2) / np.sum((meas - np.mean(meas)) ** 2)
+        return m, ss
+    (m, r2), us = timed(run)
+    return [("fig8_cubic_power_fit_r2", us, f"{r2:.4f}")]
+
+
+# -- Fig. 10: prefill TTFT/energy vs load -------------------------------------------------------
+
+def bench_fig10_prefill() -> List[Row]:
+    cfg = get_config("qwen3-14b")
+    rows = []
+    def run():
+        out = []
+        for qps in (2, 5, 8):
+            trace = get_trace(f"chat_{qps}qps", duration=60)
+            base = replay(cfg, trace, ReplayConfig(governor="defaultNV"))
+            green = replay(cfg, trace, ReplayConfig(governor="greenllm"))
+            out.append((qps, base, green))
+        return out
+    out, us = timed(run)
+    for qps, base, green in out:
+        saving = 1 - green.prefill_energy_j / base.prefill_energy_j
+        rows.append((f"fig10_prefill_saving_{qps}qps", us, f"{saving:.3f}"))
+        rows.append((f"fig10_ttft_pass_green_{qps}qps", us,
+                     f"{green.ttft_pass:.3f}"))
+    return rows
+
+
+# -- Fig. 11: decode TBT/energy vs TPS ------------------------------------------------------------
+
+def bench_fig11_decode() -> List[Row]:
+    rows = []
+    def run():
+        out = []
+        for tps in (200, 1000, 3000):
+            green = run_decode_bench("qwen3-14b",
+                                     make_decode_controller("qwen3-14b"),
+                                     lambda t, v=tps: v, 45.0)
+            base = run_decode_bench("qwen3-14b", MaxFreqController(HW),
+                                    lambda t, v=tps: v, 45.0)
+            out.append((tps, green, base))
+        return out
+    out, us = timed(run)
+    for tps, green, base in out:
+        saving = 1 - green["energy_j"] / base["energy_j"]
+        rows.append((f"fig11_decode_saving_{tps}tps", us, f"{saving:.3f}"))
+        rows.append((f"fig11_p90_tbt_green_{tps}tps_ms", us,
+                     f"{green['tbt_p90']*1e3:.1f}"))
+    return rows
+
+
+# -- Tables 3-4: trace grid -----------------------------------------------------------------------
+
+def _table_rows(prefix: str, model: str, traces, duration=90.0) -> List[Row]:
+    cfg = get_config(model)
+    rows = []
+    def run():
+        out = []
+        for tr in traces:
+            trace = get_trace(tr, duration=duration)
+            base = replay(cfg, trace, ReplayConfig(governor="defaultNV"))
+            split = replay(cfg, trace, ReplayConfig(governor="prefillsplit"))
+            green = replay(cfg, trace, ReplayConfig(governor="greenllm"))
+            out.append((tr, base, split, green))
+        return out
+    out, us = timed(run)
+    for tr, base, split, green in out:
+        dE = 1 - green.total_energy_j / base.total_energy_j
+        rel_dec = green.decode_energy_j / base.decode_energy_j
+        rel_pre = green.prefill_energy_j / base.prefill_energy_j
+        rows.append((f"{prefix}_{tr}_dE", us, f"{dE:.4f}"))
+        rows.append((f"{prefix}_{tr}_rel_decode", us, f"{rel_dec:.3f}"))
+        rows.append((f"{prefix}_{tr}_rel_prefill", us, f"{rel_pre:.3f}"))
+        rows.append((f"{prefix}_{tr}_ttft_pct", us, f"{green.ttft_pass:.3f}"))
+        rows.append((f"{prefix}_{tr}_tbt_pct", us, f"{green.tbt_pass:.3f}"))
+        rows.append((f"{prefix}_{tr}_split_dE", us,
+                     f"{1 - split.total_energy_j / base.total_energy_j:.4f}"))
+    return rows
+
+
+def bench_table3_qwen14b() -> List[Row]:
+    return _table_rows("table3", "qwen3-14b",
+                       ["chat_1qps", "chat_3qps", "chat_5qps", "chat_8qps",
+                        "chat_10qps", "azure_code5", "azure_code8",
+                        "azure_conv5", "azure_conv8"])
+
+
+def bench_table4_qwen30b_moe() -> List[Row]:
+    return _table_rows("table4", "qwen3-moe-30b-a3b",
+                       ["chat_1qps", "chat_3qps", "chat_5qps",
+                        "azure_code5", "azure_code8", "azure_conv5",
+                        "azure_conv8"])
+
+
+# -- Fig. 12: margin sensitivity ---------------------------------------------------------------------
+
+def bench_fig12_margin() -> List[Row]:
+    cfg = get_config("qwen3-14b")
+    trace = get_trace("chat_5qps", duration=60)
+    rows = []
+    def run():
+        out = {}
+        for m in (0.6, 0.95, 1.2, 2.0):
+            r = replay(cfg, trace, ReplayConfig(
+                governor="greenllm",
+                slo=SLOConfig(prefill_margin=m, decode_margin=0.95)))
+            out[("prefill", m)] = r
+        for m in (0.6, 0.95, 1.2, 2.0):
+            r = replay(cfg, trace, ReplayConfig(
+                governor="greenllm",
+                slo=SLOConfig(prefill_margin=0.95, decode_margin=m)))
+            out[("decode", m)] = r
+        return out
+    out, us = timed(run)
+    for (phase, m), r in out.items():
+        e = r.prefill_energy_j if phase == "prefill" else r.decode_energy_j
+        lat = (r.p90_ttft.get("SM", 0) if phase == "prefill" else r.p95_tbt)
+        rows.append((f"fig12_{phase}_margin{m}_energy_kj", us, f"{e/1e3:.1f}"))
+        rows.append((f"fig12_{phase}_margin{m}_lat_s", us, f"{lat:.3f}"))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_fig1_sinusoid,
+    bench_fig3_energy_curves,
+    bench_fig5_routing,
+    bench_fig7_latency_fit,
+    bench_fig8_power_fit,
+    bench_fig10_prefill,
+    bench_fig11_decode,
+    bench_table3_qwen14b,
+    bench_table4_qwen30b_moe,
+    bench_fig12_margin,
+]

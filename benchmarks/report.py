@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > results/roofline_report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import load_records, roofline_row
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Dry-run — mesh {mesh}\n")
+    print("| arch | shape | compile s | peak GiB/dev | HLO GFLOP/dev | "
+          "collective MiB/dev | coll ops (ag/ar/rs/a2a/cp) |")
+    print("|---|---|---:|---:|---:|---:|---|")
+    for r in recs:
+        if r["mesh"] != mesh or r.get("variant", {}).get("tag"):
+            continue
+        c = r["collectives"]
+        ops = "/".join(str(c[k]["count"]) for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+        ce = r.get("cost_extrapolated", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} "
+              f"| {fmt_bytes(r['memory']['peak_bytes_per_device'])} "
+              f"| {ce.get('flops', 0)/1e9:.0f} "
+              f"| {ce.get('coll_bytes', 0)/2**20:.0f} | {ops} |")
+
+
+def roofline_table(recs):
+    print("\n### Roofline — single pod (16x16, TPU v5e constants)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL/HLO flops | peak GiB |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for rec in recs:
+        if rec["mesh"] != "16x16" or rec.get("variant", {}).get("tag"):
+            continue
+        r = roofline_row(rec)
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} "
+              f"| {r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} "
+              f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+              f"| {r['peak_gib']:.2f} |")
+
+
+def main():
+    recs = sorted(load_records(), key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    dryrun_table(recs, "16x16")
+    dryrun_table(recs, "2x16x16")
+    roofline_table(recs)
+    # perf-variant records
+    tagged = [r for r in recs if r.get("variant", {}).get("tag")]
+    if tagged:
+        print("\n### Perf variants\n")
+        print("| tag | arch | shape | compute ms | memory ms | coll ms | peak GiB |")
+        print("|---|---|---|---:|---:|---:|---:|")
+        for rec in tagged:
+            r = roofline_row(rec)
+            print(f"| {rec['variant']['tag']} | {r['arch']} | {r['shape']} "
+                  f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+                  f"| {r['t_collective_s']*1e3:.2f} | {r['peak_gib']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--only substr] [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from .paper_figs import ALL_BENCHES
+    from .roofline import bench_roofline
+
+    benches = list(ALL_BENCHES)
+    if not args.skip_roofline:
+        benches.append(bench_roofline)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{bench.__name__},-1,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

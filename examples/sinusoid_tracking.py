@@ -1,0 +1,51 @@
+"""Reproduce paper Fig. 1: decode-clock tracking under a sinusoidal TPS load.
+
+Prints an ASCII strip chart of the GreenLLM clock vs the defaultNV governor.
+
+    PYTHONPATH=src python examples/sinusoid_tracking.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import HW, make_decode_controller, run_decode_bench
+from repro.core import MaxFreqController
+from repro.data import sinusoidal_decode_load
+
+
+def strip(vals, lo, hi, width=60):
+    x = np.clip((np.asarray(vals) - lo) / (hi - lo), 0, 1)
+    return ["#" * int(v * width) for v in x]
+
+
+def main():
+    _, tps_series = sinusoidal_decode_load()
+    grid = np.arange(0, 120, 0.5)
+    tps_fn = lambda t: float(np.interp(t % 120.0, grid, tps_series))
+
+    green = run_decode_bench("qwen3-14b", make_decode_controller("qwen3-14b"),
+                             tps_fn, 120.0)
+    base = run_decode_bench("qwen3-14b", MaxFreqController(HW), tps_fn, 120.0)
+
+    # sample at 2s intervals
+    gt = np.asarray([x[0] for x in green["freqs"]])
+    gf = np.asarray([x[1] for x in green["freqs"]])
+    gl = np.asarray([x[2] for x in green["freqs"]])
+    print("t(s)   TPS    GreenLLM clock (MHz)  [defaultNV stays at "
+          f"{HW.f_max:.0f} MHz]")
+    for t in np.arange(0, 120, 4.0):
+        i = int(np.searchsorted(gt, t))
+        if i >= len(gf):
+            break
+        bar = "#" * int((gf[i] - HW.f_min) / (HW.f_max - HW.f_min) * 50)
+        print(f"{t:5.0f} {gl[i]:6.0f}  {gf[i]:6.0f} |{bar}")
+    print(f"\np99 TBT: GreenLLM {green['tbt_p99']*1e3:.1f} ms  "
+          f"defaultNV {base['tbt_p99']*1e3:.1f} ms  (SLO 100 ms)")
+    print(f"decode energy saving: "
+          f"{100 * (1 - green['energy_j'] / base['energy_j']):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

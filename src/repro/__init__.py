@@ -1,0 +1,4 @@
+"""repro: production-grade JAX reproduction of GreenLLM (SLO-aware DVFS
+for energy-efficient LLM serving) with a multi-architecture model zoo,
+multi-pod distribution, and Pallas TPU kernels."""
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+from .hardware import HardwareProfile, A100_SXM4_40G, TPU_V5E, PROFILES
+from .types import Request, SLOConfig
+from .models import QuadraticLatencyModel, CubicPowerModel, TPSFreqTable
+from .router import LengthRouter, make_router, SINGLE_QUEUE
+from .prefill_optimizer import PrefillOptimizer, deadline_from_queue
+from .decode_controller import (DualLoopController, DecodeControllerConfig,
+                                MaxFreqController, FixedFreqController)
+from .telemetry import TPSMeter, TBTMeter, SlidingWindow
+from . import controller_jax

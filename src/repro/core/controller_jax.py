@@ -1,0 +1,153 @@
+"""Pure-JAX dual-loop decode controller (paper §3.3 as a lax.scan step).
+
+The Python ``DualLoopController`` is the serving-path implementation (it
+runs off the accelerator's critical path, as the paper prescribes).  This
+module provides the same control law as a *pure function over a state
+pytree*, so fleets of controllers can be simulated on-device with
+``jax.lax.scan`` / ``jax.vmap`` — used for batch what-if sweeps (thousands
+of SLO/margin scenarios per second) and property-tested against the Python
+controller for equivalence on identical telemetry.
+
+Simplifications vs the Python class (documented, test-covered):
+* telemetry arrives as per-fine-tick aggregates (tokens, p95 TBT estimate)
+  instead of raw event streams — the sim/serving layers produce exactly
+  these aggregates at 20 ms boundaries;
+* the 6 s band-adaptation loop is not included (stateful table mutation);
+  band selection + hysteresis + fine loop are bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hardware import HardwareProfile
+from .models import TPSFreqTable
+
+
+class CtlParams(NamedTuple):
+    tps_grid: jax.Array       # (n_buckets,)
+    freq_for: jax.Array       # (n_buckets,)
+    f_min: jax.Array
+    f_max: jax.Array
+    f_step: jax.Array
+    tbt_slo: jax.Array
+    up_margin: jax.Array
+    down_margin: jax.Array
+    hysteresis: jax.Array     # int32
+    ticks_per_coarse: jax.Array  # int32: fine ticks per coarse interval
+
+
+class CtlState(NamedTuple):
+    freq: jax.Array
+    band_lo: jax.Array
+    band_hi: jax.Array
+    bucket: jax.Array         # int32, -1 = unset
+    pending: jax.Array        # int32
+    pending_count: jax.Array  # int32
+    tick: jax.Array           # int32 fine-tick counter
+    window_tokens: jax.Array  # tokens accumulated this coarse interval
+
+
+def make_params(hw: HardwareProfile, table: TPSFreqTable,
+                tbt_slo: float = 0.100, hysteresis: int = 3,
+                fine_period: float = 0.020,
+                coarse_period: float = 0.200) -> CtlParams:
+    return CtlParams(
+        tps_grid=jnp.asarray(table.tps_grid, jnp.float32),
+        freq_for=jnp.asarray(table.freq_for, jnp.float32),
+        f_min=jnp.asarray(hw.f_min, jnp.float32),
+        f_max=jnp.asarray(hw.f_max, jnp.float32),
+        f_step=jnp.asarray(hw.f_step, jnp.float32),
+        tbt_slo=jnp.asarray(tbt_slo, jnp.float32),
+        up_margin=jnp.asarray(1.0, jnp.float32),
+        down_margin=jnp.asarray(0.65, jnp.float32),
+        hysteresis=jnp.asarray(hysteresis, jnp.int32),
+        ticks_per_coarse=jnp.asarray(round(coarse_period / fine_period),
+                                     jnp.int32),
+    )
+
+
+def init_state(p: CtlParams) -> CtlState:
+    return CtlState(
+        freq=p.f_max,
+        band_lo=p.f_max - p.f_step,
+        band_hi=p.f_max,
+        bucket=jnp.asarray(-1, jnp.int32),
+        pending=jnp.asarray(-1, jnp.int32),
+        pending_count=jnp.asarray(0, jnp.int32),
+        tick=jnp.asarray(0, jnp.int32),
+        window_tokens=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def _band(p: CtlParams, bucket):
+    f = p.freq_for[bucket]
+    return (jnp.maximum(f - p.f_step, p.f_min),
+            jnp.minimum(f + p.f_step, p.f_max))
+
+
+def controller_step(p: CtlParams, s: CtlState, tokens, p95_tbt
+                    ) -> Tuple[CtlState, jax.Array]:
+    """One 20 ms fine tick. tokens: emitted this tick; p95_tbt: current
+    window P95 (s; 0 = no samples). Returns (state, frequency)."""
+    window_tokens = s.window_tokens + tokens
+    tick = s.tick + 1
+    coarse_due = (tick % p.ticks_per_coarse) == 0
+
+    # ---- coarse loop ------------------------------------------------------
+    tps = window_tokens / (p.ticks_per_coarse.astype(jnp.float32) * 0.020)
+    bucket_now = jnp.clip(
+        jnp.searchsorted(p.tps_grid, tps, side="left"), 0,
+        p.tps_grid.shape[0] - 1).astype(jnp.int32)
+
+    def do_coarse(s):
+        first = s.bucket < 0
+        same = bucket_now == s.bucket
+        pend_same = bucket_now == s.pending
+        new_count = jnp.where(
+            same, 0, jnp.where(pend_same, s.pending_count + 1, 1))
+        commit = jnp.logical_and(~same, new_count >= p.hysteresis)
+        adopt = jnp.logical_or(first, commit)
+        bucket = jnp.where(adopt, bucket_now, s.bucket)
+        lo, hi = _band(p, bucket)
+        band_lo = jnp.where(adopt, lo, s.band_lo)
+        band_hi = jnp.where(adopt, hi, s.band_hi)
+        pending = jnp.where(jnp.logical_or(same, commit),
+                            jnp.asarray(-1, jnp.int32), bucket_now)
+        count = jnp.where(jnp.logical_or(same, commit), 0, new_count)
+        return s._replace(bucket=bucket, band_lo=band_lo, band_hi=band_hi,
+                          pending=pending, pending_count=count,
+                          window_tokens=jnp.asarray(0.0, jnp.float32))
+
+    s = jax.lax.cond(coarse_due, do_coarse,
+                     lambda s: s._replace(window_tokens=window_tokens),
+                     s._replace(window_tokens=window_tokens))
+
+    # ---- fine loop ---------------------------------------------------------
+    margin = p95_tbt / p.tbt_slo
+    has_data = p95_tbt > 0.0
+    up = jnp.logical_and(has_data, margin > p.up_margin)
+    down = jnp.logical_and(has_data, margin < p.down_margin)
+    freq = jnp.where(up, jnp.minimum(s.freq + p.f_step, s.band_hi),
+                     jnp.where(down, jnp.maximum(s.freq - p.f_step, s.band_lo),
+                               s.freq))
+    freq = jnp.clip(freq, s.band_lo, s.band_hi)
+    s = s._replace(freq=freq, tick=tick)
+    return s, freq
+
+
+def simulate(p: CtlParams, tokens_per_tick, p95_per_tick):
+    """Run the controller over a telemetry trace with lax.scan.
+    tokens_per_tick, p95_per_tick: (T,). Returns (final_state, freqs (T,))."""
+    def body(s, xs):
+        tok, tbt = xs
+        s, f = controller_step(p, s, tok, tbt)
+        return s, f
+
+    return jax.lax.scan(body, init_state(p),
+                        (jnp.asarray(tokens_per_tick, jnp.float32),
+                         jnp.asarray(p95_per_tick, jnp.float32)))

@@ -1,0 +1,164 @@
+"""Dual-loop decode DVFS controller (paper §3.3, Figure 9).
+
+Coarse loop (every 200 ms): sliding-window TPS -> offline TPS->frequency
+lookup -> frequency *band* (optimal clock + two neighbours), applied only
+after the TPS bucket is stable for 3 consecutive intervals (hysteresis).
+
+Fine loop (every 20 ms): P95 TBT margin vs the 100 ms SLO:
+    margin > 1.0   -> +15 MHz (up to band upper bound)
+    margin < 0.65  -> -15 MHz (down to band lower bound)
+    else           -> hold
+Each adjustment is rate-limited to one f_step per tick.
+
+Band adaptation (every 6 s): if >80 % of fine adjustments saturated a band
+bound, shift the lookup entry one step in that direction (§3.3.3).
+
+All decisions happen outside the GPU/TPU execution path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .hardware import HardwareProfile
+from .models import TPSFreqTable
+from .telemetry import TPSMeter, TBTMeter
+
+
+@dataclasses.dataclass
+class DecodeControllerConfig:
+    tbt_slo: float = 0.100          # s, P95 target
+    fine_period: float = 0.020      # s
+    coarse_period: float = 0.200    # s
+    adapt_period: float = 6.0       # s
+    up_margin: float = 1.0
+    down_margin: float = 0.65
+    hysteresis: int = 3             # consecutive coarse intervals
+    adapt_bias: float = 0.80        # fraction of saturated adjustments
+    tbt_window: float = 1.0         # s of TBT samples for the P95
+
+
+class DualLoopController:
+    def __init__(self, hw: HardwareProfile, table: TPSFreqTable,
+                 cfg: DecodeControllerConfig = DecodeControllerConfig()):
+        self.hw = hw
+        self.table = table
+        self.cfg = cfg
+        self.freq = hw.f_max
+        self.band = (hw.f_max - hw.f_step, hw.f_max, hw.f_max)
+        self.tps_meter = TPSMeter(cfg.coarse_period)
+        self.tbt_meter = TBTMeter(cfg.tbt_window)
+        self._bucket: Optional[int] = None
+        self._pending_bucket: Optional[int] = None
+        self._pending_count = 0
+        self._next_fine = 0.0
+        self._next_coarse = 0.0
+        self._next_adapt = cfg.adapt_period
+        self._adjust_events: List[int] = []   # +1 hit band top, -1 hit bottom, 0 inside
+        self.history: List[Tuple[float, float, float]] = []  # (t, freq, tps)
+
+    # -- telemetry ingestion ----------------------------------------------------
+    def record_tokens(self, t: float, n: int, tbt: float) -> None:
+        self.tps_meter.record_tokens(t, n)
+        if n > 0 and tbt > 0:
+            self.tbt_meter.record_tbt(t, tbt)
+
+    # -- control ticks -----------------------------------------------------------
+    def maybe_tick(self, now: float) -> float:
+        """Advance all loops up to ``now``; returns the current frequency."""
+        while self._next_fine <= now:
+            if self._next_coarse <= self._next_fine:
+                self._coarse_tick(self._next_coarse)
+                self._next_coarse += self.cfg.coarse_period
+            if self._next_adapt <= self._next_fine:
+                self._adapt_tick()
+                self._next_adapt += self.cfg.adapt_period
+            self._fine_tick(self._next_fine)
+            self._next_fine += self.cfg.fine_period
+        return self.freq
+
+    def _coarse_tick(self, t: float) -> None:
+        tps = self.tps_meter.tps(t)
+        bucket = self.table.bucket(tps)
+        if bucket == self._bucket:
+            self._pending_bucket = None
+            self._pending_count = 0
+        elif bucket == self._pending_bucket:
+            self._pending_count += 1
+            if self._pending_count >= self.cfg.hysteresis:
+                self._bucket = bucket
+                self.band = self.table.band(bucket, self.hw.f_min, self.hw.f_max)
+                self._pending_bucket = None
+                self._pending_count = 0
+        else:
+            self._pending_bucket = bucket
+            self._pending_count = 1
+        if self._bucket is None:  # first observation: adopt immediately
+            self._bucket = bucket
+            self.band = self.table.band(bucket, self.hw.f_min, self.hw.f_max)
+        self.history.append((t, self.freq, tps))
+
+    def _fine_tick(self, t: float) -> None:
+        p95 = self.tbt_meter.p95(t)
+        if p95 <= 0.0:
+            return
+        margin = p95 / self.cfg.tbt_slo
+        lo, mid, hi = self.band
+        step = self.hw.f_step
+        if margin > self.cfg.up_margin:
+            new = min(self.freq + step, hi)
+            self._adjust_events.append(+1 if new == hi else 0)
+        elif margin < self.cfg.down_margin:
+            new = max(self.freq - step, lo)
+            self._adjust_events.append(-1 if new == lo else 0)
+        else:
+            new = self.freq
+        # keep the set point inside the (possibly re-centred) band
+        self.freq = float(np.clip(new, lo, hi))
+
+    def _adapt_tick(self) -> None:
+        ev = self._adjust_events
+        self._adjust_events = []
+        if not ev or self._bucket is None:
+            return
+        n = len(ev)
+        up = sum(1 for e in ev if e > 0)
+        down = sum(1 for e in ev if e < 0)
+        if up / n > self.cfg.adapt_bias:
+            self.table.shift(self._bucket, +1, self.hw.f_min, self.hw.f_max)
+        elif down / n > self.cfg.adapt_bias:
+            self.table.shift(self._bucket, -1, self.hw.f_min, self.hw.f_max)
+        else:
+            return
+        self.band = self.table.band(self._bucket, self.hw.f_min, self.hw.f_max)
+
+
+class MaxFreqController:
+    """DefaultNV baseline: performance governor pinned near f_max (Fig. 1a)."""
+
+    def __init__(self, hw: HardwareProfile):
+        self.hw = hw
+        self.freq = hw.f_max
+        self.history: List[Tuple[float, float, float]] = []
+
+    def record_tokens(self, t, n, tbt):
+        pass
+
+    def maybe_tick(self, now: float) -> float:
+        return self.freq
+
+
+class FixedFreqController:
+    """Fixed-clock baseline (used for the Fig. 3c total-energy sweep)."""
+
+    def __init__(self, hw: HardwareProfile, freq: float):
+        self.hw = hw
+        self.freq = float(freq)
+
+    def record_tokens(self, t, n, tbt):
+        pass
+
+    def maybe_tick(self, now: float) -> float:
+        return self.freq

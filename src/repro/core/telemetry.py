@@ -1,0 +1,63 @@
+"""Sliding-window telemetry: TPS estimation and P95 TBT tracking."""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Tuple
+
+import numpy as np
+
+
+class SlidingWindow:
+    """Timestamped samples; query aggregates over a trailing horizon."""
+
+    def __init__(self, horizon: float):
+        self.horizon = horizon
+        self._buf: Deque[Tuple[float, float]] = deque()
+
+    def push(self, t: float, value: float) -> None:
+        self._buf.append((t, value))
+        self._evict(t)
+
+    def _evict(self, now: float) -> None:
+        h = self.horizon
+        while self._buf and self._buf[0][0] < now - h:
+            self._buf.popleft()
+
+    def values(self, now: float) -> np.ndarray:
+        self._evict(now)
+        return np.asarray([v for _, v in self._buf], np.float64)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class TPSMeter(SlidingWindow):
+    """Tokens-per-second over a trailing window (paper: 200 ms)."""
+
+    def __init__(self, horizon: float = 0.200):
+        super().__init__(horizon)
+
+    def record_tokens(self, t: float, n: int) -> None:
+        self.push(t, float(n))
+
+    def tps(self, now: float) -> float:
+        v = self.values(now)
+        return float(v.sum() / self.horizon) if len(v) else 0.0
+
+
+class TBTMeter(SlidingWindow):
+    """Per-token latencies; P95 over a trailing window."""
+
+    def __init__(self, horizon: float = 1.0):
+        super().__init__(horizon)
+
+    def record_tbt(self, t: float, tbt: float) -> None:
+        self.push(t, tbt)
+
+    def p95(self, now: float) -> float:
+        v = self.values(now)
+        return float(np.percentile(v, 95)) if len(v) else 0.0
+
+    def p99(self, now: float) -> float:
+        v = self.values(now)
+        return float(np.percentile(v, 99)) if len(v) else 0.0

@@ -1,0 +1,42 @@
+"""Shared serving-plane types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float            # s
+    prompt_len: int
+    output_len: int           # ground truth; unknown to the system a priori
+    # runtime bookkeeping
+    prefill_start: float = -1.0
+    first_token: float = -1.0  # TTFT timestamp
+    finish: float = -1.0
+    tokens_emitted: int = 0
+    cls: str = ""              # routing class ("SM" | "L")
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival if self.first_token >= 0 else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Paper §4.2: Azure-style targets."""
+    ttft_sm: float = 0.400     # s, short/medium prompts
+    ttft_long: float = 2.000   # s, long prompts
+    tbt_p95: float = 0.100     # s
+    # margin factors (§5.3): scale the deadlines without re-engineering
+    prefill_margin: float = 1.0
+    decode_margin: float = 1.0
+
+    def ttft_target(self, cls: str) -> float:
+        base = self.ttft_long if cls == "L" else self.ttft_sm
+        return base * self.prefill_margin
+
+    @property
+    def tbt_target(self) -> float:
+        return self.tbt_p95 * self.decode_margin

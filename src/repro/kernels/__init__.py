@@ -1,0 +1,4 @@
+from .ops import flash_attention_bshd, decode_attention_bshd
+from .rmsnorm import rmsnorm
+from .decode_attention_q8 import decode_attention_q8
+from . import ref

@@ -1,0 +1,126 @@
+"""Causal flash-attention forward kernel (Pallas TPU).
+
+Prefill attention is GreenLLM's compute hot spot (the O(n²) term that sets
+the prefill energy knee).  TPU-native design:
+
+* grid (B, Hq, n_q_blocks, n_k_blocks); the k-block dimension is innermost,
+  so the online-softmax accumulators live in VMEM scratch across k steps.
+* 128x128 q/k tiles (MXU-aligned), fp32 accumulation, bf16/f32 inputs.
+* GQA without materializing repeated KV: the k/v BlockSpec index maps
+  query head h -> kv head h // group.
+* causal + sliding-window masking by block-level position arithmetic;
+  fully-masked k blocks are skipped with pl.when (halves causal FLOPs).
+* optional logit soft-capping (gemma2).
+
+Validated against ref.reference_attention in interpret mode (tests/).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, softcap: float, num_k_blocks: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    # block-level skip: all keys after the last query position (causal), or
+    # all keys before the window of the first query position
+    def masked_out():
+        if causal and window:
+            return jnp.logical_or(k_start > q_start + block_q - 1,
+                                  k_start + block_k - 1 <= q_start - window)
+        if causal:
+            return k_start > q_start + block_q - 1
+        return jnp.asarray(False)
+
+    @pl.when(jnp.logical_not(masked_out()))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,Hq,Sq,hd); k,v (B,KH,Sk,hd); Hq % KH == 0. Returns (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert Hq % KH == 0
+    G = Hq // KH
+    scale = hd ** -0.5 if scale is None else scale
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, num_k_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

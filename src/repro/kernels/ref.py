@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q (B,Hq,Sq,hd); k,v (B,KH,Sk,hd) -> (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    if Hq != KH:
+        rep = Hq // KH
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_decode_attention(q, k, v, k_pos, q_pos, *, window=0, scale=None):
+    """q (B,Hq,hd); k,v (B,KH,Sk,hd); k_pos (B,Sk); q_pos (B,)."""
+    B, Hq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    if Hq != KH:
+        rep = Hq // KH
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window:
+        valid &= k_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(valid, -1)[:, None, None], p, 0.0)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

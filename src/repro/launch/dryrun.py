@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and record memory / cost /
+collective analysis for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k --multi-pod
+Outputs JSON to results/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_step
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum byte sizes of the result shapes on an HLO instruction line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    total = 0
+    # result may be a tuple: take everything before the op name paren
+    rhs = lhs[1]
+    opidx = min((rhs.find(op) for op in COLLECTIVE_OPS if op in rhs),
+                default=-1)
+    typestr = rhs[:opidx] if opidx > 0 else rhs.split("(")[0]
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    stats = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for op in COLLECTIVE_OPS:
+            # match op as instruction name, e.g. "all-gather(", "all-reduce-start("
+            if f" {op}(" in s or f" {op}-start(" in s or f" {op}-done(" in s:
+                if f" {op}-done(" in s:
+                    continue  # avoid double counting start/done pairs
+                stats[op]["count"] += 1
+                stats[op]["bytes"] += _result_bytes(s)
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _compile_combo(cfg, shape, mesh, num_microbatches=None, strategy="tp"):
+    from repro.launch.specs import build_train
+    if shape.kind == "train" and (num_microbatches is not None
+                                  or strategy != "tp"):
+        built = build_train(cfg, shape, mesh, num_microbatches=num_microbatches,
+                            strategy=strategy)
+    else:
+        built = build_step(cfg, shape, mesh)
+    jf = jax.jit(built["fn"], in_shardings=built["in_shardings"],
+                 out_shardings=built["out_shardings"],
+                 donate_argnums=built["donate_argnums"])
+    with mesh:
+        lowered = jf.lower(*built["args"])
+        compiled = lowered.compile()
+    return built, compiled
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "coll_bytes": coll["total_bytes"]}
+
+
+def extrapolate_costs(cfg, shape, mesh, strategy="tp"):
+    """XLA cost_analysis counts while-loop bodies once; recover full-depth
+    per-step costs by diffing compiles at depth = pattern and 2 x pattern
+    (with a single microbatch so the layer scan is the only loop that
+    matters), then extrapolating linearly in layer-group count.
+    """
+    p = len(cfg.block_pattern)
+    cfg1 = cfg.replace(num_layers=p, unroll_scans=True)
+    cfg2 = cfg.replace(num_layers=2 * p, unroll_scans=True)
+    _, c1 = _compile_combo(cfg1, shape, mesh, num_microbatches=1,
+                           strategy=strategy)
+    _, c2 = _compile_combo(cfg2, shape, mesh, num_microbatches=1,
+                           strategy=strategy)
+    a, b = _cost_of(c1), _cost_of(c2)
+    n_groups = cfg.num_layers / p
+    out = {}
+    for k in a:
+        per_group = b[k] - a[k]
+        base = a[k] - per_group
+        out[k] = base + per_group * n_groups
+        out[k + "_per_group"] = per_group
+        out[k + "_base"] = base
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            moe_impl: str = None, verbose: bool = True,
+            kv_quant: bool = False, strategy: str = "tp",
+            tag: str = "", extrapolate: bool = True,
+            moe_group: int = None):
+    cfg = get_config(arch)
+    if moe_impl and cfg.is_moe:
+        cfg = cfg.replace(moe_impl=moe_impl)
+    if moe_group and cfg.is_moe:
+        cfg = cfg.replace(moe_group=moe_group)
+    if kv_quant:
+        cfg = cfg.replace(kv_quant=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    built, compiled = _compile_combo(cfg, shape, mesh, strategy=strategy)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+    extrap = extrapolate_costs(cfg, shape, mesh, strategy=strategy) \
+        if extrapolate else {}
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    cost = compiled.cost_analysis()
+    print({k: cost.get(k) for k in ("flops", "bytes accessed", "transcendentals")})
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    n_chips = 1
+    for s in mesh.devices.shape:
+        n_chips *= s
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "meta": built["meta"],
+        "variant": {"kv_quant": kv_quant, "strategy": strategy,
+                    "moe_impl": moe_impl, "tag": tag},
+        "moe_impl": cfg.moe_impl if cfg.is_moe else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_per_device": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        # loop-trip-corrected per-device costs (see extrapolate_costs)
+        "cost_extrapolated": extrap,
+        "collectives": coll,
+        "model": {
+            "params_total": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+        },
+    }
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(outdir, f"{arch}__{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile {t_compile:.1f}s  "
+              f"peak/device {result['memory']['peak_bytes_per_device']/2**30:.2f} GiB  "
+              f"flops/device {result['cost']['flops_per_device']:.3e}  "
+              f"collective {coll['total_bytes']/2**20:.1f} MiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "scatter"])
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--tag", default="", help="suffix for perf-variant outputs")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the cost-extrapolation compiles (multi-pod: "
+                         "the roofline table is single-pod only)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    outdir = args.out or os.path.join(
+        "results", "dryrun", "2x16x16" if args.multi_pod else "16x16")
+    try:
+        run_one(args.arch, args.shape, args.multi_pod, outdir, args.moe_impl,
+                kv_quant=args.kv_quant, strategy=args.strategy, tag=args.tag,
+                extrapolate=not args.no_extrapolate, moe_group=args.moe_group)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Sharding rules for params, optimizer state, caches and step inputs.
+
+All proposed specs go through ``sanitize`` which drops any mesh axis that
+does not evenly divide the corresponding array dimension — this is what lets
+one rule set cover kv_heads ∈ {1,2,4,8,32}, 12-head models, 50280-row vocabs,
+etc. without per-arch special cases.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, ShardCtx, param_specs, stages_of
+from repro.models.config import FULL_ATTN, LOCAL_ATTN, SSM, RGLRU
+from repro.models import kvcache as KV
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape):
+            break
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(specs, shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, sh: sanitize_spec(s, sh.shape, mesh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes_for(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) that divides the global batch."""
+    axes: Tuple[str, ...] = ()
+    if "pod" in mesh.axis_names and "data" in mesh.axis_names:
+        if batch % (mesh.shape["pod"] * mesh.shape["data"]) == 0:
+            return ("pod", "data")
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return axes
+
+
+def make_shard_ctx(mesh: Mesh, batch: int) -> ShardCtx:
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes_for(mesh, batch),
+                    model_axis="model")
+
+
+# -- params / optimizer state -------------------------------------------------------
+
+def model_param_specs(cfg: ModelConfig, mesh: Mesh):
+    from repro.models import init_params
+    shd = ShardCtx(mesh=mesh)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, shd)
+    return sanitize_tree(specs, shapes, mesh), shapes
+
+
+def fsdp_param_specs(cfg: ModelConfig, mesh: Mesh):
+    """Fully-sharded params (ZeRO-3 / FSDP): every tensor sharded over the
+    flattened ('data','model') axes on its largest divisible dim.  GSPMD
+    inserts per-layer weight all-gathers; activations stay batch-sharded
+    only.  This trades the 4 activation all-reduces per layer of tensor
+    parallelism for one weight all-gather + grad reduce-scatter per layer —
+    a large win when tokens-per-device is high (see EXPERIMENTS.md §Perf).
+    """
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    full = 1
+    for a in ("data", "model"):
+        full *= mesh.shape.get(a, 1)
+
+    def spec_for(sh) -> P:
+        dims = list(sh.shape)
+        # largest dim first; per dim, the largest divisible axis set — so a
+        # 151936-row embedding prefers vocab/16 over d_model/256 (keeps the
+        # unembed contraction local instead of all-reducing logits)
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            for axes, size in ((("data", "model"), full),
+                               (("model",), mesh.shape.get("model", 1)),
+                               (("data",), mesh.shape.get("data", 1))):
+                if size > 1 and dims[i] % size == 0 and dims[i] >= size:
+                    entries = [None] * len(dims)
+                    entries[i] = axes if len(axes) > 1 else axes[0]
+                    return P(*entries)
+        return P(*([None] * len(dims)))
+
+    specs = jax.tree.map(spec_for, shapes)
+    return specs, shapes
+
+
+def zero1_specs(specs, shapes, mesh: Mesh):
+    """Additionally shard optimizer-state (and grad-accum) over 'data'."""
+    dsize = mesh.shape.get("data", 1)
+
+    def add_data(spec: P, shape) -> P:
+        entries = list(spec) + [None] * (len(shape.shape) - len(spec))
+        if dsize <= 1:
+            return P(*entries)
+        for i, e in enumerate(entries):
+            if e is None and shape.shape[i] % dsize == 0 and shape.shape[i] >= dsize:
+                entries[i] = "data"
+                break
+        return P(*entries)
+
+    return jax.tree.map(add_data, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(pspecs, shapes, mesh: Mesh):
+    z = zero1_specs(pspecs, shapes, mesh)
+    return {"m": z, "v": z, "step": P()}
+
+
+# -- caches --------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                long_context: bool = False, dtype=jnp.bfloat16):
+    """(specs, shapes) pytrees parallel to transformer.init_cache output."""
+    b_ax = batch_axes_for(mesh, batch)
+    b = b_ax if b_ax else None
+    batch_sharded = bool(b_ax)
+    msize = mesh.shape.get("model", 1)
+
+    specs: List[Any] = []
+    shapes: List[Any] = []
+    for kinds, n_rep in stages_of(cfg):
+        group_specs, group_shapes = [], []
+        for kind in kinds:
+            cs = jax.eval_shape(
+                lambda kk=kind: KV.init_block_cache(cfg, kk, batch, max_len,
+                                                    long_context, dtype))
+            if kind in (FULL_ATTN, LOCAL_ATTN):
+                kv_ok = cfg.num_kv_heads % msize == 0 and msize > 1
+                if batch_sharded:
+                    seq_ax = None if kv_ok else "model"
+                    kv_ax = "model" if kv_ok else None
+                else:
+                    seq_ax = ("data", "model")
+                    kv_ax = None
+                sp = {"k": P(b, seq_ax, kv_ax, None),
+                      "v": P(b, seq_ax, kv_ax, None)}
+                if cfg.kv_quant:
+                    sp["k_s"] = P(b, seq_ax, kv_ax, None)
+                    sp["v_s"] = P(b, seq_ax, kv_ax, None)
+            elif kind == SSM:
+                sp = {"state": P(b, "model", None, None),
+                      "conv": P(b, None, "model")}
+            elif kind == RGLRU:
+                sp = {"h": P(b, "model"),
+                      "conv": P(b, None, "model")}
+            else:
+                raise ValueError(kind)
+            # add leading stack dim
+            sp = jax.tree.map(lambda s: P(*((None,) + tuple(s))), sp,
+                              is_leaf=lambda x: isinstance(x, P))
+            stacked = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((n_rep,) + x.shape, x.dtype), cs)
+            group_specs.append(sp)
+            group_shapes.append(stacked)
+        specs.append(tuple(group_specs))
+        shapes.append(tuple(group_shapes))
+    specs = jax.tree.map(lambda s, sh: sanitize_spec(s, sh.shape, mesh),
+                         specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    return specs, shapes
+
+
+# -- step inputs ------------------------------------------------------------------------
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,200 @@
+"""Assigned input shapes and step-function builders for the dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation); the
+``build_*`` functions return (fn, args, in_shardings, out_shardings,
+donate_argnums) ready for ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import (ModelConfig, ShardCtx, loss_fn, prefill,
+                          decode_step, init_params)
+from repro.training import AdamWConfig, make_train_step
+from . import shardings as SH
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   InputShape("long_500k", "decode", 524_288, 1),
+}
+
+# archs whose long_500k decode uses the beyond-paper ring-buffer window
+# (pure full-attention archs; see DESIGN.md §long_500k policy)
+def needs_ring_override(cfg: ModelConfig) -> bool:
+    from repro.models.config import FULL_ATTN, LOCAL_ATTN
+    kinds = set(cfg.block_pattern)
+    return kinds == {FULL_ATTN}
+
+
+def token_seq_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Token count after reserving room for stubbed prefix embeddings."""
+    if shape.kind in ("train", "prefill") and cfg.num_prefix_embeds:
+        return shape.seq_len - cfg.num_prefix_embeds
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+    B = shape.global_batch
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        S = token_seq_len(cfg, shape)
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.num_prefix_embeds:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return out
+
+
+def batch_input_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    b_ax = SH.batch_axes_for(mesh, shape.global_batch)
+    b = b_ax if b_ax else None
+    sp: Dict[str, P] = {"tokens": P(b, None)}
+    if shape.kind in ("train", "prefill") and cfg.num_prefix_embeds:
+        sp["prefix_embeds"] = P(b, None, None)
+    return sp
+
+
+# -- builders -----------------------------------------------------------------------
+
+def microbatches_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                     n_batch_shards: Optional[int] = None) -> int:
+    """Per-device batch is split so layer-boundary activations stay bounded
+    (~4k tokens per device per microbatch)."""
+    per_dev = shape.global_batch // max(
+        n_batch_shards if n_batch_shards is not None else
+        SH._axis_size(mesh, SH.batch_axes_for(mesh, shape.global_batch)), 1)
+    tokens_per_dev = per_dev * shape.seq_len
+    mb = max(1, min(per_dev, round(tokens_per_dev / 4096)))
+    while per_dev % mb:
+        mb -= 1
+    return mb
+
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                num_microbatches: Optional[int] = None,
+                strategy: str = "tp"):
+    if strategy == "fsdp":
+        # fully-sharded data parallel: batch over every mesh axis, params
+        # gathered per layer (§Perf hillclimb for collective-bound train)
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        n_all = 1
+        for a in all_axes:
+            n_all *= mesh.shape[a]
+        b_ax = all_axes if shape.global_batch % n_all == 0 else \
+            SH.batch_axes_for(mesh, shape.global_batch)
+        shd = ShardCtx(mesh=mesh, batch_axes=b_ax, model_axis=None)
+        pspecs, pshapes = SH.fsdp_param_specs(cfg, mesh)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        gspecs = pspecs
+        n_shards = 1
+        for a in b_ax:
+            n_shards *= mesh.shape[a]
+    else:
+        shd = SH.make_shard_ctx(mesh, shape.global_batch)
+        pspecs, pshapes = SH.model_param_specs(cfg, mesh)
+        ospecs = SH.opt_state_specs(pspecs, pshapes, mesh)
+        gspecs = ospecs["m"]
+        n_shards = None
+    mb = num_microbatches or microbatches_for(cfg, shape, mesh, n_shards)
+    step = make_train_step(cfg, AdamWConfig(), shd, mb, grad_specs=gspecs)
+
+    opt_shapes = {
+        "m": jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), pshapes),
+        "v": jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), pshapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_shapes = {"params": pshapes, "opt": opt_shapes}
+    state_specs = {"params": pspecs, "opt": ospecs}
+    batch = input_specs(cfg, shape)
+    batch_specs = batch_input_shardings(cfg, shape, mesh)
+    if strategy == "fsdp":
+        b = shd.batch_axes if shd.batch_axes else None
+        batch_specs = {k: P(*((b,) + (None,) * (v.ndim - 1)))
+                       for k, v in batch.items()}
+
+    in_shardings = (SH.named(mesh, state_specs), SH.named(mesh, batch_specs))
+    out_shardings = (SH.named(mesh, state_specs), None)
+    return dict(fn=step, args=(state_shapes, batch),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(0,), meta={"microbatches": mb})
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    shd = SH.make_shard_ctx(mesh, shape.global_batch)
+    pspecs, pshapes = SH.model_param_specs(cfg, mesh)
+    cspecs, cshapes = SH.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    batch = input_specs(cfg, shape)
+    batch_specs = batch_input_shardings(cfg, shape, mesh)
+    b_ax = SH.batch_axes_for(mesh, shape.global_batch)
+
+    def prefill_step(params, caches, inputs):
+        logits, caches, n = prefill(params, cfg, inputs["tokens"], caches,
+                                    inputs.get("prefix_embeds"), shd)
+        return logits, caches
+
+    logits_spec = SH.sanitize_spec(P(b_ax if b_ax else None, "model"),
+                                   (shape.global_batch, cfg.vocab_size), mesh)
+    in_shardings = (SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                    SH.named(mesh, batch_specs))
+    out_shardings = (SH.named(mesh, logits_spec), SH.named(mesh, cspecs))
+    return dict(fn=prefill_step, args=(pshapes, cshapes, batch),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(1,), meta={})
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    long_ctx = shape.name == "long_500k" and needs_ring_override(cfg)
+    msize = mesh.shape.get("model", 1)
+    kv_seq_sharded = cfg.has_attention and cfg.num_kv_heads % msize != 0
+    shd = dataclasses.replace(SH.make_shard_ctx(mesh, shape.global_batch),
+                              kv_seq_sharded=kv_seq_sharded)
+    pspecs, pshapes = SH.model_param_specs(cfg, mesh)
+    cspecs, cshapes = SH.cache_specs(cfg, mesh, shape.global_batch,
+                                     shape.seq_len, long_context=long_ctx)
+    batch = input_specs(cfg, shape)
+    batch_specs = batch_input_shardings(cfg, shape, mesh)
+    b_ax = SH.batch_axes_for(mesh, shape.global_batch)
+    pos = shape.seq_len - 1
+
+    def serve_step(params, caches, inputs):
+        logits, caches = decode_step(params, cfg, inputs["tokens"], caches,
+                                     jnp.asarray(pos, jnp.int32), shd)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, caches
+
+    tok_spec = P(b_ax if b_ax else None, None)
+    in_shardings = (SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                    SH.named(mesh, batch_specs))
+    out_shardings = (SH.named(mesh, tok_spec), SH.named(mesh, cspecs))
+    return dict(fn=serve_step, args=(pshapes, cshapes, batch),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(1,), meta={"long_context": long_ctx})
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

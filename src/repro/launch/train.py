@@ -1,0 +1,57 @@
+"""Training launcher.
+
+Two modes:
+  * ``--dry-run``: lower + compile the full config's train step against the
+    production mesh (same path as dryrun.py) — for cluster preflight.
+  * default: run real steps of the *smoke* variant on local devices — for
+    CI / development.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --dry-run
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch.dryrun import run_one
+        run_one(args.arch, "train_4k", args.multi_pod,
+                outdir="results/dryrun/manual", strategy=args.strategy)
+        return
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import NOSHARD
+    from repro.training import AdamWConfig, init_train_state, make_train_step
+
+    cfg = get_config(args.arch).smoke()
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(warmup_steps=5, total_steps=args.steps), NOSHARD, 1))
+    key = jax.random.PRNGKey(1)
+    for i in range(args.steps):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(
+            k, (args.batch, args.seq), 0, cfg.vocab_size)}
+        if cfg.num_prefix_embeds:
+            batch["prefix_embeds"] = jax.random.normal(
+                k, (args.batch, cfg.num_prefix_embeds, cfg.d_model))
+        state, m = step(state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

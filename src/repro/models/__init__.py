@@ -1,0 +1,11 @@
+from .config import ModelConfig, FULL_ATTN, LOCAL_ATTN, SSM, RGLRU
+from .transformer import (
+    ShardCtx, NOSHARD, init_params, param_specs, init_cache,
+    forward_train, loss_fn, prefill, decode_step, stages_of,
+)
+
+__all__ = [
+    "ModelConfig", "FULL_ATTN", "LOCAL_ATTN", "SSM", "RGLRU",
+    "ShardCtx", "NOSHARD", "init_params", "param_specs", "init_cache",
+    "forward_train", "loss_fn", "prefill", "decode_step", "stages_of",
+]

@@ -1,0 +1,157 @@
+"""Decode-time state: full and ring-buffer KV caches, SSM and RG-LRU states.
+
+Caches are plain pytrees so they flow through jit / scan / shard_map.  All
+buffers have static shapes; the current stream position is passed separately
+as a traced scalar.  Ring buffers store entries at ``slot = position % W`` and
+reconstruct absolute positions arithmetically for masking + RoPE.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, FULL_ATTN, LOCAL_ATTN, SSM, RGLRU
+
+
+def attn_buffer_len(cfg: ModelConfig, kind: str, max_len: int, long_context: bool) -> int:
+    if kind == LOCAL_ATTN and cfg.window:
+        return min(cfg.window, max_len)
+    if long_context and kind == FULL_ATTN and not cfg.is_subquadratic:
+        # beyond-paper: windowed long-context decode for full-attention archs
+        return min(cfg.long_context_window, max_len)
+    return max_len
+
+
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    long_context: bool = False, dtype=jnp.bfloat16) -> Dict:
+    S = attn_buffer_len(cfg, kind, max_len, long_context)
+    shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        sshape = (batch, S, cfg.num_kv_heads, 1)
+        return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.float32),
+                "v_s": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.ssm_inner + 2 * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, nh, hd, st), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     long_context: bool = False, dtype=jnp.bfloat16) -> Dict:
+    if kind in (FULL_ATTN, LOCAL_ATTN):
+        return init_attn_cache(cfg, kind, batch, max_len, long_context, dtype)
+    if kind == SSM:
+        return init_ssm_cache(cfg, batch, dtype)
+    if kind == RGLRU:
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def ring_slot_positions(buf_len: int, pos):
+    """Absolute position stored in each slot of a ring buffer of length
+    ``buf_len`` when the *next* token to be written has position ``pos``
+    (i.e. entries written so far are positions 0..pos-1, the last ``buf_len``
+    of them resident).  Unfilled slots get negative values (masked).
+    Returns int32 (buf_len,).
+    """
+    j = jnp.arange(buf_len, dtype=jnp.int32)
+    last = pos - 1
+    p = last - ((last - j) % buf_len)
+    return jnp.where(p < 0, -1, p).astype(jnp.int32)
+
+
+def quantize_kv(x):
+    """(..., hd) -> int8 values + f32 scale on the trailing dim."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def cache_write_decode(cache: Dict, k_new, v_new, pos):
+    """Write one token (B,1,KH,hd) at position ``pos`` (traced scalar)."""
+    buf_len = cache["k"].shape[1]
+    slot = jnp.mod(pos, buf_len)
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0, 0)),
+            "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0, 0)),
+        }
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    return {"k": k, "v": v}
+
+
+def cache_kv_arrays(cache: Dict, dtype=jnp.bfloat16):
+    """Return dequantized (k, v) ready for attention."""
+    if "k_s" in cache:
+        return (dequantize_kv(cache["k"], cache["k_s"], dtype),
+                dequantize_kv(cache["v"], cache["v_s"], dtype))
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+def cache_write_prefill(cache: Dict, k_seq, v_seq):
+    """Write a prefill sequence (B,S,KH,hd) into a fresh buffer.
+
+    If S > buf_len (windowed cache shorter than the prompt), only the last
+    buf_len entries are retained, placed at their ring slots.
+    """
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k_seq)
+        vq, vs = quantize_kv(v_seq)
+        out = cache_write_prefill({"k": cache["k"], "v": cache["v"]}, kq, vq)
+        scales = cache_write_prefill({"k": cache["k_s"], "v": cache["v_s"]}, ks, vs)
+        return {"k": out["k"], "v": out["v"],
+                "k_s": scales["k"], "v_s": scales["v"]}
+    B, S = k_seq.shape[:2]
+    buf_len = cache["k"].shape[1]
+    if S <= buf_len:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_seq.astype(cache["k"].dtype),
+                                         (0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_seq.astype(cache["v"].dtype),
+                                         (0, 0, 0, 0))
+        return {"k": k, "v": v}
+    tail_pos = jnp.arange(S - buf_len, S)
+    slots = jnp.mod(tail_pos, buf_len)
+    k = cache["k"].at[:, slots].set(k_seq[:, S - buf_len:].astype(cache["k"].dtype))
+    v = cache["v"].at[:, slots].set(v_seq[:, S - buf_len:].astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def cache_key_positions(cache: Dict, pos, batch: int):
+    """Positions (B, buf_len) of cached keys when decoding token ``pos``.
+
+    Handles both the full cache (buf_len >= pos: slot == position) and ring
+    buffers uniformly — for a full buffer the ring arithmetic reduces to the
+    identity on filled slots.
+    """
+    buf_len = cache["k"].shape[1]
+    p = ring_slot_positions(buf_len, pos + 1)   # token pos already written
+    return jnp.broadcast_to(p[None, :], (batch, buf_len))

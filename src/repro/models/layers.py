@@ -1,0 +1,142 @@
+"""Shared layer primitives: norms, activations, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def init_norm(cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rms":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+# -- activations -----------------------------------------------------------------
+
+def activation(cfg: ModelConfig, x):
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(cfg.act)
+
+
+# -- RoPE -------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig):
+    rot = int(cfg.head_dim * cfg.rotary_frac)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot
+
+
+def apply_rope(x, positions, inv_freq, rot):
+    """x: (B,S,H,hd); positions: (B,S) int32. Rotates first `rot` dims (neox)."""
+    dt = x.dtype
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, xp.astype(jnp.float32)], axis=-1).astype(dt)
+
+
+def sincos_embedding(positions, dim):
+    """Sinusoidal absolute positional embedding (musicgen). positions (B,S)."""
+    half = dim // 2
+    freq = np.exp(-math.log(10_000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * jnp.asarray(freq)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- MLP ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k3, (ff, d), dtype=dtype)}
+    if cfg.glu:
+        p["gate"] = dense_init(k1, (d, ff), dtype=dtype)
+        p["up"] = dense_init(k2, (d, ff), dtype=dtype)
+    else:
+        p["up"] = dense_init(k2, (d, ff), dtype=dtype)
+        p["up_b"] = jnp.zeros((ff,), dtype)
+        p["down_b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if cfg.glu:
+        g = activation(cfg, x @ p["gate"])
+        return (g * (x @ p["up"])) @ p["down"]
+    h = activation(cfg, x @ p["up"] + p["up_b"])
+    return h @ p["down"] + p["down_b"]
+
+
+# -- embedding / unembedding ---------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.vocab_size, cfg.d_model), in_axis=-1, dtype=dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype=dtype)
+    if cfg.num_prefix_embeds:
+        p["prefix_proj"] = dense_init(k2, (cfg.d_model, cfg.d_model), dtype=dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].T
+    else:
+        logits = x @ p["lm_head"]
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    return logits

@@ -1,0 +1,155 @@
+"""Token-choice top-k Mixture-of-Experts FFN.
+
+Two dispatch implementations:
+
+* ``einsum`` — GSPMD-classic (B,S,E,C) one-hot dispatch/combine einsums.
+  Robustly shardable (experts over the ``model`` mesh axis -> all-to-all is
+  inserted by the partitioner) but pays O(B·S·E·C·d) dispatch FLOPs.  Used as
+  the baseline; the §Perf hillclimb for the MoE pair replaces it.
+* ``scatter`` — gather/scatter slot assignment: tokens are placed into
+  (E*C, d) expert buffers with scatter, FFN runs as a (E,C,d)x(E,d,ff)
+  batched matmul, results are gathered back.  Near-zero dispatch FLOPs.
+
+Both produce identical outputs (tests assert allclose) including the same
+capacity-drop behaviour; drops follow token order within each expert, as in
+Switch/GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, activation
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d, E), dtype=jnp.float32),
+        "down": dense_init(k4, (E, ff, d), in_axis=-2, dtype=dtype),
+    }
+    if cfg.glu:
+        p["gate"] = dense_init(k2, (E, d, ff), in_axis=-2, dtype=dtype)
+        p["up"] = dense_init(k3, (E, d, ff), in_axis=-2, dtype=dtype)
+    else:
+        p["up"] = dense_init(k3, (E, d, ff), in_axis=-2, dtype=dtype)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group * cfg.experts_per_token
+            / cfg.num_experts)
+    return max(c, cfg.experts_per_token)
+
+
+def _routing(cfg: ModelConfig, p, x):
+    """x (B,S,d) -> (weights (B,S,k), experts (B,S,k) int32, aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load-balancing aux loss
+    E = cfg.num_experts
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * E
+    return w, idx, aux
+
+
+def _slots(cfg: ModelConfig, idx, C: int):
+    """Position-in-expert for every (token, choice); >=C means dropped.
+
+    idx: (B,S,k) int32.  Slot order = token order within the (B,) group.
+    Returns (B,S,k) int32 slots.
+    """
+    B, S, k = idx.shape
+    E = cfg.num_experts
+    flat = idx.reshape(B, S * k)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)        # (B,S*k,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                     # rank within expert
+    slot = jnp.take_along_axis(pos, flat[..., None], axis=-1)[..., 0]
+    return slot.reshape(B, S, k)
+
+
+def _cs(shd, x, *dims):
+    return shd.cs(x, *dims) if shd is not None else x
+
+
+def _ffn(cfg: ModelConfig, p, h, shd=None):
+    """h (..., E, C, d) -> (..., E, C, d); batched per-expert FFN."""
+    if cfg.glu:
+        g = activation(cfg, jnp.einsum("...ecd,edf->...ecf", h, p["gate"]))
+        u = jnp.einsum("...ecd,edf->...ecf", h, p["up"])
+        hh = g * u
+    else:
+        hh = activation(cfg, jnp.einsum("...ecd,edf->...ecf", h, p["up"]))
+    hh = _cs(shd, hh, *(None,) * (hh.ndim - 3), "m", None, None) \
+        if cfg.num_experts and hh.ndim >= 3 else hh
+    return jnp.einsum("...ecf,efd->...ecd", hh, p["down"])
+
+
+def moe_einsum(cfg: ModelConfig, p, x, shd=None):
+    """GSPMD dispatch-einsum MoE. x (B,S,d) -> (B,S,d), aux."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+    w, idx, aux = _routing(cfg, p, x)
+    slot = _slots(cfg, idx, C)
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+    # dispatch mask (B,S,E,C) accumulated one routing choice at a time so the
+    # (B,S,k,E,C) intermediate never materializes (k-fold peak-memory saving)
+    disp = jnp.zeros((B, S, E, C), x.dtype)
+    comb = jnp.zeros((B, S, E, C), x.dtype)
+    for i in range(k):
+        oh = (jax.nn.one_hot(idx[..., i], E, dtype=x.dtype)
+              * keep[..., i, None].astype(x.dtype))          # (B,S,E)
+        sl = jax.nn.one_hot(slot[..., i], C, dtype=x.dtype)  # (B,S,C)
+        term = oh[..., :, None] * sl[..., None, :]
+        disp = _cs(shd, disp + term, "b", None, "m", None)
+        comb = _cs(shd, comb + term * w[..., i, None, None].astype(x.dtype),
+                   "b", None, "m", None)
+    h = jnp.einsum("bsec,bsd->becd", disp, x)
+    h = _cs(shd, h, "b", "m", None, None)
+    y = _ffn(cfg, p, h, shd)                                 # (B,E,C,d)
+    y = _cs(shd, y, "b", "m", None, None)
+    out = jnp.einsum("bsec,becd->bsd", comb, y)
+    return out, aux
+
+
+def moe_scatter(cfg: ModelConfig, p, x, shd=None):
+    """Scatter/gather MoE with identical semantics to moe_einsum."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+    w, idx, aux = _routing(cfg, p, x)
+    slot = _slots(cfg, idx, C)
+    keep = slot < C
+    dest = idx * C + jnp.where(keep, slot, 0)                # (B,S,k) in [0,E*C)
+    dest = jnp.where(keep, dest, E * C)                      # drop -> overflow row
+    xk = jnp.broadcast_to(x[:, :, None, :], (B, S, k, d)).reshape(B, S * k, d)
+    destf = dest.reshape(B, S * k)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], destf].set(xk.astype(x.dtype))
+    h = buf[:, : E * C].reshape(B, E, C, d)
+    h = _cs(shd, h, "b", "m", None, None)
+    y = _ffn(cfg, p, h, shd).reshape(B, E * C, d)
+    y = jnp.concatenate([y, jnp.zeros((B, 1, d), y.dtype)], axis=1)
+    out_k = y[jnp.arange(B)[:, None], destf].reshape(B, S, k, d)
+    out = jnp.sum(out_k * w[..., None].astype(x.dtype), axis=2)
+    return out, aux
+
+
+def apply_moe(cfg: ModelConfig, p, x, shd=None):
+    """Routing groups (cfg.moe_group tokens) bound expert capacity C — and
+    the dispatch tensor — independently of sequence length (MaxText-style)."""
+    B, S, d = x.shape
+    fn = moe_scatter if cfg.moe_impl == "scatter" else moe_einsum
+    if S > cfg.moe_group and S % cfg.moe_group == 0:
+        g = S // cfg.moe_group
+        xg = x.reshape(B * g, cfg.moe_group, d)
+        out, aux = fn(cfg, p, xg, shd)
+        return out.reshape(B, S, d), aux
+    return fn(cfg, p, x, shd)

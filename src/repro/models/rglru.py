@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Block layout follows Griffin's recurrent block: two input branches
+(w = lru_width each); branch A goes conv -> RG-LRU, branch B is a GeLU gate;
+the product is projected back to d_model.  Gates use per-channel (diagonal)
+parameterization (documented simplification of Griffin's block-diagonal
+gates — same recurrence, fewer parameters).
+
+Training uses jax.lax.associative_scan over the sequence; decode is a single
+recurrent step carrying (h, conv window).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+_C = 8.0  # Griffin's fixed scaling constant in a_t = exp(-c * softplus(Λ) * r_t)
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # Λ init so that a^c = exp(-c softplus(Λ)) is in ~[0.9, 0.999]
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w))) ) / 1.0
+    return {
+        "in_x": dense_init(k1, (d, w), dtype=dtype),
+        "in_gate": dense_init(k2, (d, w), dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "rg_w": jnp.zeros((w,), jnp.float32),   # recurrence gate (diagonal)
+        "ig_w": jnp.zeros((w,), jnp.float32),   # input gate (diagonal)
+        "out": dense_init(k4, (w, d), dtype=dtype),
+    }
+
+
+def _conv(x, wght, b):
+    cw = wght.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i: i + x.shape[1]] * wght[i]
+    return out + b
+
+
+def _gates(p, u):
+    """u (...,w) f32 -> (a, gated_input) of the RG-LRU recurrence."""
+    r = jax.nn.sigmoid(u * p["rg_w"])           # recurrence gate
+    i = jax.nn.sigmoid(u * p["ig_w"])           # input gate
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * u)
+
+
+def rglru_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
+    """x (B,S,d) -> (B,S,d) [, cache]."""
+    B_, S, _ = x.shape
+    u_pre = x @ p["in_x"]                                   # (B,S,w)
+    gate = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    u = _conv(u_pre, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hh.astype(x.dtype) * gate) @ p["out"]
+    if not return_state:
+        return y
+    cw = cfg.conv_width
+    conv_state = jnp.pad(u_pre, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):] \
+        if cw > 1 else jnp.zeros((B_, 0, u_pre.shape[-1]), u_pre.dtype)
+    return y, {"h": hh[:, -1], "conv": conv_state}
+
+
+def rglru_decode_step(cfg: ModelConfig, p, x, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x (B,1,d) -> (B,1,d)."""
+    u_pre = x[:, 0] @ p["in_x"]                             # (B,w)
+    gate = jax.nn.gelu(x[:, 0] @ p["in_gate"], approximate=True)
+    window = jnp.concatenate([cache["conv"].astype(u_pre.dtype), u_pre[:, None]], axis=1)
+    u = (jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]).astype(jnp.float32)
+    a, b = _gates(p, u)
+    h = a * cache["h"] + b
+    y = ((h.astype(x.dtype) * gate) @ p["out"])[:, None]
+    return y, {"h": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,150 @@
+"""Mamba2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill use the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk linear recurrence); decode is the O(1) recurrent update.  Shapes
+follow the minimal-mamba2 formulation with a single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, st, nh = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * st
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * st + nh                      # z, xBC, dt
+    return {
+        "in_proj": dense_init(k1, (d, proj_out), dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), math.log(math.expm1(0.01)), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(k4, (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (cw,C) -> (B,S,C)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i: i + x.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """x (..., T) -> (..., T, T) with out[i,j] = sum_{k=j+1..i} x[k] (j<=i),
+    -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _split(cfg: ModelConfig, zxbcdt):
+    di, st, nh = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * st]
+    dt = zxbcdt[..., 2 * di + 2 * st:]
+    return z, xBC, dt
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
+    """Full-sequence SSD. x (B,S,d) -> (B,S,d) [, final caches]."""
+    B_, S, _ = x.shape
+    di, st, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cs = min(cfg.ssm_chunk, S)
+    while S % cs:
+        cs -= 1
+    nc = S // cs
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split(cfg, zxbcdt)
+    xBC_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC_conv[..., :di].reshape(B_, S, nh, hd).astype(jnp.float32)
+    Bm = xBC_conv[..., di: di + st].astype(jnp.float32)          # (B,S,n)
+    Cm = xBC_conv[..., di + st:].astype(jnp.float32)             # (B,S,n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+    A = -jnp.exp(p["A_log"])                                     # (h,)
+
+    # chunk
+    xc = xs.reshape(B_, nc, cs, nh, hd)
+    Bc = Bm.reshape(B_, nc, cs, st)
+    Cc = Cm.reshape(B_, nc, cs, st)
+    dtc = dt.reshape(B_, nc, cs, nh)
+    dA = dtc * A                                                 # (B,nc,cs,h)
+    dAh = jnp.moveaxis(dA, -1, 1)                                # (B,h,nc,cs)
+    A_cum = jnp.cumsum(dAh, axis=-1)
+    L = jnp.exp(_segsum(dAh))                                    # (B,h,nc,cs,cs)
+    xdt = xc * dtc[..., None]                                    # (B,nc,cs,h,p)
+
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xdt)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)              # (B,h,nc,cs)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Bc, decay_states, xdt)
+    chunk_decay = jnp.exp(A_cum[..., -1])                        # (B,h,nc)
+
+    def scan_fn(S_prev, inp):
+        st_c, dec_c = inp                                        # (B,h,p,n),(B,h)
+        out = S_prev
+        S_new = S_prev * dec_c[..., None, None] + st_c
+        return S_new, out
+
+    states_t = jnp.moveaxis(states, 1, 0)                        # (nc,B,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, -1, 0)                   # (nc,B,h)
+    S_final, states_prev = jax.lax.scan(scan_fn, jnp.zeros_like(states_t[0]),
+                                        (states_t, decay_t),
+                                        unroll=cfg.unroll_scans)
+    states_prev = jnp.moveaxis(states_prev, 0, 1)                # (B,nc,h,p,n)
+    state_decay_out = jnp.exp(A_cum)                             # (B,h,nc,cs)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_prev, state_decay_out)
+
+    y = (y_diag + y_off).reshape(B_, S, nh, hd)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    if not return_state:
+        return out
+    cw = cfg.conv_width
+    conv_state = jnp.pad(xBC, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):] \
+        if cw > 1 else jnp.zeros((B_, 0, xBC.shape[-1]), xBC.dtype)
+    return out, {"state": S_final, "conv": conv_state}
+
+
+def ssm_decode_step(cfg: ModelConfig, p, x, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x (B,1,d) -> (B,1,d); O(1) recurrent update."""
+    B_ = x.shape[0]
+    di, st, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xBC, dt = _split(cfg, zxbcdt)
+    # conv over stored window
+    window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xh = conv_out[..., :di].reshape(B_, nh, hd).astype(jnp.float32)
+    Bm = conv_out[..., di: di + st].astype(jnp.float32)
+    Cm = conv_out[..., di + st:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                          # (B,h)
+    state = cache["state"] * dA[..., None, None] \
+        + (dt[..., None] * xh)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + xh * p["D"][None, :, None]
+    y = y.reshape(B_, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
+    out = (y.astype(x.dtype) @ p["out_proj"])[:, None]
+    new_cache = {"state": state, "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

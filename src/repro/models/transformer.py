@@ -1,0 +1,542 @@
+"""Composable decoder model covering every assigned architecture family.
+
+Layers are grouped into *stages*: the config's block pattern (e.g. gemma2's
+(local, full) or recurrentgemma's (rglru, rglru, local)) is stacked over its
+repeat count and executed with ``jax.lax.scan`` — bounded HLO size for the
+80-combination multi-pod dry-run — plus an unrolled tail when depth % pattern
+!= 0.  Three entry points: ``forward_train`` (full causal sequence),
+``prefill`` (sequence -> last logits + caches), ``decode_step`` (one token
+against the caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig, FULL_ATTN, LOCAL_ATTN, SSM, RGLRU
+from . import layers as L
+from . import kvcache as KV
+from .attention import attention
+from .moe import init_moe, apply_moe
+from .ssm import init_ssm, ssm_forward, ssm_decode_step
+from .rglru import init_rglru, rglru_forward, rglru_decode_step
+
+
+# -- sharding context ------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding helper. ``None`` mesh -> no-op (CPU smoke tests)."""
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # decode-time KV cache is sequence-sharded over the model axis (set when
+    # kv_heads doesn't divide the model axis): attention then keeps q
+    # replicated over heads and lets GSPMD do flash-decode-style partial
+    # softmax reductions instead of all-gathering the cache.
+    kv_seq_sharded: bool = False
+
+    def spec(self, *dims) -> P:
+        ax = []
+        for d in dims:
+            if d == "b":
+                ax.append(self.batch_axes if self.batch_axes else None)
+            elif d == "m":
+                # model_axis=None => FSDP-style: activations are not
+                # tensor-parallel; 'm' constraints dissolve
+                ax.append(self.model_axis)
+            else:
+                ax.append(None)
+        return P(*ax)
+
+    def _axis_size(self, entry) -> int:
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def cs(self, x, *dims):
+        if self.mesh is None:
+            return x
+        spec = self.spec(*dims)
+        # drop axes that don't divide the corresponding dim (e.g. 12 heads
+        # on a 16-way model axis, vocab 50280 on 16 shards)
+        entries = []
+        for i, e in enumerate(spec):
+            if e is None or i >= x.ndim or (
+                    x.shape[i] % self._axis_size(e) != 0) or x.shape[i] == 0:
+                entries.append(None)
+            else:
+                entries.append(e)
+        if all(e is None for e in entries):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries)))
+
+
+NOSHARD = ShardCtx()
+
+
+# -- stage decomposition ------------------------------------------------------------
+
+def stages_of(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    out = []
+    if cfg.n_pattern_repeats:
+        out.append((cfg.block_pattern, cfg.n_pattern_repeats))
+    if cfg.tail_kinds:
+        out.append((cfg.tail_kinds, 1))
+    return out
+
+
+# -- init ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    p = {
+        "q": L.dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype=dtype),
+        "k": L.dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "v": L.dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "o": L.dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["q_b"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["k_b"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["v_b"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm": L.init_norm(cfg)}
+    if kind in (FULL_ATTN, LOCAL_ATTN):
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif kind == SSM:
+        p["ssm"] = init_ssm(ks[0], cfg, dtype)
+    elif kind == RGLRU:
+        p["rglru"] = init_rglru(ks[0], cfg, dtype)
+    if cfg.post_block_norm:
+        p["post_norm"] = L.init_norm(cfg)
+    if cfg.d_ff > 0 and kind != SSM:
+        p["mlp_norm"] = L.init_norm(cfg)
+        if cfg.is_moe:
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg, dtype)
+        if cfg.post_block_norm:
+            p["post_mlp_norm"] = L.init_norm(cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_final, *stage_keys = jax.random.split(key, 2 + len(stages_of(cfg)))
+    params: Dict[str, Any] = {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "final_norm": L.init_norm(cfg),
+        "stages": [],
+    }
+    for (kinds, n_rep), sk in zip(stages_of(cfg), stage_keys):
+        groups = []
+        for r, rk in enumerate(jax.random.split(sk, n_rep)):
+            bkeys = jax.random.split(rk, len(kinds))
+            groups.append({"blocks": tuple(_init_block(bk, cfg, kind, dtype)
+                                           for bk, kind in zip(bkeys, kinds))})
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) \
+            if n_rep > 1 else jax.tree.map(lambda x: x[None], groups[0])
+        params["stages"].append(stacked)
+    return params
+
+
+def param_specs(cfg: ModelConfig, shd: ShardCtx) -> Dict:
+    """PartitionSpecs for the param pytree (tensor-parallel over model axis)."""
+    m = shd.model_axis
+    msize = shd.mesh.shape[m] if shd.mesh is not None else 1
+
+    def attn_spec():
+        kv = m if cfg.num_kv_heads * cfg.head_dim % max(msize, 1) == 0 \
+            and cfg.num_kv_heads % msize == 0 else None
+        s = {"q": P(None, None, m), "k": P(None, None, kv), "v": P(None, None, kv),
+             "o": P(None, m, None)}
+        if cfg.qkv_bias:
+            s.update({"q_b": P(None, m), "k_b": P(None, kv), "v_b": P(None, kv)})
+        if cfg.qk_norm:
+            s.update({"q_norm": P(None, None), "k_norm": P(None, None)})
+        return s
+
+    def mlp_spec():
+        s = {"down": P(None, m, None)}
+        if cfg.glu:
+            s.update({"gate": P(None, None, m), "up": P(None, None, m)})
+        else:
+            s.update({"up": P(None, None, m), "up_b": P(None, m),
+                      "down_b": P(None, None)})
+        return s
+
+    def moe_spec():
+        e = m if cfg.num_experts % max(msize, 1) == 0 else None
+        ffm = None if e == m else m
+        s = {"router": P(None, None, None),
+             "down": P(None, e, ffm, None)}
+        if cfg.glu:
+            s.update({"gate": P(None, e, None, ffm), "up": P(None, e, None, ffm)})
+        else:
+            s.update({"up": P(None, e, None, ffm)})
+        return s
+
+    def norm_spec(p):
+        return jax.tree.map(lambda _: P(None, None), p)
+
+    def ssm_spec():
+        return {"in_proj": P(None, None, m), "conv_w": P(None, None, None),
+                "conv_b": P(None, None), "A_log": P(None, None), "D": P(None, None),
+                "dt_bias": P(None, None), "norm": P(None, m),
+                "out_proj": P(None, m, None)}
+
+    def rglru_spec():
+        return {"in_x": P(None, None, m), "in_gate": P(None, None, m),
+                "conv_w": P(None, None, m), "conv_b": P(None, m),
+                "lam": P(None, m), "rg_w": P(None, m), "ig_w": P(None, m),
+                "out": P(None, m, None)}
+
+    def block_spec(kind, bp):
+        s: Dict[str, Any] = {"norm": norm_spec(bp["norm"])}
+        if kind in (FULL_ATTN, LOCAL_ATTN):
+            s["attn"] = attn_spec()
+        elif kind == SSM:
+            s["ssm"] = ssm_spec()
+        elif kind == RGLRU:
+            s["rglru"] = rglru_spec()
+        if "post_norm" in bp:
+            s["post_norm"] = norm_spec(bp["post_norm"])
+        if "mlp_norm" in bp:
+            s["mlp_norm"] = norm_spec(bp["mlp_norm"])
+            if cfg.is_moe:
+                s["moe"] = moe_spec()
+            else:
+                s["mlp"] = mlp_spec()
+            if "post_mlp_norm" in bp:
+                s["post_mlp_norm"] = norm_spec(bp["post_mlp_norm"])
+        return s
+
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    embed_s = {"embedding": P(m, None)}
+    if "lm_head" in shapes["embed"]:
+        embed_s["lm_head"] = P(None, m)
+    if "prefix_proj" in shapes["embed"]:
+        embed_s["prefix_proj"] = P(None, None)
+    specs = {"embed": embed_s, "final_norm": norm_spec(shapes["final_norm"]),
+             "stages": []}
+    for (kinds, n_rep), sp in zip(stages_of(cfg), shapes["stages"]):
+        specs["stages"].append(
+            {"blocks": tuple(block_spec(k, b) for k, b in zip(kinds, sp["blocks"]))})
+    return specs
+
+
+# -- block application ----------------------------------------------------------------
+
+def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos, shd):
+    B, S, _ = x.shape
+    q = x @ p["attn"]["q"]
+    k = x @ p["attn"]["k"]
+    v = x @ p["attn"]["v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["attn"]["q_b"], k + p["attn"]["k_b"], v + p["attn"]["v_b"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if not (mode == "decode" and shd.kv_seq_sharded):
+        q = shd.cs(q, "b", None, "m", None)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        inv, rot = L.rope_freqs(cfg)
+        q = L.apply_rope(q, positions, inv, rot)
+        k = L.apply_rope(k, positions, inv, rot)
+
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    new_cache = None
+    if mode == "decode":
+        new_cache = KV.cache_write_decode(cache, k, v, pos)
+        k_full, v_full = KV.cache_kv_arrays(new_cache, q.dtype)
+        k_pos = KV.cache_key_positions(new_cache, pos, B)
+        buf_len = k_full.shape[1]
+        if window == 0 and buf_len < cfg.max_seq:
+            window = buf_len          # long-context ring buffer on full attn
+        k_att = k_full
+        v_att = v_full
+        if shd.kv_seq_sharded and cfg.num_heads != cfg.num_kv_heads:
+            # pre-expand GQA and pin the expanded KV to the cache's sequence
+            # sharding; otherwise the o-projection's head sharding propagates
+            # backwards and XLA all-gathers the whole cache per step.
+            rep = cfg.num_heads // cfg.num_kv_heads
+            k_att = shd.cs(jnp.repeat(k_att, rep, axis=2), "b", "m", None, None)
+            v_att = shd.cs(jnp.repeat(v_att, rep, axis=2), "b", "m", None, None)
+        out = attention(q, k_att, v_att,
+                        positions, k_pos, window=window,
+                        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+                        unroll=cfg.unroll_scans)
+        if shd.kv_seq_sharded:
+            out = shd.cs(out, "b", None, None, None)
+    else:
+        if mode == "prefill":
+            new_cache = KV.cache_write_prefill(cache, k, v)
+            buf_len = new_cache["k"].shape[1]
+            if window == 0 and buf_len < S:
+                window = buf_len
+        out = attention(q, k, v, positions, positions, window=window,
+                        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+                        unroll=cfg.unroll_scans)
+    if not (mode == "decode" and shd.kv_seq_sharded):
+        out = shd.cs(out, "b", None, "m", None)
+    out = out.reshape(B, S, cfg.q_dim) @ p["attn"]["o"]
+    return out, new_cache
+
+
+def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
+                 cache, pos, shd):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg, p["norm"], x)
+    new_cache = None
+    if kind in (FULL_ATTN, LOCAL_ATTN):
+        mix, new_cache = _apply_attn(cfg, p, h, kind, mode=mode,
+                                     positions=positions, cache=cache,
+                                     pos=pos, shd=shd)
+    elif kind == SSM:
+        if mode == "decode":
+            mix, new_cache = ssm_decode_step(cfg, p["ssm"], h, cache)
+        elif mode == "prefill":
+            mix, new_cache = ssm_forward(cfg, p["ssm"], h, return_state=True)
+        else:
+            mix = ssm_forward(cfg, p["ssm"], h)
+    elif kind == RGLRU:
+        if mode == "decode":
+            mix, new_cache = rglru_decode_step(cfg, p["rglru"], h, cache)
+        elif mode == "prefill":
+            mix, new_cache = rglru_forward(cfg, p["rglru"], h, return_state=True)
+        else:
+            mix = rglru_forward(cfg, p["rglru"], h)
+    else:
+        raise ValueError(kind)
+    if new_cache is not None and cache is not None:
+        # match the caller-allocated buffer dtypes (e.g. f32 test caches)
+        new_cache = jax.tree.map(lambda n, o: n.astype(o.dtype), new_cache, cache)
+    if cfg.post_block_norm:
+        mix = L.apply_norm(cfg, p["post_norm"], mix)
+    x = x + mix
+    x = shd.cs(x, "b", None, None)
+
+    if cfg.d_ff > 0 and kind != SSM:
+        h = L.apply_norm(cfg, p["mlp_norm"], x)
+        if cfg.is_moe:
+            m, a = apply_moe(cfg, p["moe"], h, shd)
+            aux = aux + a
+        else:
+            m = L.apply_mlp(cfg, p["mlp"], h)
+        if cfg.post_block_norm:
+            m = L.apply_norm(cfg, p["post_mlp_norm"], m)
+        x = x + m
+        x = shd.cs(x, "b", None, None)
+    return x, new_cache, aux
+
+
+# -- stage execution -------------------------------------------------------------------
+
+def _run_stages(cfg: ModelConfig, params, x, *, mode, positions, caches, pos,
+                shd: ShardCtx, remat: bool):
+    """caches: list (per stage) of stacked per-group caches or None."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, ((kinds, n_rep), sp) in enumerate(zip(stages_of(cfg), params["stages"])):
+        stage_cache = caches[si] if caches is not None else None
+
+        def group_fn(x, group_p, group_c):
+            auxs = jnp.zeros((), jnp.float32)
+            outs = []
+            for j, kind in enumerate(kinds):
+                c = group_c[j] if group_c is not None else None
+                x, nc, a = _apply_block(cfg, kind, group_p["blocks"][j], x,
+                                        mode=mode, positions=positions,
+                                        cache=c, pos=pos, shd=shd)
+                auxs = auxs + a
+                outs.append(nc)
+            return x, tuple(outs), auxs
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn)
+
+        if stage_cache is not None:
+            def body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+                x, ncache, a = group_fn(x, gp, gc)
+                return (x, aux + a), ncache
+
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total),
+                                              (sp, stage_cache),
+                                              unroll=cfg.unroll_scans)
+            new_caches.append(ys)
+        else:
+            def body(carry, gp):
+                x, aux = carry
+                x, ncache, a = group_fn(x, gp, None)
+                return (x, aux + a), ncache
+
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), sp,
+                                              unroll=cfg.unroll_scans)
+            new_caches.append(ys if mode == "prefill" else None)
+    return x, new_caches, aux_total
+
+
+# -- embedding helpers -------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, prefix_embeds, shd, start_pos=0):
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype) @ params["embed"]["prefix_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = start_pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embedding == "sincos":
+        x = x + L.sincos_embedding(positions, cfg.d_model).astype(x.dtype)
+    x = shd.cs(x, "b", None, None)
+    return x, positions
+
+
+# -- public API -----------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                  shd: ShardCtx = NOSHARD, remat: bool = True):
+    """tokens (B,S) -> logits (B,S_total,vocab), aux_loss."""
+    x, positions = _embed_inputs(cfg, params, tokens, prefix_embeds, shd)
+    x, _, aux = _run_stages(cfg, params, x, mode="train", positions=positions,
+                            caches=None, pos=None, shd=shd, remat=remat)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = shd.cs(logits, "b", None, "m")
+    return logits, aux
+
+
+def _hidden_train(params, cfg: ModelConfig, tokens, prefix_embeds, shd, remat):
+    x, positions = _embed_inputs(cfg, params, tokens, prefix_embeds, shd)
+    x, _, aux = _run_stages(cfg, params, x, mode="train", positions=positions,
+                            caches=None, pos=None, shd=shd, remat=remat)
+    return L.apply_norm(cfg, params["final_norm"], x), aux
+
+
+def _ce_block(cfg: ModelConfig, params, h, tgt, shd, valid=None):
+    """h (B,T,d), tgt (B,T) -> (sum_ce, count). Logits live only per block."""
+    logits = L.unembed(cfg, params["embed"], h)
+    logits = shd.cs(logits, "b", None, "m")
+    pred = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    onehot = jax.nn.one_hot(tgt, cfg.vocab_size, dtype=jnp.bfloat16)
+    gold = jnp.sum(pred * onehot, axis=-1)
+    ce = lse - gold
+    if valid is not None:
+        ce = ce * valid
+    return jnp.sum(ce), lse.size
+
+
+def loss_fn(params, cfg: ModelConfig, batch, shd: ShardCtx = NOSHARD,
+            remat: bool = True, ce_chunk: int = 1024):
+    """batch: {tokens (B,S), [prefix_embeds]}; next-token CE over token span.
+
+    The unembed + cross-entropy is computed in sequence chunks under remat so
+    the (B, S, vocab) logits tensor is never materialized (vocab up to 256k).
+    """
+    tokens = batch["tokens"]
+    h, aux = _hidden_train(params, cfg, tokens, batch.get("prefix_embeds"),
+                           shd, remat)
+    Pn = h.shape[1] - tokens.shape[1]
+    h = h[:, Pn:-1]
+    tgt = tokens[:, 1:]
+    T = h.shape[1]
+    if T <= ce_chunk:
+        ce_sum, n = _ce_block(cfg, params, h, tgt, shd)
+        ce = ce_sum / n
+    else:
+        # pad T up to a chunk multiple; padded positions are masked out
+        nc = -(-T // ce_chunk)
+        pad = nc * ce_chunk - T
+        B = h.shape[0]
+        hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        tp = jnp.pad(tgt, ((0, 0), (0, pad)))
+        vp = jnp.pad(jnp.ones((B, T), jnp.float32), ((0, 0), (0, pad)))
+        hc = hp.reshape(B, nc, ce_chunk, -1).swapaxes(0, 1)
+        tc = tp.reshape(B, nc, ce_chunk).swapaxes(0, 1)
+        vc = vp.reshape(B, nc, ce_chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def body(acc, xs):
+            hi, ti, vi = xs
+            s, n = _ce_block(cfg, params, hi, ti, shd, vi)
+            return acc + s, None
+
+        ce_sum, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                 (hc, tc, vc), unroll=cfg.unroll_scans)
+        ce = ce_sum / (T * B)
+    return ce + cfg.router_aux_loss * aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               long_context: bool = False, dtype=jnp.bfloat16) -> List:
+    """Stacked cache pytree parallel to params['stages']."""
+    caches = []
+    for kinds, n_rep in stages_of(cfg):
+        group = tuple(KV.init_block_cache(cfg, k, batch, max_len, long_context, dtype)
+                      for k in kinds)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape), group)
+        caches.append(stacked)
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, prefix_embeds=None,
+            shd: ShardCtx = NOSHARD):
+    """Run the prompt, fill caches. Returns (last_logits (B,vocab), caches, next_pos)."""
+    x, positions = _embed_inputs(cfg, params, tokens, prefix_embeds, shd)
+    x, new_caches, _ = _run_stages(cfg, params, x, mode="prefill",
+                                   positions=positions, caches=caches, pos=None,
+                                   shd=shd, remat=False)
+    last = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], last)[:, 0]
+    logits = shd.cs(logits, "b", "m")
+    return logits, new_caches, x.shape[1]
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
+                shd: ShardCtx = NOSHARD):
+    """tokens (B,1) at scalar position ``pos`` -> (logits (B,vocab), caches)."""
+    B = tokens.shape[0]
+    if shd.mesh is not None:
+        # one-hot matmul lookup: with a vocab-sharded table this lowers to a
+        # sharded matmul + tiny psum instead of all-gathering the table
+        # (gemma2's table alone is 1.8 GB) on every decode step.
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=params["embed"]["embedding"].dtype)
+        x = oh @ params["embed"]["embedding"]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)), x.dtype)
+    else:
+        x = L.embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.pos_embedding == "sincos":
+        x = x + L.sincos_embedding(positions, cfg.d_model).astype(x.dtype)
+    x = shd.cs(x, "b", None, None)
+    x, new_caches, _ = _run_stages(cfg, params, x, mode="decode",
+                                   positions=positions, caches=caches, pos=pos,
+                                   shd=shd, remat=False)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    logits = shd.cs(logits, "b", "m")
+    return logits, new_caches

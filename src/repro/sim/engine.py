@@ -1,0 +1,300 @@
+"""Discrete-event serving-node simulator.
+
+Topology follows the paper's prototype (Fig. 4): a router feeding per-class
+prefill queues, a prefill pool (default 2 workers x 2 chips) and a decode
+pool (default 4 workers x 1 chip) doing continuous batching.  Controllers
+(per-worker) are plugged in by the governor configuration:
+
+  DefaultNV    : single queue, every clock pinned at f_max
+  PrefillSplit : length-based routing only, clocks at f_max
+  GreenLLM     : routing + queueing-aware prefill optimizer + dual-loop
+                 decode controller
+
+Energy is integrated per worker: active intervals at the plant's utilization-
+dependent power, gaps at idle power.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (DualLoopController, LengthRouter, MaxFreqController,
+                        PrefillOptimizer, Request, SLOConfig)
+from repro.core.prefill_optimizer import deadline_from_queue
+from .plant import PlantModel
+
+
+class EnergyMeter:
+    def __init__(self, idle_power: float):
+        self.idle_power = idle_power
+        self.active_j = 0.0
+        self.idle_j = 0.0
+        self._last_busy_end = 0.0
+
+    def record_active(self, start: float, dur: float, power: float):
+        if start > self._last_busy_end:
+            self.idle_j += (start - self._last_busy_end) * self.idle_power
+        self.active_j += dur * power
+        self._last_busy_end = max(self._last_busy_end, start + dur)
+
+    def finalize(self, horizon: float):
+        if horizon > self._last_busy_end:
+            self.idle_j += (horizon - self._last_busy_end) * self.idle_power
+            self._last_busy_end = horizon
+
+    @property
+    def total_j(self) -> float:
+        return self.active_j + self.idle_j
+
+
+class PrefillWorker:
+    # reserve headroom below the TTFT deadline for the first decode step +
+    # dispatch, and for arrival burstiness (queueing-awareness, Fig. 6)
+    DEADLINE_SAFETY = 0.72
+    FIRST_TOKEN_RESERVE = 0.060  # s
+
+    def __init__(self, wid: str, plant: PlantModel,
+                 optimizer: Optional[PrefillOptimizer], slo_ttft: float):
+        self.wid = wid
+        self.plant = plant
+        self.optimizer = optimizer
+        self.slo_ttft = slo_ttft
+        self.queue: List[Request] = []
+        self.busy_until = 0.0
+        self.freq = plant.hw.f_max
+        self.energy = EnergyMeter(plant.idle_power)
+        self.freq_history: List[Tuple[float, float]] = []
+        # EWMA arrival statistics for the queueing-aware work forecast
+        self._rate = 0.0           # arrivals/s
+        self._mean_tref = 0.0      # s at f_ref
+        self._last_arrival: Optional[float] = None
+
+    def observe_arrival(self, now: float, t_ref_job: float) -> None:
+        if self._last_arrival is not None:
+            gap = max(now - self._last_arrival, 1e-3)
+            # EWMA of the *gap* (not 1/gap, which is biased high under
+            # bursty gamma arrivals), inverted to a rate estimate
+            self._gap = 0.85 * getattr(self, "_gap", gap) + 0.15 * gap
+            self._rate = 1.0 / max(self._gap, 1e-3)
+        self._last_arrival = now
+        self._mean_tref = (0.9 * self._mean_tref + 0.1 * t_ref_job
+                           if self._mean_tref else t_ref_job)
+
+    def choose_freq(self, now: float, job: Optional[Request] = None) -> float:
+        if self.optimizer is None:
+            return self.plant.hw.f_max
+        jobs = ([job] if job is not None else []) + self.queue
+        lengths = [r.prompt_len for r in jobs]
+        oldest = now - min((r.arrival for r in jobs), default=now)
+        D = deadline_from_queue(lengths, self.slo_ttft, oldest)
+        D = max(self.DEADLINE_SAFETY * D - self.FIRST_TOKEN_RESERVE, 1e-3)
+        # forecast work arriving within the window (queueing-aware, §3.2):
+        # inflate the pending work by lambda * D * E[t_ref] expressed as
+        # equivalent prompt tokens via a synthetic-length job list.
+        f, _ = self.optimizer.choose_frequency(lengths, D)
+        # bound the slowdown committed to any single job: once started a job
+        # cannot be sped up, so cap its own latency at 60% of its class SLO
+        if lengths:
+            t0 = float(self.optimizer.latency_model.t_ref(max(lengths)))
+            ladder = self.optimizer.hw.ladder()
+            ok = ladder[t0 * self.optimizer.latency_model.f_ref / ladder
+                        <= 0.6 * self.slo_ttft]
+            f = max(f, float(ok[0]) if len(ok) else float(ladder[-1]))
+        if self._rate > 0 and self._mean_tref > 0:
+            # queueing stability: keep utilization rho = lambda * E[t(f)]
+            # under 0.85 so arriving work does not accumulate unboundedly
+            rho_target = 0.85
+            f_ref = self.optimizer.latency_model.f_ref
+            f_stab = f_ref * self._rate * self._mean_tref / rho_target
+            f = max(f, min(f_stab, self.plant.hw.f_max))
+        return f
+
+
+class DecodeStream:
+    __slots__ = ("req", "ctx")
+
+    def __init__(self, req: Request, ctx: int):
+        self.req = req
+        self.ctx = ctx
+
+
+class DecodeWorker:
+    def __init__(self, wid: str, plant: PlantModel, controller,
+                 max_streams: int = 64):
+        self.wid = wid
+        self.plant = plant
+        self.controller = controller
+        self.max_streams = max_streams
+        self.streams: List[DecodeStream] = []
+        self.pending: List[Request] = []
+        self.energy = EnergyMeter(plant.idle_power)
+        self.stepping = False
+
+    @property
+    def load(self) -> int:
+        return len(self.streams) + len(self.pending)
+
+    def admit(self):
+        while self.pending and len(self.streams) < self.max_streams:
+            r = self.pending.pop(0)
+            self.streams.append(DecodeStream(r, r.prompt_len))
+
+
+@dataclasses.dataclass
+class NodeConfig:
+    prefill_workers: int = 2
+    prefill_chips: int = 2
+    decode_workers: int = 4
+    decode_chips: int = 1
+    max_streams: int = 256  # KV-slot budget per decode worker
+    prefill_replan_period: float = 0.05
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    prefill_energy_j: float
+    decode_energy_j: float
+    duration: float
+    tbt_records: Dict[int, List[float]]
+    freq_traces: Dict[str, List[Tuple[float, float, float]]]
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.prefill_energy_j + self.decode_energy_j
+
+
+class ServingSimulator:
+    def __init__(self, plant_fn: Callable[[int, int], PlantModel],
+                 router: LengthRouter,
+                 prefill_optimizers: Optional[Sequence[Optional[PrefillOptimizer]]],
+                 decode_controller_fn: Callable[[int], object],
+                 slo: SLOConfig, node: NodeConfig = NodeConfig()):
+        """plant_fn(n_chips, seed) builds a worker's plant model."""
+        self.router = router
+        self.slo = slo
+        self.node = node
+        self.prefill: List[PrefillWorker] = []
+        for i in range(node.prefill_workers):
+            cls = router.class_names[min(i, router.num_classes - 1)]
+            opt = None if prefill_optimizers is None else \
+                prefill_optimizers[min(i, len(prefill_optimizers) - 1)]
+            self.prefill.append(PrefillWorker(
+                f"prefill{i}", plant_fn(node.prefill_chips, 100 + i), opt,
+                slo.ttft_target(cls)))
+        self.decode: List[DecodeWorker] = [
+            DecodeWorker(f"decode{i}", plant_fn(node.decode_chips, 200 + i),
+                         decode_controller_fn(i), node.max_streams)
+            for i in range(node.decode_workers)]
+        self.tbt_records: Dict[int, List[float]] = {}
+
+    # -- prefill routing -----------------------------------------------------------
+    def _prefill_worker_for(self, cls_idx: int, rid: int) -> PrefillWorker:
+        if self.router.num_classes == 1:
+            # single queue shared across the pool: pick least backlog
+            return min(self.prefill, key=lambda w: (len(w.queue), w.busy_until))
+        per_class = max(1, len(self.prefill) // self.router.num_classes)
+        base = cls_idx * per_class
+        cands = self.prefill[base: base + per_class] or self.prefill[-1:]
+        return min(cands, key=lambda w: (len(w.queue), w.busy_until))
+
+    # -- main loop --------------------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> SimResult:
+        evq: List[Tuple[float, int, str, object]] = []
+        seq = 0
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(evq, (t, seq, kind, payload))
+            seq += 1
+
+        for r in requests:
+            push(r.arrival, "arrival", r)
+
+        def start_prefill_if_idle(w: PrefillWorker, now: float):
+            if w.busy_until > now or not w.queue:
+                return
+            w.queue.sort(key=lambda r: r.arrival)
+            req = w.queue.pop(0)
+            w.freq = w.choose_freq(now, req)
+            w.freq_history.append((now, w.freq))
+            dur = w.plant.prefill_latency(req.prompt_len, w.freq)
+            power = w.plant.prefill_power(req.prompt_len, w.freq, dur)
+            w.energy.record_active(now, dur, power)
+            req.prefill_start = now
+            w.busy_until = now + dur
+            push(now + dur, "prefill_done", (w, req))
+
+        def schedule_decode_step(w: DecodeWorker, now: float):
+            if w.stepping:
+                return
+            w.admit()
+            if not w.streams:
+                return
+            w.stepping = True
+            f = w.controller.maybe_tick(now)
+            batch = len(w.streams)
+            avg_ctx = float(np.mean([s.ctx for s in w.streams]))
+            dur = w.plant.decode_step_latency(batch, avg_ctx, f)
+            power = w.plant.decode_power(batch, avg_ctx, f, dur)
+            w.energy.record_active(now, dur, power)
+            push(now + dur, "decode_step_done", (w, dur, batch))
+
+        last_time = 0.0
+        while evq:
+            now, _, kind, payload = heapq.heappop(evq)
+            last_time = max(last_time, now)
+            if kind == "arrival":
+                req: Request = payload
+                cls_idx = self.router.route(req)
+                w = self._prefill_worker_for(cls_idx, req.rid)
+                w.queue.append(req)
+                if w.optimizer is not None:
+                    w.observe_arrival(
+                        now, float(w.optimizer.latency_model.t_ref(req.prompt_len)))
+                start_prefill_if_idle(w, now)
+            elif kind == "prefill_done":
+                w, req = payload
+                dw = min(self.decode, key=lambda d: d.load)
+                dw.pending.append(req)
+                start_prefill_if_idle(w, now)
+                schedule_decode_step(dw, now)
+            elif kind == "decode_step_done":
+                w, dur, batch = payload
+                w.stepping = False
+                done: List[DecodeStream] = []
+                for s in w.streams:
+                    s.req.tokens_emitted += 1
+                    s.ctx += 1
+                    if s.req.first_token < 0:
+                        s.req.first_token = now
+                    self.tbt_records.setdefault(s.req.rid, []).append(dur)
+                    if s.req.tokens_emitted >= s.req.output_len:
+                        s.req.finish = now
+                        done.append(s)
+                for s in done:
+                    w.streams.remove(s)
+                w.controller.record_tokens(now, batch, dur)
+                schedule_decode_step(w, now)
+
+        for w in self.prefill:
+            w.energy.finalize(last_time)
+        for w in self.decode:
+            w.energy.finalize(last_time)
+        freq_traces = {}
+        for w in self.decode:
+            if hasattr(w.controller, "history"):
+                freq_traces[w.wid] = list(w.controller.history)
+        for w in self.prefill:
+            freq_traces[w.wid] = [(t, f, 0.0) for t, f in w.freq_history]
+        return SimResult(
+            requests=list(requests),
+            prefill_energy_j=sum(w.energy.total_j for w in self.prefill),
+            decode_energy_j=sum(w.energy.total_j for w in self.decode),
+            duration=last_time,
+            tbt_records=self.tbt_records,
+            freq_traces=freq_traces,
+        )

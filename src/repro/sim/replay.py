@@ -1,0 +1,136 @@
+"""Trace-replay harness: build a configured node (DefaultNV / PrefillSplit /
+GreenLLM), replay a trace, and compute the paper's metrics (TTFT%, TBT%,
+relative prefill/decode energy)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (DualLoopController, DecodeControllerConfig,
+                        MaxFreqController, FixedFreqController,
+                        PrefillOptimizer, Request, SLOConfig, make_router)
+from repro.core.hardware import HardwareProfile, A100_SXM4_40G
+from repro.models import ModelConfig
+from .engine import NodeConfig, ServingSimulator, SimResult
+from .plant import PlantModel
+from .profiling import (profile_decode_table, profile_power,
+                        profile_prefill_latency)
+
+GOVERNORS = ("defaultnv", "prefillsplit", "greenllm")
+
+
+def make_plant_fn(cfg: ModelConfig, hw: HardwareProfile,
+                  noise: float = 0.02) -> Callable[[int, int], PlantModel]:
+    def fn(n_chips: int, seed: int) -> PlantModel:
+        return PlantModel(cfg=cfg, hw=hw, n_chips=n_chips,
+                          noise_sigma=noise, seed=seed)
+    return fn
+
+
+@dataclasses.dataclass
+class ReplayConfig:
+    governor: str = "greenllm"
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    node: NodeConfig = dataclasses.field(default_factory=NodeConfig)
+    fixed_freq: Optional[float] = None     # fixed-clock sweep (Fig. 3c)
+    latency_fit_degree: int = 2            # 1 for attention-free archs
+
+
+def build_simulator(cfg: ModelConfig, hw: HardwareProfile,
+                    rc: ReplayConfig) -> ServingSimulator:
+    plant_fn = make_plant_fn(cfg, hw)
+    gov = rc.governor.lower()
+    assert gov in GOVERNORS or gov == "fixed", gov
+    router = make_router(enabled=(gov != "defaultnv"))
+
+    if gov == "greenllm":
+        # offline profiling pass (the controllers' only plant knowledge)
+        pplant = plant_fn(rc.node.prefill_chips, 7)
+        lat = profile_prefill_latency(pplant, degree=rc.latency_fit_degree)
+        pwr = profile_power(pplant)
+        opt = PrefillOptimizer(lat, pwr, hw, hw.p_idle)
+        popts = [opt] * rc.node.prefill_workers
+        dplant = plant_fn(rc.node.decode_chips, 8)
+        table_proto = profile_decode_table(dplant, rc.slo.tbt_target)
+
+        def dctl(i: int):
+            table = dataclasses.replace(
+                table_proto, freq_for=table_proto.freq_for.copy())
+            return DualLoopController(
+                hw, table,
+                DecodeControllerConfig(tbt_slo=rc.slo.tbt_target))
+    elif gov == "fixed":
+        popts = None
+
+        def dctl(i: int):
+            return FixedFreqController(hw, rc.fixed_freq)
+    else:
+        popts = None
+
+        def dctl(i: int):
+            return MaxFreqController(hw)
+
+    sim = ServingSimulator(plant_fn, router, popts, dctl, rc.slo, rc.node)
+    if gov == "fixed":
+        for w in sim.prefill:
+            w.freq = rc.fixed_freq
+            w.choose_freq = lambda now, job=None, f=rc.fixed_freq: f
+    return sim
+
+
+@dataclasses.dataclass
+class Metrics:
+    ttft_pass: float
+    tbt_pass: float
+    prefill_energy_j: float
+    decode_energy_j: float
+    total_energy_j: float
+    p90_ttft: Dict[str, float]
+    p95_tbt: float
+    p99_tbt: float
+    n_requests: int
+    throughput_tok_s: float
+
+
+def compute_metrics(res: SimResult, slo: SLOConfig) -> Metrics:
+    done = [r for r in res.requests if r.first_token >= 0]
+    ttft_ok = sum(1 for r in done if r.ttft <= slo.ttft_target(r.cls))
+    tbt_ok, total = 0, 0
+    all_tbt: List[float] = []
+    for r in done:
+        tbts = res.tbt_records.get(r.rid, [])
+        if not tbts:
+            continue
+        total += 1
+        p95 = float(np.percentile(tbts, 95))
+        all_tbt.extend(tbts)
+        if p95 <= slo.tbt_target:
+            tbt_ok += 1
+    p90 = {}
+    for cls in ("SM", "L"):
+        v = [r.ttft for r in done if r.cls == cls]
+        if v:
+            p90[cls] = float(np.percentile(v, 90))
+    tokens = sum(r.tokens_emitted for r in res.requests)
+    return Metrics(
+        ttft_pass=ttft_ok / max(len(done), 1),
+        tbt_pass=tbt_ok / max(total, 1),
+        prefill_energy_j=res.prefill_energy_j,
+        decode_energy_j=res.decode_energy_j,
+        total_energy_j=res.total_energy_j,
+        p90_ttft=p90,
+        p95_tbt=float(np.percentile(all_tbt, 95)) if all_tbt else 0.0,
+        p99_tbt=float(np.percentile(all_tbt, 99)) if all_tbt else 0.0,
+        n_requests=len(res.requests),
+        throughput_tok_s=tokens / max(res.duration, 1e-9),
+    )
+
+
+def replay(cfg: ModelConfig, trace: List[Request], rc: ReplayConfig,
+           hw: HardwareProfile = A100_SXM4_40G) -> Metrics:
+    import copy
+    sim = build_simulator(cfg, hw, rc)
+    res = sim.run([copy.copy(r) for r in trace])
+    return compute_metrics(res, rc.slo)

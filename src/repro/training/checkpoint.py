@@ -1,0 +1,50 @@
+"""Minimal msgpack checkpointing for param/optimizer pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, jnp.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # non-native dtypes (bf16) are stored upcast; load_checkpoint
+            # casts back to the target tree's dtype
+            arr = arr.astype(np.float32)
+        return {b"__nd__": True, b"dtype": arr.dtype.str,
+                b"shape": list(arr.shape), b"data": arr.tobytes()}
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(b"__nd__"):
+        return np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"])) \
+            .reshape(obj[b"shape"]).copy()
+    return obj
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    flat, treedef = jax.tree.flatten(tree)
+    payload = {"leaves": [_encode(np.asarray(x)) for x in flat],
+               "treedef": str(treedef)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, default=_encode, use_bin_type=True))
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_decode, raw=True)
+    flat_like, treedef = jax.tree.flatten(like)
+    leaves = [_decode(x) if not isinstance(x, np.ndarray) else x
+              for x in payload[b"leaves"]]
+    assert len(leaves) == len(flat_like), "checkpoint/tree mismatch"
+    leaves = [jnp.asarray(l).astype(x.dtype).reshape(x.shape)
+              for l, x in zip(leaves, flat_like)]
+    return jax.tree.unflatten(treedef, leaves)

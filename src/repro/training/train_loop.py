@@ -1,0 +1,79 @@
+"""Training step with microbatch gradient accumulation + ZeRO-1 state sharding."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, ShardCtx, loss_fn
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    shd: ShardCtx, num_microbatches: int = 1,
+                    grad_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt}; batch = {tokens (B,S), [prefix_embeds]}.
+    Gradients are accumulated over ``num_microbatches`` sequential slices of
+    the per-device batch (bounds activation live range), then AdamW applies.
+    ``grad_specs`` (a pytree of PartitionSpec) constrains the f32 accumulators
+    to the ZeRO-1 layout so the accumulation buffer is sharded too.
+    """
+
+    def constrain(tree):
+        if grad_specs is None or shd.mesh is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(shd.mesh, s)), tree, grad_specs)
+
+    def micro_loss(params, micro):
+        loss, metrics = loss_fn(params, cfg, micro, shd)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        mb = num_microbatches
+
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+            grads = constrain(grads)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(mb, B // mb, *x.shape[1:])
+
+            micros = jax.tree.map(split, batch)
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(carry, micro):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(micro_loss, has_aux=True)(
+                    params, micro)
+                gacc = constrain(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g))
+                return (gacc, lacc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micros)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, opt, opt_cfg)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}

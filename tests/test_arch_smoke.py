@@ -1,0 +1,117 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Each assigned architecture is instantiated as a REDUCED variant of the same
+family (2 layers / pattern length, d_model <= 512, <= 4 experts) and runs a
+forward + one train step on CPU, asserting output shapes and no NaNs.  The
+FULL configs are exercised only via the dry-run (ShapeDtypeStructs).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, ASSIGNED_ARCHS, get_config
+from repro.models import (init_params, forward_train, loss_fn, init_cache,
+                          prefill, decode_step)
+from repro.training import AdamWConfig, make_train_step, init_train_state
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch, key):
+    cfg = get_config(arch).smoke()
+    assert cfg.num_layers <= max(2, len(cfg.block_pattern))
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params = init_params(key, cfg)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pe = (jax.random.normal(key, (B, cfg.num_prefix_embeds, cfg.d_model),
+                            jnp.bfloat16) if cfg.num_prefix_embeds else None)
+    logits, aux = forward_train(params, cfg, tokens, pe)
+    S_total = S + cfg.num_prefix_embeds
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, key):
+    cfg = get_config(arch).smoke()
+    state = init_train_state(key, cfg)
+    step = make_train_step(cfg, AdamWConfig(warmup_steps=1, total_steps=10),
+                           __import__("repro.models", fromlist=["NOSHARD"]).NOSHARD,
+                           num_microbatches=1)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.num_prefix_embeds:
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.num_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert jnp.isfinite(metrics["loss"]), metrics
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually changed
+    d0 = jax.tree.leaves(state["params"])[0]
+    d1 = jax.tree.leaves(state2["params"])[0]
+    assert not jnp.allclose(d0.astype(jnp.float32), d1.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_path(arch, key):
+    """prefill -> teacher-forced decode matches full forward (per-arch)."""
+    cfg = get_config(arch).smoke().replace(dtype="float32")
+    params = init_params(key, cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pe = (jax.random.normal(key, (B, cfg.num_prefix_embeds, cfg.d_model))
+          if cfg.num_prefix_embeds else None)
+    logits, _ = forward_train(params, cfg, tokens, pe, remat=False)
+    caches = init_cache(cfg, B, 64, dtype=jnp.float32)
+    lg, caches, pos = prefill(params, cfg, tokens[:, :S - 4], caches, pe)
+    assert lg.shape == (B, cfg.vocab_size)
+    outs = []
+    for i in range(4):
+        lg2, caches = decode_step(params, cfg, tokens[:, S - 4 + i:S - 3 + i],
+                                  caches, pos + i)
+        outs.append(lg2)
+    dec = jnp.stack(outs, axis=1)
+    want = logits[:, -4:]
+    denom = float(jnp.max(jnp.abs(want))) + 1e-9
+    rel = float(jnp.max(jnp.abs(want - dec))) / denom
+    assert rel < 2e-4, f"{arch}: decode path diverges from forward ({rel})"
+
+
+def test_assigned_arch_configs_exact():
+    """The 10 assigned configs match the assignment table exactly."""
+    want = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }
+    for arch, (L, d, H, kv, ff, V) in want.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == H, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == V, arch
+    moe = get_config("qwen3-moe-30b-a3b")
+    assert (moe.num_experts, moe.experts_per_token) == (128, 8)
+    mix = get_config("mixtral-8x7b")
+    assert (mix.num_experts, mix.experts_per_token) == (8, 2)
+    assert mix.window == 4096
+    ssm = get_config("mamba2-370m")
+    assert ssm.ssm_state == 128
+    rg = get_config("recurrentgemma-9b")
+    assert rg.block_pattern == ("rglru", "rglru", "local")
+    assert len(ASSIGNED_ARCHS) == 10

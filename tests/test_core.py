@@ -1,0 +1,195 @@
+"""GreenLLM control-plane unit tests (paper §3.1-§3.3)."""
+import numpy as np
+import pytest
+
+from repro.core import (A100_SXM4_40G, CubicPowerModel, DualLoopController,
+                        DecodeControllerConfig, LengthRouter, PrefillOptimizer,
+                        QuadraticLatencyModel, SLOConfig, TPSFreqTable,
+                        TPSMeter, TBTMeter, make_router)
+from repro.core.prefill_optimizer import deadline_from_queue
+
+HW = A100_SXM4_40G
+
+
+# -- §3.1 router --------------------------------------------------------------------
+
+def test_router_partitions_by_threshold():
+    r = make_router(True)
+    assert r.classify(10) == 0 and r.classify(1024) == 0
+    assert r.classify(1025) == 1 and r.classify(100000) == 1
+    single = make_router(False)
+    assert single.num_classes == 1
+    assert single.classify(100000) == 0
+
+
+# -- §3.2 latency/power fits + optimizer ---------------------------------------------
+
+def _lat_model():
+    L = np.linspace(32, 8192, 40)
+    t = 1e-8 * L ** 2 + 1e-4 * L + 0.003
+    return QuadraticLatencyModel.fit(L, t, f_ref=HW.f_max)
+
+
+def test_quadratic_fit_recovers_coefficients():
+    m = _lat_model()
+    assert m.r2(np.linspace(32, 8192, 40),
+                1e-8 * np.linspace(32, 8192, 40) ** 2
+                + 1e-4 * np.linspace(32, 8192, 40) + 0.003) > 0.999
+    assert abs(m.a - 1e-8) / 1e-8 < 1e-3
+    # Eq. 3: latency scales with f_ref / f
+    np.testing.assert_allclose(m.predict(1000, HW.f_max / 2),
+                               2 * m.predict(1000, HW.f_max), rtol=1e-6)
+
+
+def test_cubic_power_fit():
+    f = HW.ladder()
+    P = 60 + 1e-7 * f ** 3 + 0.02 * f
+    m = CubicPowerModel.fit(f, P, HW.f_max, HW.p_idle)
+    np.testing.assert_allclose(m.predict(f), P, rtol=2e-2)
+
+
+def _optimizer():
+    lat = _lat_model()
+    f = HW.ladder()
+    # active floor well above idle (uncore), cubic dynamic part — the shape
+    # measured in the paper's Fig. 8
+    P = 130 + 240 * (f / HW.f_max) ** 3 + 40 * (f / HW.f_max)
+    pwr = CubicPowerModel.fit(f, P, HW.f_max, HW.p_idle)
+    return PrefillOptimizer(lat, pwr, HW, HW.p_idle)
+
+
+def test_optimizer_respects_deadline():
+    opt = _optimizer()
+    lengths = [512, 1024, 2048]
+    for D in (0.2, 0.5, 1.0, 4.0):
+        f, info = opt.choose_frequency(lengths, D)
+        if info["feasible"]:
+            assert opt.busy_time(lengths, f) <= D * 1.001
+        assert HW.f_min <= f <= HW.f_max
+
+
+def test_optimizer_monotone_in_deadline():
+    """Looser deadlines never pick higher clocks (Eq. 12 is U-shaped)."""
+    opt = _optimizer()
+    lengths = [1024] * 4
+    fs = [opt.choose_frequency(lengths, D)[0] for D in (0.15, 0.3, 0.6, 1.2, 2.4)]
+    assert all(a >= b for a, b in zip(fs, fs[1:])), fs
+
+
+def test_optimizer_infeasible_returns_fmax():
+    opt = _optimizer()
+    f, info = opt.choose_frequency([8192] * 50, 0.01)
+    assert f == HW.f_max and not info["feasible"]
+
+
+def test_energy_curve_is_u_shaped():
+    """E_total(f) over the ladder has an interior minimum (Fig. 3)."""
+    opt = _optimizer()
+    T_ref = 0.2
+    D = 2.0
+    E = opt.energy_total(T_ref, D, HW.ladder())
+    i = int(np.argmin(E))
+    assert 0 < i < len(E) - 1, "energy minimum should be interior"
+    assert E[0] > E[i] and E[-1] > E[i]
+
+
+def test_deadline_from_queue():
+    assert deadline_from_queue([1], 0.4, 0.1) == pytest.approx(0.3)
+    assert deadline_from_queue([1], 0.4, 5.0) == pytest.approx(1e-3)
+
+
+# -- §3.3 dual-loop controller ----------------------------------------------------------
+
+def _table():
+    tps = [200, 1000, 3000]
+    freqs = HW.ladder()[::4]
+    # P95 TBT worsens with load and improves with clock -> buckets map to
+    # distinct frequencies
+    p95 = 0.08 * (np.asarray(tps)[:, None] / 3000.0) * (HW.f_max / freqs[None, :])
+    ept = np.tile(np.linspace(0.3, 1.0, len(freqs)), (3, 1))
+    return TPSFreqTable.from_profile(tps, freqs, p95, ept, 0.1, HW.f_step)
+
+
+def test_controller_fine_loop_steps_are_rate_limited():
+    ctl = DualLoopController(HW, _table())
+    t = 0.0
+    for i in range(200):
+        t += 0.005
+        ctl.record_tokens(t, 5, 0.150)   # consistently violating TBT
+    prev = None
+    freqs = []
+    ctl.maybe_tick(t)
+    for _, f, _ in [(0, ctl.freq, 0)]:
+        freqs.append(f)
+    lo, mid, hi = ctl.band
+    assert lo <= ctl.freq <= hi
+
+
+def test_controller_tracks_band_and_ladder():
+    ctl = DualLoopController(HW, _table())
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(2000):
+        t += 0.01
+        tbt = float(rng.uniform(0.02, 0.14))
+        ctl.record_tokens(t, rng.integers(1, 20), tbt)
+        f = ctl.maybe_tick(t)
+        lo, mid, hi = ctl.band
+        assert HW.f_min <= f <= HW.f_max
+        assert lo - 1e-9 <= f <= hi + 1e-9
+
+
+def test_controller_raises_freq_on_violation_and_lowers_on_slack():
+    cfg = DecodeControllerConfig()
+    ctl = DualLoopController(HW, _table(), cfg)
+    # feed slack -> frequency should drift to the band floor
+    t = 0.0
+    for i in range(300):
+        t += 0.02
+        ctl.record_tokens(t, 10, 0.030)  # margin 0.3 < 0.65
+        ctl.maybe_tick(t)
+    assert ctl.freq == pytest.approx(ctl.band[0])
+    f_low = ctl.freq
+    # now violate -> frequency should climb to the band ceiling
+    for i in range(300):
+        t += 0.02
+        ctl.record_tokens(t, 10, 0.150)
+        ctl.maybe_tick(t)
+    assert ctl.freq >= f_low
+    assert ctl.freq == pytest.approx(ctl.band[2])
+
+
+def test_coarse_hysteresis_requires_three_intervals():
+    ctl = DualLoopController(HW, _table())
+    t = 0.0
+    ctl.record_tokens(t, 1, 0.05)
+    ctl.maybe_tick(0.001)
+    band0 = ctl.band
+    # one burst interval should not retarget the band; three should
+    for i in range(2):
+        t += 0.2
+        ctl.record_tokens(t, 600, 0.05)   # ~3000 TPS
+        ctl.maybe_tick(t + 1e-3)
+    assert ctl.band == band0
+    for i in range(3):
+        t += 0.2
+        ctl.record_tokens(t, 600, 0.05)
+        ctl.maybe_tick(t + 1e-3)
+    assert ctl.band != band0
+
+
+# -- telemetry ------------------------------------------------------------------------------
+
+def test_tps_meter_window():
+    m = TPSMeter(0.2)
+    m.record_tokens(0.0, 10)
+    m.record_tokens(0.1, 10)
+    assert m.tps(0.1) == pytest.approx(100.0)
+    assert m.tps(10.0) == 0.0
+
+
+def test_tbt_p95():
+    m = TBTMeter(10.0)
+    for i in range(100):
+        m.record_tbt(i * 0.01, 0.01 * (1 + i % 10))
+    assert 0.08 <= m.p95(1.0) <= 0.11

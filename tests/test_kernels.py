@@ -1,0 +1,160 @@
+"""Per-kernel tests: shape/dtype sweeps + hypothesis, asserting allclose
+against the pure-jnp oracles (interpret mode executes the kernel body in
+Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels import ref
+from repro.models.kvcache import ring_slot_positions
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _qkv(B, Hq, KH, Sq, Sk, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KH, Sk, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KH, Sk, hd)).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # B, Hq, KH, S, hd, window, softcap
+    (2, 4, 4, 256, 64, 0, 0.0),          # MHA
+    (1, 8, 2, 256, 128, 0, 0.0),         # GQA 4:1
+    (1, 16, 1, 128, 128, 0, 0.0),        # MQA
+    (2, 4, 2, 384, 64, 128, 0.0),        # sliding window (mixtral-style)
+    (1, 2, 2, 256, 256, 0, 50.0),        # softcap + hd 256 (gemma2-style)
+    (1, 4, 4, 512, 64, 256, 30.0),       # window + softcap
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Hq, KH, S, hd, win, cap = case
+    q, k, v = _qkv(B, Hq, KH, S, S, hd, dtype)
+    out = flash_attention(q, k, v, causal=True, window=win, softcap=cap,
+                          interpret=True)
+    want = ref.reference_attention(q, k, v, causal=True, window=win,
+                                   softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block):
+    bq, bk = block
+    q, k, v = _qkv(1, 4, 4, 256, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+DECODE_CASES = [
+    (2, 8, 2, 512, 64, 0, 300),
+    (1, 16, 8, 256, 128, 0, 255),
+    (2, 4, 4, 512, 64, 128, 700),    # ring buffer wrapped (pos >= Sk)
+    (3, 8, 1, 256, 128, 0, 60),      # partially filled cache
+    (1, 16, 16, 256, 256, 0, 100),   # MHA, hd 256
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    B, Hq, KH, Sk, hd, win, pos = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KH, Sk, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KH, Sk, hd)).astype(dtype)
+    kp = jnp.broadcast_to(ring_slot_positions(Sk, pos + 1)[None], (B, Sk))
+    qp = jnp.full((B,), pos, jnp.int32)
+    out = decode_attention(q, k, v, kp, qp, window=win, interpret=True,
+                           block_k=128)
+    want = ref.reference_decode_attention(q, k, v, kp, qp, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    g=st.sampled_from([1, 2, 4]),
+    kh=st.sampled_from([1, 2, 4]),
+    nblk=st.integers(1, 3),
+    hd=st.sampled_from([64, 128]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(B, g, kh, nblk, hd, causal):
+    """Property: kernel == oracle across random GQA geometry."""
+    S = 128 * nblk
+    q, k, v = _qkv(B, g * kh, kh, S, S, hd, jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    g=st.sampled_from([1, 2, 8]),
+    kh=st.sampled_from([1, 4]),
+    pos=st.integers(0, 1000),
+    win=st.sampled_from([0, 128]),
+)
+def test_decode_attention_property(B, g, kh, pos, win):
+    Sk = 512
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, g * kh, 64))
+    k = jax.random.normal(ks[1], (B, kh, Sk, 64))
+    v = jax.random.normal(ks[2], (B, kh, Sk, 64))
+    kp = jnp.broadcast_to(ring_slot_positions(Sk, pos + 1)[None], (B, Sk))
+    qp = jnp.full((B,), pos, jnp.int32)
+    out = decode_attention(q, k, v, kp, qp, window=win, interpret=True,
+                           block_k=128)
+    want = ref.reference_decode_attention(q, k, v, kp, qp, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_decode_attention_q8_matches_dequantized_oracle():
+    """int8-KV kernel == fp oracle on the dequantized cache (kernel-level
+    counterpart of the kv_quant serving feature)."""
+    from repro.kernels.decode_attention_q8 import decode_attention_q8
+    from repro.models.kvcache import quantize_kv, dequantize_kv
+    for (B, Hq, KH, Sk, hd, win, pos) in [(2, 8, 2, 512, 64, 0, 300),
+                                          (1, 16, 8, 256, 128, 128, 700)]:
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd))
+        k = jax.random.normal(ks[1], (B, KH, Sk, hd))
+        v = jax.random.normal(ks[2], (B, KH, Sk, hd))
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        kp = jnp.broadcast_to(ring_slot_positions(Sk, pos + 1)[None], (B, Sk))
+        qp = jnp.full((B,), pos, jnp.int32)
+        out = decode_attention_q8(q, kq, ksc, vq, vsc, kp, qp, window=win,
+                                  interpret=True, block_k=128)
+        kd = dequantize_kv(kq, ksc, jnp.float32)
+        vd = dequantize_kv(vq, vsc, jnp.float32)
+        want = ref.reference_decode_attention(q, kd, vd, kp, qp, window=win)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_rmsnorm_kernel_matches_ref():
+    from repro.kernels.rmsnorm import rmsnorm as rms_kernel
+    from repro.models.layers import rmsnorm as rms_ref
+    for shape in [(4, 37, 256), (2, 128, 512), (3, 64)]:
+        x = jax.random.normal(KEY, shape)
+        w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],)) + 1.0
+        out = rms_kernel(x, w, interpret=True, block_rows=64)
+        want = rms_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (A100_SXM4_40G, CubicPowerModel, DualLoopController,
+                        QuadraticLatencyModel, PrefillOptimizer, TPSFreqTable,
+                        make_router)
+from repro.models.kvcache import ring_slot_positions
+from repro.models.moe import capacity, _slots
+from repro.models.config import ModelConfig
+
+HW = A100_SXM4_40G
+
+
+# -- ring buffer invariants ------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(buf=st.integers(1, 512), pos=st.integers(0, 5000))
+def test_ring_positions_invariants(buf, pos):
+    """Slot positions are exactly the last min(buf, n) written positions,
+    each stored at slot p % buf."""
+    p = np.asarray(ring_slot_positions(buf, pos))
+    n = pos  # number of tokens written (positions 0..pos-1)
+    expected = set(range(max(0, n - buf), n))
+    got = {int(x) for x in p if x >= 0}
+    assert got == expected
+    for j, v in enumerate(p):
+        if v >= 0:
+            assert v % buf == j
+
+
+# -- router ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(lengths=st.lists(st.integers(1, 20000), min_size=1, max_size=50))
+def test_router_total_partition(lengths):
+    r = make_router(True)
+    for L in lengths:
+        c = r.classify(L)
+        assert c in (0, 1)
+        assert (c == 0) == (L <= r.thresholds[0])
+
+
+# -- optimizer invariants -----------------------------------------------------------------
+
+def _opt():
+    L = np.linspace(32, 8192, 30)
+    lat = QuadraticLatencyModel.fit(L, 1e-8 * L ** 2 + 1e-4 * L + 0.002, HW.f_max)
+    f = HW.ladder()
+    pwr = CubicPowerModel.fit(f, 60 + 280 * (f / HW.f_max) ** 3, HW.f_max,
+                              HW.p_idle)
+    return PrefillOptimizer(lat, pwr, HW, HW.p_idle)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lengths=st.lists(st.integers(16, 8192), min_size=0, max_size=20),
+    D=st.floats(0.05, 5.0),
+)
+def test_optimizer_always_on_ladder_and_feasible(lengths, D):
+    opt = _opt()
+    f, info = opt.choose_frequency(lengths, D)
+    ladder = HW.ladder()
+    assert np.min(np.abs(ladder - f)) < 1e-6
+    if info["feasible"] and lengths:
+        assert opt.busy_time(lengths, f) <= D * 1.001
+
+
+@settings(max_examples=30, deadline=None)
+@given(T_ref=st.floats(0.01, 2.0), D=st.floats(0.5, 10.0))
+def test_energy_model_nonnegative_and_bounded(T_ref, D):
+    opt = _opt()
+    E = opt.energy_total(T_ref, D, HW.ladder())
+    assert np.all(E > 0)
+    assert np.all(np.isfinite(E))
+
+
+# -- MoE slot assignment ---------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    S=st.integers(4, 64),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_moe_slots_unique_per_expert(S, E, k, seed):
+    """No two (token, choice) pairs share an (expert, slot) pair."""
+    cfg = ModelConfig(name="t", arch_type="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, head_dim=16, d_ff=32,
+                      vocab_size=32, num_experts=E, experts_per_token=k)
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, E, (1, S, k)), jnp.int32)
+    slots = np.asarray(_slots(cfg, idx, C=10 ** 9))
+    pairs = set()
+    for s in range(S):
+        for j in range(k):
+            key = (int(idx[0, s, j]), int(slots[0, s, j]))
+            assert key not in pairs
+            pairs.add(key)
+    # slots within each expert are dense 0..count-1
+    for e in range(E):
+        got = sorted(int(slots[0, s, j]) for s in range(S) for j in range(k)
+                     if int(idx[0, s, j]) == e)
+        assert got == list(range(len(got)))
+
+
+# -- controller invariants ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_controller_never_leaves_ladder_under_random_load(seed):
+    tps = [200, 1000, 3000]
+    freqs = HW.ladder()[::4]
+    p95 = 0.08 * (np.asarray(tps)[:, None] / 3000.0) * (HW.f_max / freqs[None, :])
+    ept = np.tile(np.linspace(0.3, 1.0, len(freqs)), (3, 1))
+    table = TPSFreqTable.from_profile(tps, freqs, p95, ept, 0.1, HW.f_step)
+    ctl = DualLoopController(HW, table)
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    prev_f = ctl.freq
+    for _ in range(500):
+        t += float(rng.uniform(0.001, 0.05))
+        ctl.record_tokens(t, int(rng.integers(0, 50)),
+                          float(rng.uniform(0.005, 0.3)))
+        f = ctl.maybe_tick(t)
+        assert HW.f_min <= f <= HW.f_max
+        lo, _, hi = ctl.band
+        assert lo - 1e-9 <= f <= hi + 1e-9
+        prev_f = f

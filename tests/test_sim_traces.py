@@ -1,0 +1,100 @@
+"""Trace synthesis + simulator plumbing tests."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SLOConfig
+from repro.core.hardware import A100_SXM4_40G
+from repro.data import alibaba_chat, azure_code, azure_conv, get_trace
+from repro.sim import (NodeConfig, PlantModel, ReplayConfig, build_simulator,
+                       compute_metrics, profile_decode_table, profile_power,
+                       profile_prefill_latency)
+
+HW = A100_SXM4_40G
+
+
+def test_trace_reproducible_and_rate():
+    a = alibaba_chat(5, duration=200, seed=7)
+    b = alibaba_chat(5, duration=200, seed=7)
+    assert [r.prompt_len for r in a] == [r.prompt_len for r in b]
+    rate = len(a) / 200
+    assert 3.5 <= rate <= 6.5
+
+
+def test_trace_families_differ():
+    code = azure_code(5, duration=300)
+    conv = azure_conv(5, duration=300)
+    mp_code = np.median([r.prompt_len for r in code])
+    mp_conv = np.median([r.prompt_len for r in conv])
+    mo_code = np.median([r.output_len for r in code])
+    mo_conv = np.median([r.output_len for r in conv])
+    assert mp_code > mp_conv          # code prompts are longer
+    assert mo_code < mo_conv          # code outputs are shorter
+
+
+def test_plant_phase_asymmetry():
+    """Prefill is compute-bound (latency ~1/f); decode is memory-bound
+    (latency saturates with f) — paper §2.2, derived not asserted."""
+    plant = PlantModel(cfg=get_config("qwen3-14b"), hw=HW, n_chips=2,
+                       noise_sigma=0.0)
+    t_lo = plant.prefill_latency(2048, HW.f_min)
+    t_hi = plant.prefill_latency(2048, HW.f_max)
+    assert t_lo / t_hi > 3.0          # strong frequency scaling
+    d_lo = plant.decode_step_latency(8, 1000, HW.f_max / 2)
+    d_hi = plant.decode_step_latency(8, 1000, HW.f_max)
+    assert d_lo / d_hi < 1.3          # saturating (memory-bound)
+
+
+def test_plant_energy_u_curve():
+    """Fixed-clock total energy on a real trace is convex (Fig. 3c)."""
+    cfg = get_config("qwen3-14b")
+    trace = get_trace("chat_8qps", duration=60)
+    from repro.sim import replay
+    energies = []
+    for f in (HW.f_min, 660.0, HW.f_max):
+        m = replay(cfg, trace, ReplayConfig(governor="fixed", fixed_freq=f))
+        energies.append(m.total_energy_j)
+    assert energies[1] < energies[0] and energies[1] < energies[2], energies
+
+
+def test_profiling_models_fit_well():
+    plant = PlantModel(cfg=get_config("qwen3-14b"), hw=HW, n_chips=2,
+                       noise_sigma=0.01, seed=3)
+    lat = profile_prefill_latency(plant)
+    L = np.linspace(64, 8192, 20)
+    t = [plant.prefill_latency(int(x), HW.f_max) for x in L]
+    assert lat.r2(L, t) > 0.95
+    pwr = profile_power(plant)
+    # cubic power fit is monotone increasing over the ladder
+    P = pwr.predict(HW.ladder())
+    assert np.all(np.diff(P) > -1.0)
+
+
+def test_decode_table_monotone():
+    """Higher TPS buckets never get lower clocks."""
+    plant = PlantModel(cfg=get_config("qwen3-14b"), hw=HW, n_chips=1,
+                       noise_sigma=0.0)
+    table = profile_decode_table(plant)
+    assert np.all(np.diff(table.freq_for) >= -plant.hw.f_step / 2)
+
+
+def test_energy_meter_accounts_full_horizon():
+    cfg = get_config("qwen3-14b")
+    trace = get_trace("chat_1qps", duration=60)
+    sim = build_simulator(cfg, HW, ReplayConfig(governor="defaultNV"))
+    res = sim.run([copy.copy(r) for r in trace])
+    # every worker's energy covers the sim horizon at >= idle power
+    for w in sim.prefill + sim.decode:
+        min_j = w.plant.idle_power * res.duration * 0.99
+        assert w.energy.total_j >= min_j
+
+
+def test_all_requests_complete():
+    cfg = get_config("qwen3-14b")
+    trace = get_trace("chat_3qps", duration=60)
+    sim = build_simulator(cfg, HW, ReplayConfig(governor="greenllm"))
+    res = sim.run([copy.copy(r) for r in trace])
+    assert all(r.finish >= 0 for r in res.requests)
+    assert all(r.tokens_emitted == r.output_len for r in res.requests)
