@@ -19,8 +19,10 @@ def main() -> None:
 
     from .paper_figs import ALL_BENCHES
     from .roofline import bench_roofline
+    from .serving_engine import bench_serving_engine_quick
 
     benches = list(ALL_BENCHES)
+    benches.append(bench_serving_engine_quick)
     if not args.skip_roofline:
         benches.append(bench_roofline)
 

@@ -1,0 +1,163 @@
+"""Serving-engine data-plane benchmark: slot-native vs the pre-PR (legacy)
+engine, wall-clock measured on the smoke config.
+
+Three metrics per (governor, batch):
+
+* ``decode``  — steady-state decode tokens/s with a full batch of
+  never-ending streams (no admissions in the window): isolates the jitted
+  block decode (ctx-bucketed, scanned, donated, no per-token host sync)
+  against the legacy per-step host-synced loop.
+* ``admit``   — admissions/s: jitted bucketed slot prefill vs the legacy
+  eager prefill + fresh per-request cache + host-side full-batch splice.
+* ``serve``   — sustained serving tokens/s with continuous batching churn
+  (finite outputs, streams join/leave): the end-to-end engine number.
+
+    PYTHONPATH=src python benchmarks/serving_engine.py [--quick]
+        [--arch qwen2-1.5b] [--batches 1,4,8] [--governors greenllm,defaultnv]
+
+Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def _engine(cfg, params, *, batch, governor, slot_native, max_len=256):
+    from repro.serving import EngineConfig, ServingEngine
+    return ServingEngine(cfg, params=params, ecfg=EngineConfig(
+        max_batch=batch, max_len=max_len, governor=governor,
+        slot_native=slot_native))
+
+
+def _fill(eng, batch, *, prompt_len=24, output_len=10 ** 9, rng=None):
+    from repro.core import Request
+    for i in range(batch):
+        pl = prompt_len if rng is None else int(rng.integers(8, 100))
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=pl,
+                           output_len=output_len))
+    eng._admit()
+
+
+def bench_decode(cfg, params, *, batch, governor, slot_native, steps):
+    eng = _engine(cfg, params, batch=batch, governor=governor,
+                  slot_native=slot_native)
+    _fill(eng, batch)
+    # warm the (ctx, k) kernels outside the timed window
+    for _ in range(2):
+        eng._decode_block(16) if slot_native else eng._step_legacy()
+    jax.block_until_ready(eng._tok)
+    t0 = time.perf_counter()
+    if slot_native:
+        eng._decode_block(steps)
+    else:
+        for _ in range(steps):
+            eng._step_legacy()
+    jax.block_until_ready(eng.caches)
+    return batch * steps / (time.perf_counter() - t0)
+
+
+def bench_admit(cfg, params, *, governor, slot_native, n):
+    eng = _engine(cfg, params, batch=8, governor=governor,
+                  slot_native=slot_native)
+    from repro.core import Request
+    eng.submit(Request(rid=10 ** 6, arrival=0.0, prompt_len=24, output_len=4))
+    eng._admit()                       # compile warmup
+    eng._retire(list(eng.active.keys()))
+    jax.block_until_ready(eng._tok)
+    for i in range(n):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=24, output_len=4))
+    t0 = time.perf_counter()
+    while eng.pending:
+        eng._admit()
+        jax.block_until_ready(eng._tok)
+        eng._retire(list(eng.active.keys()))
+    return n / (time.perf_counter() - t0)
+
+
+def bench_serve(cfg, params, *, batch, governor, slot_native, nreq, out_len):
+    eng = _engine(cfg, params, batch=batch, governor=governor,
+                  slot_native=slot_native)
+    rng = np.random.default_rng(0)
+    _fill(eng, nreq, output_len=out_len, rng=rng)
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    jax.block_until_ready(eng._tok)
+    return nreq * out_len / (time.perf_counter() - t0)
+
+
+def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
+                         batches=(1, 4, 8), governors=("greenllm", "defaultnv")):
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config(arch).smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    steps = 48 if quick else 128
+    nreq = 12 if quick else 24
+    n_admit = 8 if quick else 16
+
+    def warm2(fn, *a, **kw):
+        # identical schedule -> identical (cfg, ctx, k) jit keys: the first
+        # pass compiles into the shared cache, the second is the measurement
+        fn(*a, **kw)
+        return fn(*a, **kw)
+
+    rows = []
+    for gov in governors:
+        for b in batches:
+            legacy = bench_decode(cfg, params, batch=b, governor=gov,
+                                  slot_native=False, steps=steps)
+            slot = warm2(bench_decode, cfg, params, batch=b, governor=gov,
+                         slot_native=True, steps=steps)
+            rows.append((f"engine_decode_b{b}_{gov}_legacy", 1e6 / legacy,
+                         f"{legacy:.0f}tok/s"))
+            rows.append((f"engine_decode_b{b}_{gov}_slot", 1e6 / slot,
+                         f"{slot:.0f}tok/s;speedup={slot / legacy:.1f}x"))
+        legacy = bench_admit(cfg, params, governor=gov, slot_native=False,
+                             n=n_admit)
+        slot = bench_admit(cfg, params, governor=gov, slot_native=True,
+                           n=n_admit)
+        rows.append((f"engine_admit_{gov}_legacy", 1e6 / legacy,
+                     f"{legacy:.1f}adm/s"))
+        rows.append((f"engine_admit_{gov}_slot", 1e6 / slot,
+                     f"{slot:.1f}adm/s;speedup={slot / legacy:.1f}x"))
+        b = max(batches)
+        legacy = bench_serve(cfg, params, batch=b, governor=gov,
+                             slot_native=False, nreq=nreq, out_len=32)
+        slot = warm2(bench_serve, cfg, params, batch=b, governor=gov,
+                     slot_native=True, nreq=nreq, out_len=32)
+        rows.append((f"engine_serve_b{b}_{gov}_legacy", 1e6 / legacy,
+                     f"{legacy:.0f}tok/s"))
+        rows.append((f"engine_serve_b{b}_{gov}_slot", 1e6 / slot,
+                     f"{slot:.0f}tok/s;speedup={slot / legacy:.1f}x"))
+    return rows
+
+
+def bench_serving_engine_quick():
+    """Registry entry for benchmarks.run (CI-sized)."""
+    return bench_serving_engine(quick=True, batches=(1, 8),
+                                governors=("defaultnv",))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batches", default="1,4,8")
+    ap.add_argument("--governors", default="greenllm,defaultnv")
+    args = ap.parse_args()
+    batches = tuple(int(x) for x in args.batches.split(","))
+    governors = tuple(args.governors.split(","))
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_serving_engine(
+            quick=args.quick, arch=args.arch, batches=batches,
+            governors=governors):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 
 @dataclasses.dataclass
@@ -17,6 +17,15 @@ class Request:
     finish: float = -1.0
     tokens_emitted: int = 0
     cls: str = ""              # routing class ("SM" | "L")
+    # real-execution engine state: tokenized prompt (np.ndarray int32) and
+    # the emitted output token ids, filled in by ServingEngine.  Excluded
+    # from __eq__: ndarray comparison would make Request equality raise.
+    prompt: Optional[object] = dataclasses.field(default=None, compare=False)
+    tokens: List[int] = dataclasses.field(default_factory=list, compare=False)
+
+    @property
+    def done(self) -> bool:
+        return self.finish >= 0
 
     @property
     def ttft(self) -> float:

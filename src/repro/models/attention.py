@@ -5,6 +5,12 @@ VMEM tiling for the TPU target; this module is the shardable XLA path used by
 the multi-pod dry-run and the CPU smoke tests.  Long sequences are processed
 in query chunks (flash-style streaming over the key dimension is left to the
 kernel; chunking bounds the materialized score block).
+
+Positions are *per batch row*: ``q_pos``/``k_pos`` are (B, S) and every mask
+(causal, sliding window, ring-buffer validity via negative ``k_pos``) is
+evaluated row-wise.  The slot-native serving engine relies on this: a batch
+mixes streams at different decode positions, and each row must attend to its
+own context — never reduce positions over the batch dimension here.
 """
 from __future__ import annotations
 

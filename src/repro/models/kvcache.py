@@ -69,12 +69,15 @@ def ring_slot_positions(buf_len: int, pos):
     ``buf_len`` when the *next* token to be written has position ``pos``
     (i.e. entries written so far are positions 0..pos-1, the last ``buf_len``
     of them resident).  Unfilled slots get negative values (masked).
-    Returns int32 (buf_len,).
+
+    ``pos`` may be a scalar (one shared stream position, returns (buf_len,))
+    or a (B,) vector of per-slot stream positions (returns (B, buf_len)).
     """
     j = jnp.arange(buf_len, dtype=jnp.int32)
-    last = pos - 1
+    last = jnp.asarray(pos, jnp.int32)[..., None] - 1   # (..., 1)
     p = last - ((last - j) % buf_len)
-    return jnp.where(p < 0, -1, p).astype(jnp.int32)
+    p = jnp.where(p < 0, -1, p).astype(jnp.int32)
+    return p if p.ndim > 1 else p.reshape(buf_len)
 
 
 def quantize_kv(x):
@@ -90,18 +93,31 @@ def dequantize_kv(q, scale, dtype=jnp.bfloat16):
 
 
 def cache_write_decode(cache: Dict, k_new, v_new, pos):
-    """Write one token (B,1,KH,hd) at position ``pos`` (traced scalar)."""
+    """Write one token (B,1,KH,hd) at position ``pos``.
+
+    ``pos`` is either a traced scalar (all rows share one stream position —
+    the lockstep path) or a (B,) int32 vector of per-slot positions (the
+    slot-native serving path: each row writes at its own ring slot).
+    """
     buf_len = cache["k"].shape[1]
-    slot = jnp.mod(pos, buf_len)
+    pos = jnp.asarray(pos)
     if "k_s" in cache:
         kq, ks = quantize_kv(k_new)
         vq, vs = quantize_kv(v_new)
-        return {
-            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
-            "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0, 0)),
-            "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0, 0)),
-        }
+        qcache = {"k": cache["k"], "v": cache["v"]}
+        scache = {"k": cache["k_s"], "v": cache["v_s"]}
+        out = cache_write_decode(qcache, kq, vq, pos)
+        sc = cache_write_decode(scache, ks, vs, pos)
+        return {"k": out["k"], "v": out["v"], "k_s": sc["k"], "v_s": sc["v"]}
+    if pos.ndim == 1:
+        B = k_new.shape[0]
+        slots = jnp.mod(pos, buf_len)
+        k = cache["k"].at[jnp.arange(B), slots].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[jnp.arange(B), slots].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+        return {"k": k, "v": v}
+    slot = jnp.mod(pos, buf_len)
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
                                      (0, slot, 0, 0))
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
@@ -145,13 +161,55 @@ def cache_write_prefill(cache: Dict, k_seq, v_seq):
     return {"k": k, "v": v}
 
 
+def cache_write_prefill_slot(cache: Dict, k_seq, v_seq, slot):
+    """Write a (bucket-padded) prefill sequence into ONE row of a batch cache.
+
+    ``cache`` leaves are batch-shaped (B, buf_len, KH, hd); ``k_seq``/``v_seq``
+    are (1, S_pad, KH, hd); ``slot`` is a traced row index.  Requires
+    S_pad <= buf_len (the serving engine guards buckets against the smallest
+    attention buffer and falls back to the reference path otherwise).  Pad
+    positions >= the true prompt length hold garbage K/V: they are masked by
+    the ring-position arithmetic until the decode loop overwrites each one at
+    exactly its position, so they are never read.
+    """
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k_seq)
+        vq, vs = quantize_kv(v_seq)
+        out = cache_write_prefill_slot({"k": cache["k"], "v": cache["v"]},
+                                       kq, vq, slot)
+        sc = cache_write_prefill_slot({"k": cache["k_s"], "v": cache["v_s"]},
+                                      ks, vs, slot)
+        return {"k": out["k"], "v": out["v"], "k_s": sc["k"], "v_s": sc["v"]}
+    S = k_seq.shape[1]
+    buf_len = cache["k"].shape[1]
+    assert S <= buf_len, (
+        f"slot prefill bucket {S} exceeds cache buffer {buf_len}")
+    k = jax.lax.dynamic_update_slice(cache["k"], k_seq.astype(cache["k"].dtype),
+                                     (slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_seq.astype(cache["v"].dtype),
+                                     (slot, 0, 0, 0))
+    return {"k": k, "v": v}
+
+
+def state_write_slot(batch_cache, one_cache, slot):
+    """Splice a single-row recurrent state (SSM / RG-LRU pytree, leading dim 1)
+    into the batch-shaped state pytree at row ``slot`` (traced)."""
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype), (slot,) + (0,) * (one.ndim - 1)),
+        batch_cache, one_cache)
+
+
 def cache_key_positions(cache: Dict, pos, batch: int):
     """Positions (B, buf_len) of cached keys when decoding token ``pos``.
 
     Handles both the full cache (buf_len >= pos: slot == position) and ring
     buffers uniformly — for a full buffer the ring arithmetic reduces to the
-    identity on filled slots.
+    identity on filled slots.  ``pos`` may be a scalar (shared position) or a
+    (B,) vector (slot-native serving: per-row key validity/masking).
     """
     buf_len = cache["k"].shape[1]
-    p = ring_slot_positions(buf_len, pos + 1)   # token pos already written
+    p = ring_slot_positions(buf_len, jnp.asarray(pos) + 1)  # pos already written
+    if p.ndim == 2:
+        return p
     return jnp.broadcast_to(p[None, :], (batch, buf_len))

@@ -243,7 +243,8 @@ def param_specs(cfg: ModelConfig, shd: ShardCtx) -> Dict:
 
 # -- block application ----------------------------------------------------------------
 
-def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos, shd):
+def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
+                shd, slot=None):
     B, S, _ = x.shape
     q = x @ p["attn"]["q"]
     k = x @ p["attn"]["k"]
@@ -289,7 +290,12 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos, sh
             out = shd.cs(out, "b", None, None, None)
     else:
         if mode == "prefill":
-            new_cache = KV.cache_write_prefill(cache, k, v)
+            if slot is not None:
+                # slot-native: write this prompt's K/V into one row of the
+                # batch cache; other rows flow through untouched.
+                new_cache = KV.cache_write_prefill_slot(cache, k, v, slot)
+            else:
+                new_cache = KV.cache_write_prefill(cache, k, v)
             buf_len = new_cache["k"].shape[1]
             if window == 0 and buf_len < S:
                 window = buf_len
@@ -303,7 +309,7 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos, sh
 
 
 def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
-                 cache, pos, shd):
+                 cache, pos, shd, slot=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(cfg, p["norm"], x)
@@ -311,12 +317,14 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
     if kind in (FULL_ATTN, LOCAL_ATTN):
         mix, new_cache = _apply_attn(cfg, p, h, kind, mode=mode,
                                      positions=positions, cache=cache,
-                                     pos=pos, shd=shd)
+                                     pos=pos, shd=shd, slot=slot)
     elif kind == SSM:
         if mode == "decode":
             mix, new_cache = ssm_decode_step(cfg, p["ssm"], h, cache)
         elif mode == "prefill":
             mix, new_cache = ssm_forward(cfg, p["ssm"], h, return_state=True)
+            if slot is not None:
+                new_cache = KV.state_write_slot(cache, new_cache, slot)
         else:
             mix = ssm_forward(cfg, p["ssm"], h)
     elif kind == RGLRU:
@@ -324,6 +332,8 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
             mix, new_cache = rglru_decode_step(cfg, p["rglru"], h, cache)
         elif mode == "prefill":
             mix, new_cache = rglru_forward(cfg, p["rglru"], h, return_state=True)
+            if slot is not None:
+                new_cache = KV.state_write_slot(cache, new_cache, slot)
         else:
             mix = rglru_forward(cfg, p["rglru"], h)
     else:
@@ -353,7 +363,7 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
 # -- stage execution -------------------------------------------------------------------
 
 def _run_stages(cfg: ModelConfig, params, x, *, mode, positions, caches, pos,
-                shd: ShardCtx, remat: bool):
+                shd: ShardCtx, remat: bool, slot=None):
     """caches: list (per stage) of stacked per-group caches or None."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -367,7 +377,7 @@ def _run_stages(cfg: ModelConfig, params, x, *, mode, positions, caches, pos,
                 c = group_c[j] if group_c is not None else None
                 x, nc, a = _apply_block(cfg, kind, group_p["blocks"][j], x,
                                         mode=mode, positions=positions,
-                                        cache=c, pos=pos, shd=shd)
+                                        cache=c, pos=pos, shd=shd, slot=slot)
                 auxs = auxs + a
                 outs.append(nc)
             return x, tuple(outs), auxs
@@ -515,9 +525,63 @@ def prefill(params, cfg: ModelConfig, tokens, caches, prefix_embeds=None,
     return logits, new_caches, x.shape[1]
 
 
+def prefill_into_slot(params, cfg: ModelConfig, tokens, length, caches, slot,
+                      shd: ShardCtx = NOSHARD):
+    """Bucket-padded prefill of ONE prompt written into row ``slot`` of the
+    shared batch caches, as a single jittable computation.
+
+    ``tokens`` is (1, S_pad): the prompt right-padded to a static bucket
+    length (a small set of buckets bounds compile count); ``length`` is the
+    true prompt length (traced scalar); ``slot`` is the traced batch-row
+    index.  K/V (and SSM/RG-LRU states) are written directly into the batch
+    cache row via ``dynamic_update_slice`` — no fresh per-request cache is
+    allocated and no full-batch splice happens on the host, so the caller can
+    donate ``caches`` and XLA updates them in place.  Pad positions >= length
+    hold garbage K/V that the position mask hides until the decode loop
+    overwrites them (see ``kvcache.cache_write_prefill_slot``).
+
+    Requires S_pad <= every attention buffer length (asserted at trace time);
+    longer prompts must take the reference ``prefill`` path.  Note for MoE
+    configs: pad tokens compete for expert capacity, so heavily-padded
+    prompts can differ from the unpadded reference unless capacity is loose.
+
+    Returns (last_logits (1, vocab), caches, next_pos == length).
+    """
+    x, positions = _embed_inputs(cfg, params, tokens, None, shd)
+    x, new_caches, _ = _run_stages(cfg, params, x, mode="prefill",
+                                   positions=positions, caches=caches,
+                                   pos=None, shd=shd, remat=False, slot=slot)
+    last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(length, jnp.int32) - 1,
+                                        1, axis=1)
+    last = L.apply_norm(cfg, params["final_norm"], last)
+    logits = L.unembed(cfg, params["embed"], last)[:, 0]
+    logits = shd.cs(logits, "b", "m")
+    return logits, new_caches, length
+
+
+def sample_tokens(logits, temperature: float = 0.0, key=None):
+    """On-device sampling: (B, vocab) logits -> (B,) int32 token ids.
+
+    ``temperature <= 0`` (or no key) is greedy argmax; otherwise categorical
+    sampling at the given temperature.  Kept inside the jitted serving step so
+    the steady-state decode loop never ships logits to the host.
+    """
+    if temperature > 0.0 and key is not None:
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
                 shd: ShardCtx = NOSHARD):
-    """tokens (B,1) at scalar position ``pos`` -> (logits (B,vocab), caches)."""
+    """tokens (B,1) -> (logits (B,vocab), caches).
+
+    ``pos`` is either a traced scalar (all rows decode at one shared stream
+    position — the lockstep path used by training-style eval) or a (B,) int32
+    vector of per-slot positions (slot-native serving: each row attends to its
+    own context length, RoPE/masks/cache-writes are per-row).
+    """
     B = tokens.shape[0]
     if shd.mesh is not None:
         # one-hot matmul lookup: with a vocab-sharded table this lowers to a
@@ -529,7 +593,8 @@ def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
             x = x * jnp.asarray(jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)), x.dtype)
     else:
         x = L.embed_tokens(cfg, params["embed"], tokens)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     if cfg.pos_embedding == "sincos":
         x = x + L.sincos_embedding(positions, cfg.d_model).astype(x.dtype)
     x = shd.cs(x, "b", None, None)

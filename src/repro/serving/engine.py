@@ -1,21 +1,46 @@
-"""Real-execution serving engine: actual JAX prefill/decode with continuous
-batching, driven by the same GreenLLM control plane as the simulator.
+"""Slot-native real-execution serving engine: fully-jitted continuous batching
+driven by the same GreenLLM control plane as the simulator.
 
-This is the integration layer that proves the controllers compose with the
-real model code: requests are tokenized (synthetic ids), routed by length,
-prefilled (real ``models.prefill``), then decoded step-by-step in a batched
-loop (real ``models.decode_step``) with stream join/leave between steps.
+Data-plane design (the hot path):
+
+* **Bucketed slot prefill** — prompts are right-padded to a small set of
+  power-of-two buckets (bounding compile count to O(log max_len)) and run
+  through ``models.prefill_into_slot``, which writes K/V (and SSM/RG-LRU
+  states) directly into one row of the shared batch cache via
+  ``dynamic_update_slice`` inside the jitted computation.  Admission never
+  allocates a per-request cache and never splices the full batch cache on the
+  host.  Prompts longer than every attention buffer (sliding-window /
+  long-context ring caches) fall back to the reference ``models.prefill`` +
+  host splice path.
+* **Donated decode step** — one ``jax.jit(..., donate_argnums=...)`` step
+  carries per-slot position vectors and an active-slot mask: each stream
+  attends to *its own* context (not the batch-wide ``max(pos)``), inactive
+  rows hold position, and the donated caches update in place instead of being
+  copied twice per token.
+* **On-device sampling** — greedy/temperature sampling is fused into the
+  jitted step; the sampled token feeds back as a device array, so the
+  steady-state loop (``run_until_drained``) dispatches blocks of steps with
+  **no per-token host transfer**: the per-slot token ids are drained once per
+  block, sized to the next stream join/leave event.
 
 On this CPU container the engine runs reduced models; *virtual time* for
 SLO/energy accounting comes from the calibrated plant model (wall-clock CPU
 time of a smoke-scale model says nothing about an A100/TPU), while the token
 *values* are produced by the real network.  On real hardware, set
-``use_wall_clock=True`` and the controllers consume measured latencies.
+``use_wall_clock=True`` to account with measured per-block latencies instead.
+
+``EngineConfig(slot_native=False)`` keeps the pre-slot data plane (per-request
+prefill + full-cache splice, per-step host sync, batch-wide ``max(pos)``) as a
+benchmark baseline; it is deprecated for serving because mixed-position
+batches attend to the wrong context there.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import functools
+import time
+import warnings
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,19 +48,121 @@ import numpy as np
 
 from repro.core import (DualLoopController, MaxFreqController, Request,
                         SLOConfig, make_router)
-from repro.models import ModelConfig, init_cache, init_params, prefill, decode_step
+from repro.models import (ModelConfig, init_cache, init_params, prefill,
+                          prefill_into_slot, decode_step, sample_tokens)
+from repro.models.config import FULL_ATTN, LOCAL_ATTN
+from repro.models.kvcache import attn_buffer_len
 from repro.sim import PlantModel
 from repro.sim.profiling import profile_decode_table
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
+
+# CPU XLA has no buffer donation; the jitted step is still correct, so keep
+# the log quiet on smoke runs (donation engages on TPU/GPU).
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+# -- jitted kernels (module level: JAX's global jit cache shares compiles
+# across engine instances; cfg/temp/ctx/k/max_len are static) -----------------
+
+def _sliceable(leaf_len: int, ctx: int, max_len: int) -> bool:
+    # only full-length attention buffers are position==slot and safe to
+    # truncate; windowed/long-context ring buffers are already bounded
+    return leaf_len == max_len and ctx < leaf_len
+
+
+def _slice_caches(caches, ctx: int, max_len: int):
+    out = []
+    for stage in caches:
+        blocks = []
+        for d in stage:
+            if "k" in d and _sliceable(d["k"].shape[2], ctx, max_len):
+                blocks.append({kk: vv[:, :, :ctx] for kk, vv in d.items()})
+            else:
+                blocks.append(d)
+        out.append(tuple(blocks))
+    return out
+
+
+def _unslice_caches(caches, sliced, ctx: int, max_len: int):
+    out = []
+    for stage, sstage in zip(caches, sliced):
+        blocks = []
+        for d, sd in zip(stage, sstage):
+            if "k" in d and _sliceable(d["k"].shape[2], ctx, max_len):
+                blocks.append({
+                    kk: jax.lax.dynamic_update_slice(
+                        d[kk], sd[kk], (0,) * d[kk].ndim)
+                    for kk in d})
+            else:
+                blocks.append(sd)
+        out.append(tuple(blocks))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
+                   donate_argnums=(7,))
+def _decode_block_kernel(cfg, temp, ctx, k, max_len,
+                         params, tok, caches, pos, active, key):
+    """k fused decode steps (lax.scan) over caches sliced to ``ctx`` positions.
+
+    One compile per (cfg, ctx_bucket, k_block).  While every active position
+    stays < ctx, the sliced cache behaves exactly like a max_len==ctx cache
+    (slot == position, nothing masked away), so the block is equivalent to k
+    single full-cache steps; the donated full caches are updated in place via
+    a slice-in/slice-out pair amortized over the k steps.
+    """
+    sliced = _slice_caches(caches, ctx, max_len)
+
+    def body(carry, _):
+        tok, sl, pos, key = carry
+        sub = None
+        if temp > 0.0:
+            key, sub = jax.random.split(key)
+        logits, sl = decode_step(params, cfg, tok[:, None], sl, pos)
+        nxt = sample_tokens(logits, temp, sub)
+        tok = jnp.where(active, nxt, tok)
+        pos = pos + active.astype(jnp.int32)
+        return (tok, sl, pos, key), tok
+
+    (tok, sliced, pos, key), toks = jax.lax.scan(
+        body, (tok, sliced, pos, key), None, length=k)
+    caches = _unslice_caches(caches, sliced, ctx, max_len)
+    return tok, caches, pos, key, toks
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _decode_legacy_kernel(cfg, params, tok, caches, pos):
+    return decode_step(params, cfg, tok, caches, pos)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(5,))
+def _prefill_kernel(cfg, temp, params, toks, length, caches, slot, tok, pos,
+                    key):
+    """Bucketed slot prefill + first-token sampling (one compile per bucket
+    size, carried by the static shape of ``toks``)."""
+    sub = None
+    if temp > 0.0:
+        key, sub = jax.random.split(key)
+    logits, caches, _ = prefill_into_slot(params, cfg, toks, length, caches,
+                                          slot)
+    ptok = sample_tokens(logits, temp, sub)[0]
+    tok = tok.at[slot].set(ptok)
+    pos = pos.at[slot].set(length)
+    return tok, caches, pos, key
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8
     max_len: int = 256
-    greedy: bool = True
+    greedy: bool = True             # False -> temperature sampling
+    temperature: float = 1.0        # used only when greedy=False
     governor: str = "greenllm"      # greenllm | defaultnv
-    use_wall_clock: bool = False
+    use_wall_clock: bool = False    # account measured latency per decode block
+    slot_native: bool = True        # False -> legacy data plane (benchmarks)
+    decode_block: int = 64          # max decode steps in flight per host drain
+    min_bucket: int = 16            # smallest prefill padding bucket
 
 
 class _Stream:
@@ -44,20 +171,19 @@ class _Stream:
         self.slot = slot
         self.last_token = last_token
         self.pos = pos
-        self.tokens: List[int] = []
 
 
 class ServingEngine:
     """Batched decode over a shared slotted KV cache (continuous batching)."""
 
     def __init__(self, cfg: ModelConfig, params=None, *,
-                 ecfg: EngineConfig = EngineConfig(),
+                 ecfg: Optional[EngineConfig] = None,
                  hw: HardwareProfile = A100_SXM4_40G, seed: int = 0,
                  plant_cfg: ModelConfig = None):
         # plant_cfg: config used for virtual-time/energy accounting (e.g. the
         # FULL model) while `cfg` (possibly reduced) produces real tokens.
         self.cfg = cfg
-        self.ecfg = ecfg
+        self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
         self.params = params if params is not None else init_params(
             jax.random.PRNGKey(seed), cfg)
         self.router = make_router(ecfg.governor.lower() != "defaultnv")
@@ -68,16 +194,61 @@ class ServingEngine:
             self.controller = DualLoopController(hw, table)
         else:
             self.controller = MaxFreqController(hw)
-        self.caches = init_cache(cfg, ecfg.max_batch, ecfg.max_len)
+
+        B = ecfg.max_batch
+        self.caches = init_cache(cfg, B, ecfg.max_len)
         self.active: Dict[int, _Stream] = {}
-        self.free_slots = list(range(ecfg.max_batch))
+        self.free_slots = list(range(B))
         self.pending: List[Request] = []
         self.vtime = 0.0
         self.energy_j = 0.0
         self._tbt: Dict[int, List[float]] = {}
+        self._completed = 0
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        # device-resident decode state (slot-native path)
+        self._tok = jnp.zeros((B,), jnp.int32)
+        self._pos = jnp.zeros((B,), jnp.int32)
+        self._active_host = np.zeros(B, bool)
+        self._active = jnp.asarray(self._active_host)
+        self._key = jax.random.PRNGKey(seed + 1)
+        self._temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
+
+        # prefill buckets: powers of two, capped by the smallest attention
+        # buffer (window / long-context ring) — longer prompts take the
+        # reference path — and by the prompt truncation length.
+        attn_kinds = [k for k in set(cfg.layer_kinds)
+                      if k in (FULL_ATTN, LOCAL_ATTN)]
+        slot_cap = min([attn_buffer_len(cfg, k, ecfg.max_len, False)
+                        for k in attn_kinds] or [ecfg.max_len])
+        cap = min(slot_cap, max(ecfg.max_len // 2, 1))
+        self.buckets: List[int] = []
+        b = ecfg.min_bucket
+        while b <= cap:
+            self.buckets.append(b)
+            b *= 2
+        if not self.buckets or self.buckets[-1] != cap:
+            # close the (largest_pow2, cap] gap: prompts are truncated to at
+            # most cap, so with a final cap-sized bucket nothing falls back
+            # to the legacy path for length alone
+            self.buckets.append(cap)
+
+        # context buckets for decode: attention cost is O(cache buffer), so
+        # the decode kernel runs over the cache sliced to the smallest bucket
+        # covering every active position in the block, then splices back.
+        self.ctx_buckets: List[int] = []
+        b = max(ecfg.min_bucket, 32)
+        while b < ecfg.max_len:
+            self.ctx_buckets.append(b)
+            b *= 2
+        self.ctx_buckets.append(ecfg.max_len)
+        # fixed block sizes (steps fused into one jitted lax.scan) bound the
+        # (ctx_bucket, k) compile count to |ctx_buckets| * |K_BLOCKS|
+        self._k_blocks = tuple(sorted({1, 4, 16, ecfg.decode_block},
+                                      reverse=True))
+        # (ctx, kb) kernels this engine has already dispatched: wall-clock
+        # accounting excludes a kernel's first block (XLA compile time would
+        # otherwise be billed as decode latency and wreck the controller)
+        self._warmed: set = set()
 
     # -- request intake --------------------------------------------------------
     def submit(self, req: Request, prompt_tokens: Optional[np.ndarray] = None):
@@ -86,82 +257,226 @@ class ServingEngine:
             rng = np.random.default_rng(req.rid)
             prompt_tokens = rng.integers(
                 0, self.cfg.vocab_size, size=max(req.prompt_len, 1))
-        req._prompt = np.asarray(prompt_tokens)[-self.ecfg.max_len // 2:]
+        req.prompt = np.asarray(prompt_tokens, np.int32)[-self.ecfg.max_len // 2:]
         self.pending.append(req)
+
+    def _account_prefill(self, req: Request):
+        t_pf = self.plant.prefill_latency(req.prompt_len, self.controller.freq)
+        p_pf = self.plant.prefill_power(req.prompt_len,
+                                        self.controller.freq, t_pf)
+        self.energy_j += t_pf * p_pf
+        self.vtime += t_pf
+        req.prefill_start = self.vtime - t_pf
+        req.first_token = self.vtime
+
+    def _start_stream(self, req: Request, slot: int, tok: int, pos: int):
+        st = _Stream(req, slot, tok, pos)
+        req.tokens.append(tok)
+        req.tokens_emitted = 1
+        self.active[slot] = st
+        self._active_host[slot] = True
+        self._active = jnp.asarray(self._active_host)
+
+    def _admit_slot(self, req: Request, slot: int):
+        prompt = req.prompt
+        L = len(prompt)
+        bucket = next(b for b in self.buckets if b >= L)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :L] = prompt
+        self._tok, self.caches, self._pos, self._key = _prefill_kernel(
+            self.cfg, self._temp,
+            self.params, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
+            self.caches, jnp.asarray(slot, jnp.int32),
+            self._tok, self._pos, self._key)
+        self._account_prefill(req)
+        # one tiny host read per admission (the first sampled token id)
+        self._start_stream(req, slot, int(self._tok[slot]), L)
+
+    def _admit_legacy(self, req: Request, slot: int):
+        """Reference path: per-request prefill + host-side batch-cache splice.
+
+        Used for prompts that exceed an attention ring buffer (bucketed slot
+        writes need S_pad <= buf_len) and by ``slot_native=False``.
+        """
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        caches = init_cache(self.cfg, 1, self.ecfg.max_len)
+        logits, caches, pos = prefill(self.params, self.cfg, toks, caches)
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot:slot + 1].set(one)
+            if full.ndim >= 2 else full, self.caches, caches)
+        sub = None
+        if self._temp > 0.0:
+            self._key, sub = jax.random.split(self._key)
+        tok = int(sample_tokens(logits, self._temp, sub)[0])
+        self._tok = self._tok.at[slot].set(tok)
+        self._pos = self._pos.at[slot].set(len(req.prompt))
+        self._account_prefill(req)
+        self._start_stream(req, slot, tok, len(req.prompt))
 
     def _admit(self):
         while self.pending and self.free_slots:
             req = self.pending.pop(0)
             slot = self.free_slots.pop(0)
-            toks = jnp.asarray(req._prompt, jnp.int32)[None]
-            caches = init_cache(self.cfg, 1, self.ecfg.max_len)
-            logits, caches, pos = prefill(self.params, self.cfg, toks, caches)
-            # splice the single-request cache into the batch cache at `slot`
-            self.caches = jax.tree.map(
-                lambda full, one: full.at[:, slot:slot + 1].set(one)
-                if full.ndim >= 2 else full, self.caches, caches)
-            tok = int(jnp.argmax(logits[0]))
-            t_pf = self.plant.prefill_latency(req.prompt_len, self.controller.freq)
-            p_pf = self.plant.prefill_power(req.prompt_len,
-                                            self.controller.freq, t_pf)
-            self.energy_j += t_pf * p_pf
-            self.vtime += t_pf
-            req.prefill_start = self.vtime - t_pf
-            req.first_token = self.vtime
-            st = _Stream(req, slot, tok, len(req._prompt))
-            st.tokens.append(tok)
-            req.tokens_emitted = 1
-            self.active[slot] = st
+            if self.ecfg.slot_native and len(req.prompt) <= self.buckets[-1]:
+                self._admit_slot(req, slot)
+            else:
+                self._admit_legacy(req, slot)
 
-    # -- one decode step over all active streams ----------------------------------
-    def step(self) -> int:
-        self._admit()
-        if not self.active:
+    # -- decode ----------------------------------------------------------------
+    def _account_decode_step(self, batch: int, ctx: float, dur=None) -> float:
+        f = self.controller.maybe_tick(self.vtime)
+        if dur is None:
+            dur = self.plant.decode_step_latency(batch, ctx, f)
+        self.energy_j += dur * self.plant.decode_power(batch, ctx, f, dur)
+        self.vtime += dur
+        self.controller.record_tokens(self.vtime, batch, dur)
+        return dur
+
+    def _finish_check(self, st: _Stream) -> bool:
+        if (st.req.tokens_emitted >= st.req.output_len
+                or st.pos >= self.ecfg.max_len - 1):
+            st.req.finish = self.vtime
+            self._completed += 1
+            return True
+        return False
+
+    def _retire(self, slots: List[int]):
+        for slot in slots:
+            self.free_slots.append(slot)
+            del self.active[slot]
+            self._active_host[slot] = False
+        if slots:
+            self._active = jnp.asarray(self._active_host)
+
+    def _decode_block(self, k: int) -> int:
+        """Run ``k`` decode steps with a single host drain at the end.
+
+        The batch composition is fixed for the block (the caller sizes ``k``
+        to the next join/leave event), so virtual-time accounting needs no
+        device data and the jitted steps pipeline without a host sync.
+        """
+        snapshot = list(self.active.items())
+        batch = len(snapshot)
+        if batch == 0:
             return 0
+        max_pos = max(st.pos for st in self.active.values())
+        wall = self.ecfg.use_wall_clock
+        toks_dev = []
+        durs: List[Optional[float]] = []   # per-step; None -> plant model
+        left = k
+        while left > 0:
+            # fill the current ctx bucket before stepping up to the next one:
+            # attention cost is O(ctx), so prefer many steps at small ctx
+            ctx = next((c for c in self.ctx_buckets if c > max_pos),
+                       self.ecfg.max_len)
+            room = max(ctx - max_pos, 1)
+            kb = next((b for b in self._k_blocks if b <= min(left, room)), 1)
+            t0 = time.perf_counter() if wall else 0.0
+            (self._tok, self.caches, self._pos, self._key, tk) = \
+                _decode_block_kernel(
+                    self.cfg, self._temp, ctx, kb, self.ecfg.max_len,
+                    self.params, self._tok, self.caches, self._pos,
+                    self._active, self._key)
+            toks_dev.append(tk)        # (kb, B) device, drained at block end
+            if wall:
+                # wall-clock mode syncs per chunk (still amortized over kb
+                # steps); a kernel's first chunk includes compile time, so
+                # bill those steps to the plant model instead
+                jax.block_until_ready(tk)
+                seen = (ctx, kb) in self._warmed
+                self._warmed.add((ctx, kb))
+                dt = (time.perf_counter() - t0) / kb
+                durs.extend([dt if seen else None] * kb)
+            else:
+                durs.extend([None] * kb)
+            max_pos += kb
+            left -= kb
+        # single drain per block: (k, B) int32
+        toks = np.concatenate(jax.device_get(toks_dev), axis=0)
+        done: List[int] = []
+        for i in range(k):
+            ctx = float(np.mean([st.pos for st in self.active.values()
+                                 if st.slot not in done]))
+            dur = self._account_decode_step(batch - len(done), ctx, durs[i])
+            for slot, st in snapshot:
+                if slot in done:
+                    continue
+                st.last_token = int(toks[i, slot])
+                st.req.tokens.append(st.last_token)
+                st.pos += 1
+                st.req.tokens_emitted += 1
+                self._tbt.setdefault(st.req.rid, []).append(dur)
+                if self._finish_check(st):
+                    done.append(slot)
+        self._retire(done)
+        return batch
+
+    def _step_legacy(self) -> int:
+        """Pre-slot data plane: host argmax + batch-wide max(pos).  Kept only
+        as the benchmark baseline; wrong for mixed-position batches."""
         B = self.ecfg.max_batch
         tok = np.zeros((B, 1), np.int32)
         for slot, st in self.active.items():
             tok[slot, 0] = st.last_token
         pos = max(st.pos for st in self.active.values())
-        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
-                                           self.caches, jnp.asarray(pos))
+        logits, self.caches = _decode_legacy_kernel(
+            self.cfg, self.params, jnp.asarray(tok), self.caches,
+            jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         batch = len(self.active)
         ctx = float(np.mean([st.pos for st in self.active.values()]))
-        f = self.controller.maybe_tick(self.vtime)
-        dur = self.plant.decode_step_latency(batch, ctx, f)
-        self.energy_j += dur * self.plant.decode_power(batch, ctx, f, dur)
-        self.vtime += dur
-        self.controller.record_tokens(self.vtime, batch, dur)
+        dur = self._account_decode_step(batch, ctx)
         done = []
         for slot, st in self.active.items():
             st.last_token = int(nxt[slot])
-            st.tokens.append(st.last_token)
+            st.req.tokens.append(st.last_token)
             st.pos += 1
             st.req.tokens_emitted += 1
             self._tbt.setdefault(st.req.rid, []).append(dur)
-            if (st.req.tokens_emitted >= st.req.output_len
-                    or st.pos >= self.ecfg.max_len - 1):
-                st.req.finish = self.vtime
+            if self._finish_check(st):
                 done.append(slot)
-        for slot in done:
-            self.free_slots.append(slot)
-            del self.active[slot]
+        self._retire(done)
         return batch
+
+    def step(self) -> int:
+        """Admit + one decode step over all active streams."""
+        self._admit()
+        if not self.active:
+            return 0
+        if not self.ecfg.slot_native:
+            return self._step_legacy()
+        return self._decode_block(1)
+
+    def _horizon(self) -> int:
+        """Steps until the next guaranteed stream leave (no joins possible:
+        the caller admits first)."""
+        rem_out = min(max(st.req.output_len - st.req.tokens_emitted, 1)
+                      for st in self.active.values())
+        rem_len = min(self.ecfg.max_len - 1 - st.pos
+                      for st in self.active.values())
+        return max(1, min(rem_out, rem_len, self.ecfg.decode_block))
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
         steps = 0
         while (self.pending or self.active) and steps < max_steps:
-            if self.step() == 0 and not self.pending:
+            self._admit()
+            if not self.active:
                 break
-            steps += 1
+            if not self.ecfg.slot_native:
+                self._step_legacy()
+                steps += 1
+                continue
+            k = min(self._horizon(), max_steps - steps)
+            self._decode_block(max(k, 1))
+            steps += max(k, 1)
         return self.stats()
 
     def stats(self) -> Dict:
-        reqs = list(self._tbt)
         tbts = [x for v in self._tbt.values() for x in v]
         return {
-            "completed": len(reqs),
+            "completed": self._completed,
+            "pending": len(self.pending),
+            "active": len(self.active),
             "vtime_s": self.vtime,
             "energy_j": self.energy_j,
             "p95_tbt_ms": float(np.percentile(tbts, 95)) * 1e3 if tbts else 0,

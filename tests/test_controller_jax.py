@@ -3,6 +3,10 @@ on identical 20 ms-aggregated telemetry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dep (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import A100_SXM4_40G as HW, DualLoopController, TPSFreqTable

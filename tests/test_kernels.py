@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dep (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention

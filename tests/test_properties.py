@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dep (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (A100_SXM4_40G, CubicPowerModel, DualLoopController,

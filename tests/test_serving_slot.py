@@ -1,0 +1,203 @@
+"""Slot-native serving engine tests: token-for-token equivalence against the
+per-request reference path (prefill + scalar-pos decode_step), admission
+allocation behavior, jaxpr shape of the slot prefill, and stats accounting.
+
+The two-stream scenarios admit requests at different times so the batch holds
+streams at *different* positions — a regression guard for the old engine's
+batch-wide ``max(pos)`` decode bug.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Request
+from repro.models import (init_params, init_cache, prefill, prefill_into_slot,
+                          decode_step)
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, ServingEngine
+import repro.serving.engine as engine_mod
+
+KEY = jax.random.PRNGKey(0)
+MAXLEN = 96
+
+
+def _cfg(variant: str) -> ModelConfig:
+    kw = dict(name=f"t-{variant}", arch_type="dense", num_layers=2, d_model=64,
+              num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+              vocab_size=128, dtype="float32", max_seq=512)
+    if variant == "gqa":
+        kw["num_kv_heads"] = 2
+    elif variant == "kv_quant":
+        kw.update(num_kv_heads=2, kv_quant=True)
+    elif variant == "local":
+        kw.update(block_pattern=("local", "full"), window=16)
+    return ModelConfig(**kw)
+
+
+def _reference_tokens(params, cfg, prompt, output_len):
+    """Greedy tokens from the unbatched, unpadded reference path."""
+    caches = init_cache(cfg, 1, MAXLEN)
+    lg, caches, pos = prefill(params, cfg,
+                              jnp.asarray(prompt, jnp.int32)[None], caches)
+    toks = [int(jnp.argmax(lg[0]))]
+    while len(toks) < max(output_len, 2) and pos < MAXLEN - 1:
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 caches, jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
+def _engine(cfg, params, **kw):
+    return ServingEngine(cfg, params=params,
+                         ecfg=EngineConfig(max_batch=4, max_len=MAXLEN,
+                                           governor="defaultnv", **kw))
+
+
+@pytest.mark.parametrize("variant", ["full", "gqa", "kv_quant", "local"])
+def test_slot_path_matches_reference_mixed_positions(variant):
+    """Two streams admitted at different positions produce token-for-token
+    the same output as decoding each request alone."""
+    cfg = _cfg(variant)
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(0, cfg.vocab_size, size=19)
+    p1 = rng.integers(0, cfg.vocab_size, size=7)
+    r0 = Request(rid=0, arrival=0.0, prompt_len=len(p0), output_len=14)
+    r1 = Request(rid=1, arrival=0.0, prompt_len=len(p1), output_len=9)
+
+    eng = _engine(cfg, params)
+    eng.submit(r0, p0)
+    for _ in range(5):        # r0 decodes alone; r1 joins at a later position
+        eng.step()
+    eng.submit(r1, p1)
+    eng.run_until_drained()
+
+    assert r0.tokens == _reference_tokens(params, cfg, p0, r0.output_len)
+    assert r1.tokens == _reference_tokens(params, cfg, p1, r1.output_len)
+
+
+def test_windowed_prompt_falls_back_to_reference_admission():
+    """Prompts longer than a sliding-window buffer can't take the bucketed
+    slot write; the engine must route them through the reference prefill and
+    still decode correctly in the shared batch."""
+    cfg = _cfg("local")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(5)
+    p0 = rng.integers(0, cfg.vocab_size, size=33)   # > window=16 -> fallback
+    p1 = rng.integers(0, cfg.vocab_size, size=9)    # bucketed
+    r0 = Request(rid=0, arrival=0.0, prompt_len=len(p0), output_len=8)
+    r1 = Request(rid=1, arrival=0.0, prompt_len=len(p1), output_len=8)
+    eng = _engine(cfg, params)
+    assert eng.buckets[-1] == 16
+    eng.submit(r0, p0)
+    eng.step()
+    eng.submit(r1, p1)
+    eng.run_until_drained()
+    assert r0.tokens == _reference_tokens(params, cfg, p0, r0.output_len)
+    assert r1.tokens == _reference_tokens(params, cfg, p1, r1.output_len)
+
+
+def test_admission_allocates_no_fresh_cache(monkeypatch):
+    """Slot-native admission writes into the existing batch cache: after
+    engine construction, init_cache must never be called again (the old
+    engine allocated a per-request cache and spliced the full batch cache
+    on every admission)."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params)
+    calls = []
+    monkeypatch.setattr(engine_mod, "init_cache",
+                        lambda *a, **k: calls.append(a) or init_cache(*a, **k))
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=12, output_len=6),
+                   rng.integers(0, cfg.vocab_size, size=12))
+    eng.run_until_drained()
+    assert calls == []
+
+
+def test_slot_prefill_jaxpr_updates_in_place():
+    """The jitted slot prefill lowers cache writes to dynamic_update_slice on
+    the batch cache (donation-friendly in-place update), not full-cache
+    rebuilds."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    caches = init_cache(cfg, 4, MAXLEN)
+    toks = jnp.zeros((1, 16), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda p, t, l, c, s: prefill_into_slot(p, cfg, t, l, c, s))(
+        params, toks, jnp.asarray(11), caches, jnp.asarray(2))
+    assert "dynamic_update_slice" in str(jaxpr)
+
+
+def test_engine_config_not_shared_between_instances():
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    e1 = _engine(cfg, params)
+    e2 = _engine(cfg, params)
+    assert e1.ecfg is not e2.ecfg
+    e1.ecfg.max_len = 17
+    assert e2.ecfg.max_len == MAXLEN
+
+
+def test_stats_counts_finished_not_started():
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params)
+    for i in range(3):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=8, output_len=20))
+    eng.step()                       # everyone admitted, nobody finished
+    s = eng.stats()
+    assert s["completed"] == 0
+    assert s["active"] == 3
+    assert s["pending"] == 0
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["completed"] == 3
+    assert s["active"] == 0
+
+
+def test_bucket_list_covers_truncation_cap(monkeypatch):
+    """Prompts are truncated to max_len//2, so the bucket list must reach
+    that cap (not stop at the last power of two below it) — otherwise
+    lengths in (largest_pow2, cap] silently fall back to the legacy path."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = ServingEngine(cfg, params=params,
+                        ecfg=EngineConfig(max_batch=2, max_len=192,
+                                          governor="defaultnv"))
+    assert eng.buckets[-1] == 96
+    calls = []
+    monkeypatch.setattr(engine_mod, "init_cache",
+                        lambda *a, **k: calls.append(a) or init_cache(*a, **k))
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=90, output_len=4))
+    eng.run_until_drained()
+    assert calls == []          # 90 > 64 but <= 96: still slot admission
+
+
+def test_wall_clock_mode_drains():
+    """use_wall_clock=True accounts measured block latency (first-compile
+    chunks billed to the plant model) and still drains."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params, use_wall_clock=True)
+    for i in range(3):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=10, output_len=12))
+    s = eng.run_until_drained()
+    assert s["completed"] == 3
+    assert s["vtime_s"] > 0 and s["p95_tbt_ms"] > 0
+
+
+def test_legacy_engine_still_drains():
+    """The pre-slot data plane is kept as a benchmark baseline and must still
+    complete lockstep (equal-position) workloads."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params, slot_native=False)
+    for i in range(4):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=10, output_len=8))
+    s = eng.run_until_drained()
+    assert s["completed"] == 4
