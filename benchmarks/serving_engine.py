@@ -1,7 +1,8 @@
 """Serving-engine data-plane benchmark: slot-native vs the pre-PR (legacy)
-engine, wall-clock measured on the smoke config.
+engine — and the paged KV cache vs the dense slot layout — wall-clock
+measured on the smoke config.
 
-Three metrics per (governor, batch):
+Metrics per (governor, batch):
 
 * ``decode``  — steady-state decode tokens/s with a full batch of
   never-ending streams (no admissions in the window): isolates the jitted
@@ -12,7 +13,18 @@ Three metrics per (governor, batch):
 * ``serve``   — sustained serving tokens/s with continuous batching churn
   (finite outputs, streams join/leave): the end-to-end engine number.
 
-    PYTHONPATH=src python benchmarks/serving_engine.py [--quick]
+Paged scenarios (``--paged``):
+
+* ``decode/serve _paged`` — the same workloads through the page-table data
+  plane (gathered page chains, chain growth at block boundaries).
+* ``longadmit`` — chunked admission of prompts longer than the smallest
+  attention buffer (sliding-window config) vs the legacy eager-prefill
+  fallback.
+* ``capacity`` — concurrent streams sustained on a pool of *half* the dense
+  K/V memory: the dense layout pins ``memory / max_len`` streams; paging
+  holds ``max_batch`` (the acceptance lever for GreenLLM's decode batching).
+
+    PYTHONPATH=src python benchmarks/serving_engine.py [--quick] [--paged]
         [--arch qwen2-1.5b] [--batches 1,4,8] [--governors greenllm,defaultnv]
 
 Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
@@ -26,11 +38,13 @@ import jax
 import numpy as np
 
 
-def _engine(cfg, params, *, batch, governor, slot_native, max_len=256):
+def _engine(cfg, params, *, batch, governor, slot_native, max_len=256,
+            paged=False, num_pages=0, chunked=True):
     from repro.serving import EngineConfig, ServingEngine
     return ServingEngine(cfg, params=params, ecfg=EngineConfig(
         max_batch=batch, max_len=max_len, governor=governor,
-        slot_native=slot_native))
+        slot_native=slot_native, paged=paged, num_pages=num_pages,
+        chunked_prefill=chunked))
 
 
 def _fill(eng, batch, *, prompt_len=24, output_len=10 ** 9, rng=None):
@@ -42,9 +56,10 @@ def _fill(eng, batch, *, prompt_len=24, output_len=10 ** 9, rng=None):
     eng._admit()
 
 
-def bench_decode(cfg, params, *, batch, governor, slot_native, steps):
+def bench_decode(cfg, params, *, batch, governor, slot_native, steps,
+                 paged=False):
     eng = _engine(cfg, params, batch=batch, governor=governor,
-                  slot_native=slot_native)
+                  slot_native=slot_native, paged=paged)
     _fill(eng, batch)
     # warm the (ctx, k) kernels outside the timed window
     for _ in range(2):
@@ -78,9 +93,10 @@ def bench_admit(cfg, params, *, governor, slot_native, n):
     return n / (time.perf_counter() - t0)
 
 
-def bench_serve(cfg, params, *, batch, governor, slot_native, nreq, out_len):
+def bench_serve(cfg, params, *, batch, governor, slot_native, nreq, out_len,
+                paged=False):
     eng = _engine(cfg, params, batch=batch, governor=governor,
-                  slot_native=slot_native)
+                  slot_native=slot_native, paged=paged)
     rng = np.random.default_rng(0)
     _fill(eng, nreq, output_len=out_len, rng=rng)
     t0 = time.perf_counter()
@@ -89,8 +105,64 @@ def bench_serve(cfg, params, *, batch, governor, slot_native, nreq, out_len):
     return nreq * out_len / (time.perf_counter() - t0)
 
 
+def bench_long_admit(cfg, params, *, governor, n, chunked):
+    """Admission latency for prompts longer than the smallest attention
+    buffer: chunked slot-native admission vs the legacy eager-prefill
+    fallback.  Requires a sliding-window config (see bench caller)."""
+    from repro.core import Request
+    eng = _engine(cfg, params, batch=8, governor=governor, slot_native=True,
+                  chunked=chunked)
+    long_len = min(eng.ecfg.max_len // 2, eng.buckets[-1] * 4)
+
+    def admit_one(rid):
+        eng.submit(Request(rid=rid, arrival=0.0, prompt_len=long_len,
+                           output_len=4))
+        eng._admit()
+        while eng.prefilling:
+            eng._advance_chunks()
+        jax.block_until_ready(eng._tok)
+        eng._retire(list(eng.active.keys()))
+
+    admit_one(10 ** 6)                 # compile warmup
+    t0 = time.perf_counter()
+    for i in range(n):
+        admit_one(i)
+    return n / (time.perf_counter() - t0)
+
+
+def bench_paged_capacity(cfg, params, *, governor, nreq, out_len):
+    """Streams sustained concurrently on half the dense K/V memory.
+
+    Returns (streams, dense_equivalent_streams, tokens_per_s): the paged
+    engine runs ``nreq`` concurrent streams against a pool whose token
+    capacity would pin only ``pool_tokens / max_len`` dense rows.
+    """
+    from repro.core import Request
+    max_len = 256
+    ps = 16
+    num_pages = (nreq * max_len // ps) // 2 + 1     # half dense memory
+    eng = _engine(cfg, params, batch=nreq, governor=governor,
+                  slot_native=True, max_len=max_len, paged=True,
+                  num_pages=num_pages)
+    rng = np.random.default_rng(0)
+    for i in range(nreq):
+        eng.submit(Request(rid=i, arrival=0.0,
+                           prompt_len=int(rng.integers(16, 64)),
+                           output_len=out_len))
+    eng._admit()
+    peak = len(eng.active) + len(eng.prefilling)
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    jax.block_until_ready(eng._tok)
+    dt = time.perf_counter() - t0
+    s = eng.stats()
+    dense_eq = (s["pages_total"] * ps) // max_len
+    return peak, dense_eq, s["decode_tokens"] / dt
+
+
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
-                         batches=(1, 4, 8), governors=("greenllm", "defaultnv")):
+                         batches=(1, 4, 8), governors=("greenllm", "defaultnv"),
+                         paged: bool = False):
     from repro.configs import get_config
     from repro.models import init_params
 
@@ -108,11 +180,13 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
 
     rows = []
     for gov in governors:
+        dense_decode = {}
         for b in batches:
             legacy = bench_decode(cfg, params, batch=b, governor=gov,
                                   slot_native=False, steps=steps)
             slot = warm2(bench_decode, cfg, params, batch=b, governor=gov,
                          slot_native=True, steps=steps)
+            dense_decode[b] = slot
             rows.append((f"engine_decode_b{b}_{gov}_legacy", 1e6 / legacy,
                          f"{legacy:.0f}tok/s"))
             rows.append((f"engine_decode_b{b}_{gov}_slot", 1e6 / slot,
@@ -134,18 +208,59 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                      f"{legacy:.0f}tok/s"))
         rows.append((f"engine_serve_b{b}_{gov}_slot", 1e6 / slot,
                      f"{slot:.0f}tok/s;speedup={slot / legacy:.1f}x"))
+        if paged:
+            rows.extend(_paged_rows(cfg, params, gov=gov, b=b, steps=steps,
+                                    nreq=nreq, n_admit=n_admit, warm2=warm2,
+                                    dense_decode=dense_decode[b]))
+    return rows
+
+
+def _paged_rows(cfg, params, *, gov, b, steps, nreq, n_admit, warm2,
+                dense_decode):
+    """Paged-vs-dense and long-prompt-admission scenarios.  ``dense_decode``
+    is the already-measured slot-native decode tok/s for this (gov, b)."""
+    from repro.configs import get_config
+    rows = []
+    dense = dense_decode
+    pg = warm2(bench_decode, cfg, params, batch=b, governor=gov,
+               slot_native=True, steps=steps, paged=True)
+    rows.append((f"engine_decode_b{b}_{gov}_paged", 1e6 / pg,
+                 f"{pg:.0f}tok/s;vs_dense={pg / dense:.2f}x"))
+    pg = warm2(bench_serve, cfg, params, batch=b, governor=gov,
+               slot_native=True, nreq=nreq, out_len=32, paged=True)
+    rows.append((f"engine_serve_b{b}_{gov}_paged", 1e6 / pg,
+                 f"{pg:.0f}tok/s"))
+    streams, dense_eq, tps = bench_paged_capacity(cfg, params, governor=gov,
+                                                  nreq=b, out_len=16)
+    rows.append((f"engine_capacity_{gov}_paged_halfmem", 1e6 / max(tps, 1e-9),
+                 f"streams={streams};dense_equiv={dense_eq};{tps:.0f}tok/s"))
+    # long-prompt chunked admission needs a sliding-window config
+    wcfg = get_config("gemma2-9b").smoke()
+    from repro.models import init_params as _ip
+    wparams = _ip(jax.random.PRNGKey(0), wcfg)
+    legacy = bench_long_admit(wcfg, wparams, governor=gov, n=n_admit,
+                              chunked=False)
+    chunked = bench_long_admit(wcfg, wparams, governor=gov, n=n_admit,
+                               chunked=True)
+    rows.append((f"engine_longadmit_{gov}_legacy", 1e6 / legacy,
+                 f"{legacy:.1f}adm/s"))
+    rows.append((f"engine_longadmit_{gov}_chunked", 1e6 / chunked,
+                 f"{chunked:.1f}adm/s;speedup={chunked / legacy:.1f}x"))
     return rows
 
 
 def bench_serving_engine_quick():
     """Registry entry for benchmarks.run (CI-sized)."""
     return bench_serving_engine(quick=True, batches=(1, 8),
-                                governors=("defaultnv",))
+                                governors=("defaultnv",), paged=True)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="add paged-vs-dense, capacity and long-prompt-"
+                         "admission scenarios")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batches", default="1,4,8")
     ap.add_argument("--governors", default="greenllm,defaultnv")
@@ -155,7 +270,7 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in bench_serving_engine(
             quick=args.quick, arch=args.arch, batches=batches,
-            governors=governors):
+            governors=governors, paged=args.paged):
         print(f"{name},{us:.0f},{derived}", flush=True)
 
 

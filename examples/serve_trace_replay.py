@@ -58,6 +58,34 @@ def main():
           f"energy={stats['energy_j']/1e3:.2f}kJ  "
           f"p95 TBT={stats['p95_tbt_ms']:.1f}ms  clock={stats['freq_mhz']:.0f}MHz")
 
+    # --- paged engine on a long-prompt-heavy trace -----------------------------
+    # azure_code prompts are long (code context); on half the dense K/V memory
+    # the paged engine still fills every batch slot, long prompts admit through
+    # chunked prefill (no eager fallback), and pool pressure preempts +
+    # recomputes instead of refusing admission.
+    print("\n=== paged burst: azure_code prompt/output mix, half K/V memory ===")
+    code_trace = get_trace("azure_code8", duration=args.duration)
+    max_len, page_size, batch = 192, 16, 8
+    num_pages = (batch * max_len // page_size) // 2 + 1
+    peng = ServingEngine(smoke, plant_cfg=cfg, ecfg=EngineConfig(
+        max_batch=batch, max_len=max_len, paged=True, page_size=page_size,
+        num_pages=num_pages))
+    for i, r in enumerate(code_trace[:16]):
+        peng.submit(Request(rid=1000 + i, arrival=0.0,
+                            prompt_len=min(r.prompt_len, max_len // 2),
+                            output_len=min(r.output_len, 48)))
+    st = peng.run_until_drained(max_steps=50_000)
+    dense_equiv = (st["pages_total"] * page_size) // max_len
+    print(f"completed={st['completed']}  preempted={st['preempted']}  "
+          f"pool={st['pages_total']}p ({dense_equiv} dense-equivalent rows "
+          f"for batch={batch})")
+    print(f"occupancy(now)={st['page_occupancy']*100:.0f}%  "
+          f"peak={st['page_occupancy_peak']*100:.0f}%  "
+          f"fragmentation={st['page_fragmentation']*100:.0f}%")
+    print(f"E_prefill={st['prefill_energy_j']/1e3:.2f}kJ ({st['prefill_tokens']} tok)  "
+          f"E_decode={st['decode_energy_j']/1e3:.2f}kJ ({st['decode_tokens']} tok)  "
+          f"p95 TBT={st['p95_tbt_ms']:.1f}ms")
+
 
 if __name__ == "__main__":
     main()

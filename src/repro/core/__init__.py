@@ -5,5 +5,5 @@ from .router import LengthRouter, make_router, SINGLE_QUEUE
 from .prefill_optimizer import PrefillOptimizer, deadline_from_queue
 from .decode_controller import (DualLoopController, DecodeControllerConfig,
                                 MaxFreqController, FixedFreqController)
-from .telemetry import TPSMeter, TBTMeter, SlidingWindow
+from .telemetry import TPSMeter, TBTMeter, OccupancyMeter, SlidingWindow
 from . import controller_jax

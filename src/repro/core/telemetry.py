@@ -45,6 +45,29 @@ class TPSMeter(SlidingWindow):
         return float(v.sum() / self.horizon) if len(v) else 0.0
 
 
+class OccupancyMeter(SlidingWindow):
+    """KV-page pool occupancy over a trailing window (paged serving engine).
+
+    Memory pressure is a controller input in later energy PRs: decode batch
+    capacity — and therefore the reachable energy/token at a given frequency
+    — is gated by pool headroom, so the dual-loop controller can trade clock
+    against admission when ``mean()`` approaches 1."""
+
+    def __init__(self, horizon: float = 1.0):
+        super().__init__(horizon)
+
+    def record(self, t: float, occupancy: float) -> None:
+        self.push(t, occupancy)
+
+    def mean(self, now: float) -> float:
+        v = self.values(now)
+        return float(v.mean()) if len(v) else 0.0
+
+    def peak(self, now: float) -> float:
+        v = self.values(now)
+        return float(v.max()) if len(v) else 0.0
+
+
 class TBTMeter(SlidingWindow):
     """Per-token latencies; P95 over a trailing window."""
 

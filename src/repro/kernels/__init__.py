@@ -1,4 +1,6 @@
 from .ops import flash_attention_bshd, decode_attention_bshd
 from .rmsnorm import rmsnorm
 from .decode_attention_q8 import decode_attention_q8
+from .paged_decode_attention import (paged_decode_attention,
+                                     paged_decode_attention_ref)
 from . import ref

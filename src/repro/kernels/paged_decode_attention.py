@@ -1,0 +1,156 @@
+"""Paged flash-decode kernel (Pallas TPU): one query token per stream against
+a shared paged K/V pool, addressed by a per-stream page table.
+
+This is the kernel form of the serving engine's paged decode path
+(``models.kvcache.paged_cache_kv_arrays`` + masked attention is the XLA
+reference): instead of gathering every stream's page chain into a dense
+(B, S, KH, hd) context in HBM, the kernel walks the chain *inside* the grid —
+the page table rides in as a scalar-prefetch operand, and each (batch, head,
+logical-page) grid step DMAs exactly one physical page from the pool, so the
+per-token read volume is the live context, never the gather materialization.
+
+Design:
+* grid (B, KH, n_pages): per kv head, the G = Hq/KH query heads sharing it
+  are processed as a (G, hd) tile; online-softmax accumulators persist in
+  VMEM scratch across the page dimension (same scheme as
+  ``decode_attention``).
+* page indirection: ``page_table`` (B, n_pages) int32 is scalar-prefetched;
+  the K/V BlockSpec index maps select block ``page_table[b, j]`` of the pool
+  for logical page ``j``.  Unallocated chain tails point at the scratch page
+  (id 0) and are masked by position, identical to the XLA path's semantics.
+* masking: key position of (page j, offset o) is ``j*ps + o`` (pages are
+  linear — no ring wrap); valid iff ``<= q_pos`` plus an optional sliding
+  window.  fp32 accumulation, bf16 pool reads.
+
+Pool layout here is (num_pages, KH, page_size, hd) — page-major with the
+(page_size, hd) tile minor so one block is one well-tiled VMEM page.  The
+serving layout (num_pages, page_size, KH, hd) is transposed by the wrapper
+(on TPU you would store the pool kernel-native and skip it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: int,
+            page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (ps, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[b]
+
+    # linear page chain: position of offset o in logical page j is j*ps + o
+    kpos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = kpos <= qpos
+    if window:
+        valid = jnp.logical_and(valid, kpos > qpos - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)        # (G, ps)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, q_pos, *,
+                           window: int = 0, scale: float = None,
+                           interpret: bool = False):
+    """q (B,Hq,hd); k_pool/v_pool (P, ps, KH, hd) serving pool layout;
+    page_table (B, n_pages) int32 physical-page ids (ctx-bucket-sliced by the
+    caller — its width bounds the walked context); q_pos (B,) int32 current
+    positions.  Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    ps, KH = k_pool.shape[1], k_pool.shape[2]
+    n_pages = page_table.shape[1]
+    assert Hq % KH == 0
+    G = Hq // KH
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KH, G, hd)
+    # kernel-native page-major layout: block (1, 1, ps, hd) == one pool page
+    kk = jnp.swapaxes(k_pool, 1, 2)                  # (P, KH, ps, hd)
+    vv = jnp.swapaxes(v_pool, 1, 2)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               page_size=ps, n_pages=n_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # page_table, q_pos
+        grid=(B, KH, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, pt, qp: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, pt, qp: (pt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, pt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, q_pos, qg, kk, vv)
+    return out.reshape(B, Hq, hd)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, q_pos, *,
+                               window: int = 0, scale: float = None):
+    """Pure-jnp oracle: gather the page chains dense, then mask + softmax with
+    the same semantics (linear positions, scratch-page tails masked)."""
+    B, Hq, hd = q.shape
+    ps, KH = k_pool.shape[1], k_pool.shape[2]
+    n = page_table.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pool[page_table].reshape(B, n * ps, KH, hd).astype(jnp.float32)
+    v = v_pool[page_table].reshape(B, n * ps, KH, hd).astype(jnp.float32)
+    if Hq != KH:
+        rep = Hq // KH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    kpos = jnp.arange(n * ps, dtype=jnp.int32)
+    valid = kpos[None, :] <= q_pos[:, None]
+    if window:
+        valid &= kpos[None, :] > (q_pos[:, None] - window)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(valid, axis=1)[:, None, None], p, 0.0)
+    return jnp.einsum("bhs,bshd->bhd", p, v).astype(q.dtype)

@@ -20,6 +20,8 @@ def main():
     ap.add_argument("--governor", default="greenllm",
                     choices=["greenllm", "defaultnv"])
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (page-table data plane)")
     args = ap.parse_args()
 
     full = get_config(args.arch)
@@ -27,7 +29,8 @@ def main():
     eng = ServingEngine(cfg, plant_cfg=full,
                         ecfg=EngineConfig(max_batch=args.max_batch,
                                           max_len=192,
-                                          governor=args.governor))
+                                          governor=args.governor,
+                                          paged=args.paged))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(rid=i, arrival=0.0,
@@ -40,6 +43,11 @@ def main():
     print(f"  node energy    {stats['energy_j']/1e3:.2f} kJ")
     print(f"  p95 TBT        {stats['p95_tbt_ms']:.1f} ms (SLO 100 ms)")
     print(f"  final clock    {stats['freq_mhz']:.0f} MHz")
+    print(f"  E prefill/dec  {stats['prefill_energy_j']/1e3:.2f} / "
+          f"{stats['decode_energy_j']/1e3:.2f} kJ")
+    if args.paged:
+        print(f"  pages          {stats['pages_used']}/{stats['pages_total']}"
+              f" used, {stats['preempted']} preemptions")
 
 
 if __name__ == "__main__":

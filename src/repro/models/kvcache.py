@@ -191,6 +191,171 @@ def cache_write_prefill_slot(cache: Dict, k_seq, v_seq, slot):
     return {"k": k, "v": v}
 
 
+def cache_write_chunk_slot(cache: Dict, k_seq, v_seq, slot, start, length):
+    """Write one prompt *chunk* (1, S_pad, KH, hd) into row ``slot`` of a
+    batch cache at ring slots for absolute positions ``start..start+length-1``.
+
+    Unlike ``cache_write_prefill_slot`` (which always writes from slot 0 and
+    relies on position masking to hide pad garbage), chunk writes land at ring
+    slots that may wrap onto *valid earlier context*, so pad positions
+    ``>= length`` must not be written at all: their scatter indices are pushed
+    out of range and dropped (``mode="drop"``).
+    """
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k_seq)
+        vq, vs = quantize_kv(v_seq)
+        out = cache_write_chunk_slot({"k": cache["k"], "v": cache["v"]},
+                                     kq, vq, slot, start, length)
+        sc = cache_write_chunk_slot({"k": cache["k_s"], "v": cache["v_s"]},
+                                    ks, vs, slot, start, length)
+        return {"k": out["k"], "v": out["v"], "k_s": sc["k"], "v_s": sc["v"]}
+    S = k_seq.shape[1]
+    buf_len = cache["k"].shape[1]
+    i = jnp.arange(S, dtype=jnp.int32)
+    slots = jnp.mod(jnp.asarray(start, jnp.int32) + i, buf_len)
+    slots = jnp.where(i < jnp.asarray(length, jnp.int32), slots, buf_len)
+    k = cache["k"].at[slot, slots].set(k_seq[0].astype(cache["k"].dtype),
+                                       mode="drop")
+    v = cache["v"].at[slot, slots].set(v_seq[0].astype(cache["v"].dtype),
+                                       mode="drop")
+    return {"k": k, "v": v}
+
+
+def cache_row_kv_arrays(cache: Dict, slot, dtype=jnp.bfloat16):
+    """Dequantized (k, v) of ONE batch row ``slot`` (traced), shape
+    (1, buf_len, KH, hd) — the past-context read of the chunked prefill."""
+    def row(x):
+        return jax.lax.dynamic_slice_in_dim(x, jnp.asarray(slot, jnp.int32),
+                                            1, axis=0)
+    sub = {kk: row(vv) for kk, vv in cache.items()}
+    return cache_kv_arrays(sub, dtype)
+
+
+# -- paged pool layout (serving engine, EngineConfig.paged=True) ---------------
+#
+# Full-length attention buffers are replaced by a pool of fixed-size pages
+# shared by every stream: leaves are (num_pages, page_size, KH, hd) with NO
+# batch dimension (keys "kp"/"vp" so tree ops and the engine's dense-cache
+# ctx slicing never confuse the two layouts).  Streams address the pool
+# through an int32 page table (B, n_pages) maintained by
+# ``serving.pager.PageAllocator``; logical position p of a stream lives at
+# pool[page_table[b, p // ps], p % ps].  Pages are linear (no ring wrap):
+# chains grow with the context, so absolute position == logical index.
+
+
+def is_paged(cache: Dict) -> bool:
+    return "kp" in cache
+
+
+def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16) -> Dict:
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        sshape = (num_pages, page_size, cfg.num_kv_heads, 1)
+        return {"kp": jnp.zeros(shape, jnp.int8),
+                "vp": jnp.zeros(shape, jnp.int8),
+                "kp_s": jnp.zeros(sshape, jnp.float32),
+                "vp_s": jnp.zeros(sshape, jnp.float32)}
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def paged_key_positions(n_tokens: int, next_pos):
+    """Positions (B, n_tokens) of a paged context when the *next* token to be
+    written has position ``next_pos`` ((B,) vector or scalar).  Pages are
+    linear, so slot j holds position j when j < next_pos and is invalid (-1,
+    masked) otherwise — unallocated table entries point at the scratch page
+    and are masked here by position alone."""
+    j = jnp.arange(n_tokens, dtype=jnp.int32)
+    p = jnp.asarray(next_pos, jnp.int32)
+    valid = j[None, :] < jnp.atleast_1d(p)[:, None]
+    return jnp.where(valid, j[None, :], -1)
+
+
+def _paged_scatter(pool, values, flat_idx):
+    """pool (P, ps, ...) scattered at token-flat indices (N,) with OOB drop."""
+    P, ps = pool.shape[:2]
+    flat = pool.reshape((P * ps,) + pool.shape[2:])
+    flat = flat.at[flat_idx].set(values.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def paged_cache_write_decode(cache: Dict, k_new, v_new, pos, page_table):
+    """Write one token (B,1,KH,hd) per stream at position ``pos`` (B,) via the
+    page table (B, n_pages).  Rows whose table points at the scratch page
+    (freed slots held in the batch) scribble harmlessly on scratch."""
+    if "kp_s" in cache:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        out = paged_cache_write_decode({"kp": cache["kp"], "vp": cache["vp"]},
+                                       kq, vq, pos, page_table)
+        sc = paged_cache_write_decode({"kp": cache["kp_s"], "vp": cache["vp_s"]},
+                                      ks, vs, pos, page_table)
+        return {"kp": out["kp"], "vp": out["vp"],
+                "kp_s": sc["kp"], "vp_s": sc["vp"]}
+    ps = cache["kp"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    phys = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    flat_idx = phys * ps + pos % ps
+    return {"kp": _paged_scatter(cache["kp"], k_new[:, 0], flat_idx),
+            "vp": _paged_scatter(cache["vp"], v_new[:, 0], flat_idx)}
+
+
+def paged_cache_write_chunk(cache: Dict, k_seq, v_seq, page_table_row, start,
+                            length):
+    """Write one prompt chunk (1, S_pad, KH, hd) at positions
+    ``start..start+length-1`` of the stream whose table row (n_pages,) is
+    given; pads >= length are dropped (same contract as
+    ``cache_write_chunk_slot``)."""
+    if "kp_s" in cache:
+        kq, ks = quantize_kv(k_seq)
+        vq, vs = quantize_kv(v_seq)
+        out = paged_cache_write_chunk({"kp": cache["kp"], "vp": cache["vp"]},
+                                      kq, vq, page_table_row, start, length)
+        sc = paged_cache_write_chunk(
+            {"kp": cache["kp_s"], "vp": cache["vp_s"]},
+            ks, vs, page_table_row, start, length)
+        return {"kp": out["kp"], "vp": out["vp"],
+                "kp_s": sc["kp"], "vp_s": sc["vp"]}
+    P, ps = cache["kp"].shape[:2]
+    S = k_seq.shape[1]
+    i = jnp.arange(S, dtype=jnp.int32)
+    posi = jnp.asarray(start, jnp.int32) + i
+    phys = page_table_row[posi // ps]
+    flat_idx = phys * ps + posi % ps
+    flat_idx = jnp.where(i < jnp.asarray(length, jnp.int32), flat_idx, P * ps)
+    return {"kp": _paged_scatter(cache["kp"], k_seq[0], flat_idx),
+            "vp": _paged_scatter(cache["vp"], v_seq[0], flat_idx)}
+
+
+def paged_cache_kv_arrays(cache: Dict, page_table, dtype=jnp.bfloat16):
+    """Gather the pages of ``page_table`` (B, n_pages) into dense, dequantized
+    (k, v) of shape (B, n_pages*ps, KH, hd), position == index (linear pages).
+
+    The gather width is set by the *caller-sliced* table (ctx bucketing: the
+    engine passes only the pages covering the current context bucket), which
+    is what bounds compile count and per-step read volume.
+    """
+    B, n = page_table.shape
+    ps = cache["kp"].shape[1]
+
+    def gather(pool):
+        g = pool[page_table]                       # (B, n, ps, KH, hd)
+        return g.reshape(B, n * ps, *pool.shape[2:])
+
+    if "kp_s" in cache:
+        return (dequantize_kv(gather(cache["kp"]), gather(cache["kp_s"]), dtype),
+                dequantize_kv(gather(cache["vp"]), gather(cache["vp_s"]), dtype))
+    return gather(cache["kp"]).astype(dtype), gather(cache["vp"]).astype(dtype)
+
+
+def state_row_slot(batch_cache, slot):
+    """Slice row ``slot`` (traced) out of a batch-shaped recurrent state
+    pytree -> leading-dim-1 pytree (chunked prefill resumes from it)."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(slot, jnp.int32), 1, axis=0), batch_cache)
+
+
 def state_write_slot(batch_cache, one_cache, slot):
     """Splice a single-row recurrent state (SSM / RG-LRU pytree, leading dim 1)
     into the batch-shaped state pytree at row ``slot`` (traced)."""

@@ -58,6 +58,37 @@ def _routing(cfg: ModelConfig, p, x):
     return w, idx, aux
 
 
+def _mask_pads(cfg: ModelConfig, w, idx, valid):
+    """Bucket-padding tokens must not compete for expert capacity: route pads
+    to the out-of-range expert id E (whose one_hot row is zero, so they claim
+    no capacity slot in ``_slots``) and zero their combine weights.  Without
+    this, the slot-native bucketed prefill lets pad garbage compete for
+    capacity at tight capacity factors."""
+    if valid is None:
+        return w, idx
+    v = valid[..., None]
+    return (w * v.astype(w.dtype),
+            jnp.where(v, idx, cfg.num_experts))
+
+
+def _dynamic_capacity(cfg: ModelConfig, valid, C: int):
+    """Per-row capacity clamp from the *true* token count (traced).
+
+    The static buffer capacity C is computed from the padded bucket length,
+    which is strictly larger than the unpadded reference's — so a bucketed
+    prompt at tight capacity would drop *fewer* token-choices than the same
+    prompt unpadded.  Clamping ``keep`` to the capacity the unpadded length
+    would produce makes bucketed routing token-for-token identical to the
+    reference.  The per-count capacities are precomputed host-side through
+    ``capacity`` itself (S is static), so the clamp is bit-identical to the
+    reference's Python ``int()`` — no float32 floor hazards."""
+    S = valid.shape[1]
+    table = jnp.asarray([min(capacity(cfg, n), C) for n in range(S + 1)],
+                        jnp.int32)
+    n = jnp.sum(valid, axis=1)                                  # (B,)
+    return table[n][:, None, None]
+
+
 def _slots(cfg: ModelConfig, idx, C: int):
     """Position-in-expert for every (token, choice); >=C means dropped.
 
@@ -90,14 +121,17 @@ def _ffn(cfg: ModelConfig, p, h, shd=None):
     return jnp.einsum("...ecf,efd->...ecd", hh, p["down"])
 
 
-def moe_einsum(cfg: ModelConfig, p, x, shd=None):
+def moe_einsum(cfg: ModelConfig, p, x, shd=None, valid=None):
     """GSPMD dispatch-einsum MoE. x (B,S,d) -> (B,S,d), aux."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     C = capacity(cfg, S)
     w, idx, aux = _routing(cfg, p, x)
+    w, idx = _mask_pads(cfg, w, idx, valid)
     slot = _slots(cfg, idx, C)
     keep = slot < C
+    if valid is not None:
+        keep &= (slot < _dynamic_capacity(cfg, valid, C)) & valid[..., None]
     slot = jnp.where(keep, slot, 0)
     # dispatch mask (B,S,E,C) accumulated one routing choice at a time so the
     # (B,S,k,E,C) intermediate never materializes (k-fold peak-memory saving)
@@ -119,14 +153,17 @@ def moe_einsum(cfg: ModelConfig, p, x, shd=None):
     return out, aux
 
 
-def moe_scatter(cfg: ModelConfig, p, x, shd=None):
+def moe_scatter(cfg: ModelConfig, p, x, shd=None, valid=None):
     """Scatter/gather MoE with identical semantics to moe_einsum."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     C = capacity(cfg, S)
     w, idx, aux = _routing(cfg, p, x)
+    w, idx = _mask_pads(cfg, w, idx, valid)
     slot = _slots(cfg, idx, C)
     keep = slot < C
+    if valid is not None:
+        keep &= (slot < _dynamic_capacity(cfg, valid, C)) & valid[..., None]
     dest = idx * C + jnp.where(keep, slot, 0)                # (B,S,k) in [0,E*C)
     dest = jnp.where(keep, dest, E * C)                      # drop -> overflow row
     xk = jnp.broadcast_to(x[:, :, None, :], (B, S, k, d)).reshape(B, S * k, d)
@@ -142,14 +179,18 @@ def moe_scatter(cfg: ModelConfig, p, x, shd=None):
     return out, aux
 
 
-def apply_moe(cfg: ModelConfig, p, x, shd=None):
+def apply_moe(cfg: ModelConfig, p, x, shd=None, valid=None):
     """Routing groups (cfg.moe_group tokens) bound expert capacity C — and
-    the dispatch tensor — independently of sequence length (MaxText-style)."""
+    the dispatch tensor — independently of sequence length (MaxText-style).
+
+    ``valid`` (B,S) bool marks real tokens; bucket pads (slot-native prefill)
+    are excluded from expert-capacity competition (see ``_mask_pads``)."""
     B, S, d = x.shape
     fn = moe_scatter if cfg.moe_impl == "scatter" else moe_einsum
     if S > cfg.moe_group and S % cfg.moe_group == 0:
         g = S // cfg.moe_group
         xg = x.reshape(B * g, cfg.moe_group, d)
-        out, aux = fn(cfg, p, xg, shd)
+        vg = valid.reshape(B * g, cfg.moe_group) if valid is not None else None
+        out, aux = fn(cfg, p, xg, shd, vg)
         return out.reshape(B, S, d), aux
-    return fn(cfg, p, x, shd)
+    return fn(cfg, p, x, shd, valid)

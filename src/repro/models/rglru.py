@@ -41,9 +41,12 @@ def init_rglru(key, cfg: ModelConfig, dtype):
     }
 
 
-def _conv(x, wght, b):
+def _conv(x, wght, b, prefix=None):
     cw = wght.shape[0]
-    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    if prefix is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(cw):
         out = out + xp[:, i: i + x.shape[1]] * wght[i]
@@ -60,13 +63,25 @@ def _gates(p, u):
     return a, beta * (i * u)
 
 
-def rglru_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
-    """x (B,S,d) -> (B,S,d) [, cache]."""
+def rglru_forward(cfg: ModelConfig, p, x, *, return_state: bool = False,
+                  cache=None, length=None):
+    """x (B,S,d) -> (B,S,d) [, cache].
+
+    ``cache`` ({"h", "conv"}) resumes the recurrence from an earlier segment
+    (chunked prefill); ``length`` masks bucket padding — pads get (a=1, b=0),
+    an identity step, so ``hh[:, -1]`` is the state at the last valid token
+    and the returned conv window ends there too.
+    """
     B_, S, _ = x.shape
     u_pre = x @ p["in_x"]                                   # (B,S,w)
     gate = jax.nn.gelu(x @ p["in_gate"], approximate=True)
-    u = _conv(u_pre, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    prefix = cache["conv"] if cache is not None else None
+    u = _conv(u_pre, p["conv_w"], p["conv_b"], prefix).astype(jnp.float32)
     a, b = _gates(p, u)
+    if length is not None:
+        valid = jnp.arange(S)[None, :, None] < jnp.asarray(length, jnp.int32)
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
 
     def combine(e1, e2):
         a1, b1 = e1
@@ -74,12 +89,20 @@ def rglru_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
         return a1 * a2, a2 * b1 + b2
 
     aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if cache is not None:
+        hh = hh + aa * cache["h"][:, None, :]
     y = (hh.astype(x.dtype) * gate) @ p["out"]
     if not return_state:
         return y
     cw = cfg.conv_width
-    conv_state = jnp.pad(u_pre, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):] \
-        if cw > 1 else jnp.zeros((B_, 0, u_pre.shape[-1]), u_pre.dtype)
+    if cw > 1:
+        lead = prefix.astype(u_pre.dtype) if prefix is not None else \
+            jnp.zeros((B_, cw - 1, u_pre.shape[-1]), u_pre.dtype)
+        full = jnp.concatenate([lead, u_pre], axis=1)
+        end = jnp.asarray(S if length is None else length, jnp.int32)
+        conv_state = jax.lax.dynamic_slice_in_dim(full, end, cw - 1, axis=1)
+    else:
+        conv_state = jnp.zeros((B_, 0, u_pre.shape[-1]), u_pre.dtype)
     return y, {"h": hh[:, -1], "conv": conv_state}
 
 

@@ -34,10 +34,16 @@ def init_ssm(key, cfg: ModelConfig, dtype):
     }
 
 
-def _causal_conv(x, w, b):
-    """Depthwise causal conv. x (B,S,C), w (cw,C) -> (B,S,C)."""
+def _causal_conv(x, w, b, prefix=None):
+    """Depthwise causal conv. x (B,S,C), w (cw,C) -> (B,S,C).
+
+    ``prefix`` ((B, cw-1, C)) seeds the left context (chunked prefill resumes
+    from the conv window stored in the cache); default is zero padding."""
     cw = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    if prefix is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(cw):
         out = out + xp[:, i: i + x.shape[1]] * w[i]
@@ -62,8 +68,16 @@ def _split(cfg: ModelConfig, zxbcdt):
     return z, xBC, dt
 
 
-def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
-    """Full-sequence SSD. x (B,S,d) -> (B,S,d) [, final caches]."""
+def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False,
+                cache=None, length=None):
+    """Full-sequence SSD. x (B,S,d) -> (B,S,d) [, final caches].
+
+    ``cache`` ({"state", "conv"}) resumes the linear recurrence and the conv
+    window from an earlier segment (chunked prefill); ``length`` (traced, per
+    call) marks positions >= length as bucket padding — their state update is
+    the identity (dt -> 0) and the returned conv window ends at the last
+    *valid* token, so pads never pollute the recurrent state.
+    """
     B_, S, _ = x.shape
     di, st, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
     cs = min(cfg.ssm_chunk, S)
@@ -73,11 +87,15 @@ def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
 
     zxbcdt = x @ p["in_proj"]
     z, xBC, dt = _split(cfg, zxbcdt)
-    xBC_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    prefix = cache["conv"] if cache is not None else None
+    xBC_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], prefix)
     xs = xBC_conv[..., :di].reshape(B_, S, nh, hd).astype(jnp.float32)
     Bm = xBC_conv[..., di: di + st].astype(jnp.float32)          # (B,S,n)
     Cm = xBC_conv[..., di + st:].astype(jnp.float32)             # (B,S,n)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+    if length is not None:
+        valid = jnp.arange(S)[None, :, None] < jnp.asarray(length, jnp.int32)
+        dt = dt * valid                 # pads: dA=1, dB·x=0 -> state identity
     A = -jnp.exp(p["A_log"])                                     # (h,)
 
     # chunk
@@ -104,7 +122,9 @@ def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
 
     states_t = jnp.moveaxis(states, 1, 0)                        # (nc,B,h,p,n)
     decay_t = jnp.moveaxis(chunk_decay, -1, 0)                   # (nc,B,h)
-    S_final, states_prev = jax.lax.scan(scan_fn, jnp.zeros_like(states_t[0]),
+    S0 = cache["state"].astype(states_t.dtype) if cache is not None \
+        else jnp.zeros_like(states_t[0])
+    S_final, states_prev = jax.lax.scan(scan_fn, S0,
                                         (states_t, decay_t),
                                         unroll=cfg.unroll_scans)
     states_prev = jnp.moveaxis(states_prev, 0, 1)                # (B,nc,h,p,n)
@@ -119,8 +139,17 @@ def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
     if not return_state:
         return out
     cw = cfg.conv_width
-    conv_state = jnp.pad(xBC, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):] \
-        if cw > 1 else jnp.zeros((B_, 0, xBC.shape[-1]), xBC.dtype)
+    if cw > 1:
+        # window of the cw-1 inputs preceding the *next* position; with pads
+        # (length < S) it must end at the last valid token, so slice the
+        # [prefix | xBC] concat at traced index ``length``
+        lead = prefix.astype(xBC.dtype) if prefix is not None else \
+            jnp.zeros((B_, cw - 1, xBC.shape[-1]), xBC.dtype)
+        full = jnp.concatenate([lead, xBC], axis=1)
+        end = jnp.asarray(S if length is None else length, jnp.int32)
+        conv_state = jax.lax.dynamic_slice_in_dim(full, end, cw - 1, axis=1)
+    else:
+        conv_state = jnp.zeros((B_, 0, xBC.shape[-1]), xBC.dtype)
     return out, {"state": S_final, "conv": conv_state}
 
 

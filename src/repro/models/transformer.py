@@ -244,7 +244,7 @@ def param_specs(cfg: ModelConfig, shd: ShardCtx) -> Dict:
 # -- block application ----------------------------------------------------------------
 
 def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
-                shd, slot=None):
+                shd, slot=None, length=None, page_table=None):
     B, S, _ = x.shape
     q = x @ p["attn"]["q"]
     k = x @ p["attn"]["k"]
@@ -266,7 +266,20 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
 
     window = cfg.window if kind == LOCAL_ATTN else 0
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and KV.is_paged(cache):
+        # paged pool: scatter the new token by page table, gather the
+        # ctx-bucketed page chain back as a dense (B, n_pages*ps) context
+        pos_v = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)),
+                                 (B,))
+        new_cache = KV.paged_cache_write_decode(cache, k, v, pos_v, page_table)
+        k_att, v_att = KV.paged_cache_kv_arrays(new_cache, page_table, q.dtype)
+        k_pos = jnp.broadcast_to(
+            KV.paged_key_positions(k_att.shape[1], pos_v + 1),
+            (B, k_att.shape[1]))
+        out = attention(q, k_att, v_att, positions, k_pos, window=window,
+                        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+                        unroll=cfg.unroll_scans)
+    elif mode == "decode":
         new_cache = KV.cache_write_decode(cache, k, v, pos)
         k_full, v_full = KV.cache_kv_arrays(new_cache, q.dtype)
         k_pos = KV.cache_key_positions(new_cache, pos, B)
@@ -288,17 +301,52 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
                         unroll=cfg.unroll_scans)
         if shd.kv_seq_sharded:
             out = shd.cs(out, "b", None, None, None)
+    elif mode == "chunk":
+        # chunked prefill: attend to [cached past context | raw current
+        # chunk], then write the chunk into the cache for later chunks and
+        # decode.  The past is read BEFORE the write so the current chunk
+        # contributes raw (unquantized, uncast) K/V, matching one-shot
+        # prefill; ``pos`` is the chunk's start position (traced scalar).
+        start = jnp.asarray(pos, jnp.int32)
+        if KV.is_paged(cache):
+            pk, pv = KV.paged_cache_kv_arrays(cache, page_table, q.dtype)
+            past_pos = KV.paged_key_positions(pk.shape[1], start)
+            new_cache = KV.paged_cache_write_chunk(cache, k, v, page_table[0],
+                                                   start, length)
+        else:
+            pk, pv = KV.cache_row_kv_arrays(cache, slot, q.dtype)
+            past_pos = KV.ring_slot_positions(pk.shape[1], start)[None]
+            new_cache = KV.cache_write_chunk_slot(cache, k, v, slot, start,
+                                                  length)
+            if window == 0 and pk.shape[1] < cfg.max_seq:
+                window = pk.shape[1]  # long-context ring: bounded lookback
+        i = jnp.arange(S, dtype=jnp.int32)
+        cur_pos = jnp.where(i[None, :] < jnp.asarray(length, jnp.int32),
+                            positions, -1)
+        out = attention(q, jnp.concatenate([pk, k.astype(pk.dtype)], axis=1),
+                        jnp.concatenate([pv, v.astype(pv.dtype)], axis=1),
+                        positions, jnp.concatenate([past_pos, cur_pos], axis=1),
+                        window=window, softcap=cfg.attn_softcap,
+                        scale=cfg.attn_scale, unroll=cfg.unroll_scans)
     else:
         if mode == "prefill":
-            if slot is not None:
+            if slot is not None and KV.is_paged(cache):
+                # slot-native one-shot prefill into this stream's page chain
+                # (bucket pads >= length are dropped, not masked: their pages
+                # may not be allocated)
+                new_cache = KV.paged_cache_write_chunk(
+                    cache, k, v, page_table[0], jnp.asarray(0, jnp.int32),
+                    S if length is None else length)
+            elif slot is not None:
                 # slot-native: write this prompt's K/V into one row of the
                 # batch cache; other rows flow through untouched.
                 new_cache = KV.cache_write_prefill_slot(cache, k, v, slot)
             else:
                 new_cache = KV.cache_write_prefill(cache, k, v)
-            buf_len = new_cache["k"].shape[1]
-            if window == 0 and buf_len < S:
-                window = buf_len
+            if not KV.is_paged(new_cache):
+                buf_len = new_cache["k"].shape[1]
+                if window == 0 and buf_len < S:
+                    window = buf_len
         out = attention(q, k, v, positions, positions, window=window,
                         softcap=cfg.attn_softcap, scale=cfg.attn_scale,
                         unroll=cfg.unroll_scans)
@@ -308,8 +356,23 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
     return out, new_cache
 
 
+def _freeze_inactive(new_cache, cache, active):
+    """Recurrent decode steps advance state for every batch row; rows outside
+    the active set (retired, or mid-chunked-prefill) must keep their cached
+    state — unlike K/V buffers there is no position masking to hide a bogus
+    update, so an unfrozen mid-prefill row would resume its next chunk from
+    state polluted by other streams' decode blocks."""
+    if active is None:
+        return new_cache
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new_cache, cache)
+
+
 def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
-                 cache, pos, shd, slot=None):
+                 cache, pos, shd, slot=None, length=None, valid=None,
+                 page_table=None, active=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(cfg, p["norm"], x)
@@ -317,12 +380,16 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
     if kind in (FULL_ATTN, LOCAL_ATTN):
         mix, new_cache = _apply_attn(cfg, p, h, kind, mode=mode,
                                      positions=positions, cache=cache,
-                                     pos=pos, shd=shd, slot=slot)
+                                     pos=pos, shd=shd, slot=slot,
+                                     length=length, page_table=page_table)
     elif kind == SSM:
         if mode == "decode":
             mix, new_cache = ssm_decode_step(cfg, p["ssm"], h, cache)
-        elif mode == "prefill":
-            mix, new_cache = ssm_forward(cfg, p["ssm"], h, return_state=True)
+            new_cache = _freeze_inactive(new_cache, cache, active)
+        elif mode in ("prefill", "chunk"):
+            row = KV.state_row_slot(cache, slot) if mode == "chunk" else None
+            mix, new_cache = ssm_forward(cfg, p["ssm"], h, return_state=True,
+                                         cache=row, length=length)
             if slot is not None:
                 new_cache = KV.state_write_slot(cache, new_cache, slot)
         else:
@@ -330,8 +397,12 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
     elif kind == RGLRU:
         if mode == "decode":
             mix, new_cache = rglru_decode_step(cfg, p["rglru"], h, cache)
-        elif mode == "prefill":
-            mix, new_cache = rglru_forward(cfg, p["rglru"], h, return_state=True)
+            new_cache = _freeze_inactive(new_cache, cache, active)
+        elif mode in ("prefill", "chunk"):
+            row = KV.state_row_slot(cache, slot) if mode == "chunk" else None
+            mix, new_cache = rglru_forward(cfg, p["rglru"], h,
+                                           return_state=True,
+                                           cache=row, length=length)
             if slot is not None:
                 new_cache = KV.state_write_slot(cache, new_cache, slot)
         else:
@@ -349,7 +420,7 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
     if cfg.d_ff > 0 and kind != SSM:
         h = L.apply_norm(cfg, p["mlp_norm"], x)
         if cfg.is_moe:
-            m, a = apply_moe(cfg, p["moe"], h, shd)
+            m, a = apply_moe(cfg, p["moe"], h, shd, valid)
             aux = aux + a
         else:
             m = L.apply_mlp(cfg, p["mlp"], h)
@@ -363,7 +434,8 @@ def _apply_block(cfg: ModelConfig, kind: str, p, x, *, mode, positions,
 # -- stage execution -------------------------------------------------------------------
 
 def _run_stages(cfg: ModelConfig, params, x, *, mode, positions, caches, pos,
-                shd: ShardCtx, remat: bool, slot=None):
+                shd: ShardCtx, remat: bool, slot=None, length=None,
+                valid=None, page_table=None, active=None):
     """caches: list (per stage) of stacked per-group caches or None."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -377,7 +449,9 @@ def _run_stages(cfg: ModelConfig, params, x, *, mode, positions, caches, pos,
                 c = group_c[j] if group_c is not None else None
                 x, nc, a = _apply_block(cfg, kind, group_p["blocks"][j], x,
                                         mode=mode, positions=positions,
-                                        cache=c, pos=pos, shd=shd, slot=slot)
+                                        cache=c, pos=pos, shd=shd, slot=slot,
+                                        length=length, valid=valid,
+                                        page_table=page_table, active=active)
                 auxs = auxs + a
                 outs.append(nc)
             return x, tuple(outs), auxs
@@ -500,14 +574,30 @@ def loss_fn(params, cfg: ModelConfig, batch, shd: ShardCtx = NOSHARD,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               long_context: bool = False, dtype=jnp.bfloat16) -> List:
-    """Stacked cache pytree parallel to params['stages']."""
+               long_context: bool = False, dtype=jnp.bfloat16,
+               paged_pool=None) -> List:
+    """Stacked cache pytree parallel to params['stages'].
+
+    ``paged_pool=(num_pages, page_size)`` switches every *full-length*
+    attention buffer (the ones whose size gates concurrent-stream capacity)
+    to a shared paged pool addressed through a page table (see
+    ``kvcache.init_paged_attn_cache``); bounded buffers (sliding window /
+    long-context rings) and recurrent states keep the dense batch layout.
+    """
     caches = []
     for kinds, n_rep in stages_of(cfg):
-        group = tuple(KV.init_block_cache(cfg, k, batch, max_len, long_context, dtype)
-                      for k in kinds)
+        group = []
+        for k in kinds:
+            if (paged_pool is not None and k in (FULL_ATTN, LOCAL_ATTN)
+                    and KV.attn_buffer_len(cfg, k, max_len,
+                                           long_context) == max_len):
+                group.append(KV.init_paged_attn_cache(cfg, *paged_pool, dtype))
+            else:
+                group.append(KV.init_block_cache(cfg, k, batch, max_len,
+                                                 long_context, dtype))
         stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape), group)
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape),
+            tuple(group))
         caches.append(stacked)
     return caches
 
@@ -526,7 +616,7 @@ def prefill(params, cfg: ModelConfig, tokens, caches, prefix_embeds=None,
 
 
 def prefill_into_slot(params, cfg: ModelConfig, tokens, length, caches, slot,
-                      shd: ShardCtx = NOSHARD):
+                      shd: ShardCtx = NOSHARD, page_table=None):
     """Bucket-padded prefill of ONE prompt written into row ``slot`` of the
     shared batch caches, as a single jittable computation.
 
@@ -540,23 +630,68 @@ def prefill_into_slot(params, cfg: ModelConfig, tokens, length, caches, slot,
     hold garbage K/V that the position mask hides until the decode loop
     overwrites them (see ``kvcache.cache_write_prefill_slot``).
 
-    Requires S_pad <= every attention buffer length (asserted at trace time);
-    longer prompts must take the reference ``prefill`` path.  Note for MoE
-    configs: pad tokens compete for expert capacity, so heavily-padded
-    prompts can differ from the unpadded reference unless capacity is loose.
+    Requires S_pad <= every dense attention buffer length (asserted at trace
+    time); longer prompts go through ``prefill_chunk_into_slot`` (or the
+    reference ``prefill`` path).  Pad tokens are masked out of expert-capacity
+    competition (MoE) and out of the recurrent-state updates (SSM / RG-LRU),
+    so a bucketed prompt matches its unpadded reference.  ``page_table``
+    ((1, n_pages) row) addresses the paged K/V pools when the caches were
+    built with ``init_cache(..., paged_pool=...)``.
 
     Returns (last_logits (1, vocab), caches, next_pos == length).
     """
     x, positions = _embed_inputs(cfg, params, tokens, None, shd)
+    valid = (jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+             < jnp.asarray(length, jnp.int32))
     x, new_caches, _ = _run_stages(cfg, params, x, mode="prefill",
                                    positions=positions, caches=caches,
-                                   pos=None, shd=shd, remat=False, slot=slot)
+                                   pos=None, shd=shd, remat=False, slot=slot,
+                                   length=length, valid=valid,
+                                   page_table=page_table)
     last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(length, jnp.int32) - 1,
                                         1, axis=1)
     last = L.apply_norm(cfg, params["final_norm"], last)
     logits = L.unembed(cfg, params["embed"], last)[:, 0]
     logits = shd.cs(logits, "b", "m")
     return logits, new_caches, length
+
+
+def prefill_chunk_into_slot(params, cfg: ModelConfig, tokens, start, length,
+                            caches, slot, shd: ShardCtx = NOSHARD,
+                            page_table=None):
+    """One *chunk* of a chunked prefill: process ``tokens`` (1, S_pad) at
+    absolute positions ``start..start+S_pad-1`` (``length`` of them valid)
+    for the stream in row ``slot``, attending to all context this stream has
+    already written (earlier chunks live in its cache row / page chain).
+
+    Chunks must be fed in position order; attention reads the cached past
+    (dense ring row or gathered page chain) and the raw current chunk, then
+    writes the chunk's K/V — pads are *dropped*, not masked, because chunk
+    writes may wrap a ring buffer onto valid earlier context.  SSM / RG-LRU
+    states resume from the cached row state and are written back, so hybrid
+    archs chunk exactly like attention-only ones.  Used by the serving
+    engine to admit prompts longer than the smallest attention buffer across
+    successive decode blocks instead of falling back to the eager reference
+    prefill.
+
+    Returns (last_logits (1, vocab), caches): logits at position
+    ``start+length-1`` — only the final chunk's logits seed decoding.
+    """
+    x, positions = _embed_inputs(cfg, params, tokens, None, shd,
+                                 start_pos=jnp.asarray(start, jnp.int32))
+    valid = (jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+             < jnp.asarray(length, jnp.int32))
+    x, new_caches, _ = _run_stages(cfg, params, x, mode="chunk",
+                                   positions=positions, caches=caches,
+                                   pos=start, shd=shd, remat=False, slot=slot,
+                                   length=length, valid=valid,
+                                   page_table=page_table)
+    last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(length, jnp.int32) - 1,
+                                        1, axis=1)
+    last = L.apply_norm(cfg, params["final_norm"], last)
+    logits = L.unembed(cfg, params["embed"], last)[:, 0]
+    logits = shd.cs(logits, "b", "m")
+    return logits, new_caches
 
 
 def sample_tokens(logits, temperature: float = 0.0, key=None):
@@ -574,13 +709,23 @@ def sample_tokens(logits, temperature: float = 0.0, key=None):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
-                shd: ShardCtx = NOSHARD):
+                shd: ShardCtx = NOSHARD, page_table=None, active=None):
     """tokens (B,1) -> (logits (B,vocab), caches).
 
     ``pos`` is either a traced scalar (all rows decode at one shared stream
     position — the lockstep path used by training-style eval) or a (B,) int32
     vector of per-slot positions (slot-native serving: each row attends to its
     own context length, RoPE/masks/cache-writes are per-row).
+
+    ``page_table`` ((B, n_pages) int32) must be passed when ``caches`` hold
+    paged pools (``init_cache(..., paged_pool=...)``): each row's K/V write
+    and gather go through its page chain, ctx-bounded by the caller-sliced
+    table width.
+
+    ``active`` ((B,) bool) freezes inactive rows' *recurrent* (SSM/RG-LRU)
+    states: K/V writes of inactive rows are hidden by position masking, but
+    recurrent state has no positions, so without the mask a mid-chunked-
+    prefill row would be polluted by other streams' decode blocks.
     """
     B = tokens.shape[0]
     if shd.mesh is not None:
@@ -600,7 +745,8 @@ def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
     x = shd.cs(x, "b", None, None)
     x, new_caches, _ = _run_stages(cfg, params, x, mode="decode",
                                    positions=positions, caches=caches, pos=pos,
-                                   shd=shd, remat=False)
+                                   shd=shd, remat=False,
+                                   page_table=page_table, active=active)
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], x)[:, 0]
     logits = shd.cs(logits, "b", "m")

@@ -1,1 +1,2 @@
 from .engine import ServingEngine, EngineConfig
+from .pager import PageAllocator, SCRATCH_PAGE

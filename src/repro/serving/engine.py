@@ -22,6 +22,19 @@ Data-plane design (the hot path):
   steady-state loop (``run_until_drained``) dispatches blocks of steps with
   **no per-token host transfer**: the per-slot token ids are drained once per
   block, sized to the next stream join/leave event.
+* **Paged KV cache** (``EngineConfig.paged=True``) — full-length attention
+  buffers become a shared pool of fixed-size pages (``serving.pager``);
+  streams hold page chains that grow at decode-block boundaries, so capacity
+  is bounded by tokens in flight instead of ``max_batch x max_len`` and pool
+  exhaustion preempts the youngest stream (freed pages + recompute-on-resume)
+  rather than failing.  Page-table updates ride the existing block cadence —
+  the no-per-token-host-sync invariant holds.
+* **Chunked prefill** (``EngineConfig.chunked_prefill=True``, the default) —
+  prompts longer than the largest bucket are split into bucket-sized chunks
+  admitted across successive decode blocks (Sarathi-style), each chunk a
+  jitted ``prefill_chunk_into_slot`` call that attends to the stream's cached
+  context; sliding-window and long-context configs stay on the slot-native
+  path end to end instead of falling back to the eager reference prefill.
 
 On this CPU container the engine runs reduced models; *virtual time* for
 SLO/energy accounting comes from the calibrated plant model (wall-clock CPU
@@ -48,13 +61,16 @@ import numpy as np
 
 from repro.core import (DualLoopController, MaxFreqController, Request,
                         SLOConfig, make_router)
+from repro.core.telemetry import OccupancyMeter
 from repro.models import (ModelConfig, init_cache, init_params, prefill,
-                          prefill_into_slot, decode_step, sample_tokens)
+                          prefill_into_slot, prefill_chunk_into_slot,
+                          decode_step, sample_tokens)
 from repro.models.config import FULL_ATTN, LOCAL_ATTN
 from repro.models.kvcache import attn_buffer_len
 from repro.sim import PlantModel
 from repro.sim.profiling import profile_decode_table
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
+from .pager import PageAllocator
 
 # CPU XLA has no buffer donation; the jitted step is still correct, so keep
 # the log quiet on smoke runs (donation engages on TPU/GPU).
@@ -119,7 +135,8 @@ def _decode_block_kernel(cfg, temp, ctx, k, max_len,
         sub = None
         if temp > 0.0:
             key, sub = jax.random.split(key)
-        logits, sl = decode_step(params, cfg, tok[:, None], sl, pos)
+        logits, sl = decode_step(params, cfg, tok[:, None], sl, pos,
+                                 active=active)
         nxt = sample_tokens(logits, temp, sub)
         tok = jnp.where(active, nxt, tok)
         pos = pos + active.astype(jnp.int32)
@@ -131,24 +148,76 @@ def _decode_block_kernel(cfg, temp, ctx, k, max_len,
     return tok, caches, pos, key, toks
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(5,))
+def _paged_decode_block_kernel(cfg, temp, k, params, tok, caches, pt, pos,
+                               active, key):
+    """k fused decode steps against paged K/V pools.
+
+    Context bucketing rides on the *shape* of ``pt`` (the page table sliced to
+    the pages covering the current ctx bucket): one compile per (cfg,
+    n_ctx_pages, k_block).  The caller guarantees every active chain covers
+    ``pos + k`` before dispatch, so the in-scan writes never leave the table
+    slice; retired rows' table entries point at the scratch page.
+    """
+    def body(carry, _):
+        tok, cs, pos, key = carry
+        sub = None
+        if temp > 0.0:
+            key, sub = jax.random.split(key)
+        logits, cs = decode_step(params, cfg, tok[:, None], cs, pos,
+                                 page_table=pt, active=active)
+        nxt = sample_tokens(logits, temp, sub)
+        tok = jnp.where(active, nxt, tok)
+        pos = pos + active.astype(jnp.int32)
+        return (tok, cs, pos, key), tok
+
+    (tok, caches, pos, key), toks = jax.lax.scan(
+        body, (tok, caches, pos, key), None, length=k)
+    return tok, caches, pos, key, toks
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _decode_legacy_kernel(cfg, params, tok, caches, pos):
     return decode_step(params, cfg, tok, caches, pos)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(5,))
-def _prefill_kernel(cfg, temp, params, toks, length, caches, slot, tok, pos,
-                    key):
+def _prefill_kernel(cfg, temp, params, toks, length, caches, slot, pt_row,
+                    tok, pos, key):
     """Bucketed slot prefill + first-token sampling (one compile per bucket
-    size, carried by the static shape of ``toks``)."""
+    size, carried by the static shape of ``toks``).  ``pt_row`` is the
+    stream's (1, n_pages) page-table row for paged caches, or None."""
     sub = None
     if temp > 0.0:
         key, sub = jax.random.split(key)
     logits, caches, _ = prefill_into_slot(params, cfg, toks, length, caches,
-                                          slot)
+                                          slot, page_table=pt_row)
     ptok = sample_tokens(logits, temp, sub)[0]
     tok = tok.at[slot].set(ptok)
     pos = pos.at[slot].set(length)
+    return tok, caches, pos, key
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(6,))
+def _chunk_prefill_kernel(cfg, temp, params, toks, start, length, caches,
+                          slot, pt_row, tok, pos, key):
+    """One chunk of a chunked prefill + (provisional) next-token sampling.
+
+    Compile count is |chunk buckets| x |ctx buckets| (the latter via the
+    static shape of ``pt_row`` for paged caches; dense rows are read at their
+    full static buffer length).  Every chunk samples into ``tok[slot]`` —
+    cheap, and only the final chunk's sample survives to seed decoding —
+    and advances ``pos[slot]`` to ``start + length`` so occupancy tracking
+    sees partially-prefilled streams.
+    """
+    sub = None
+    if temp > 0.0:
+        key, sub = jax.random.split(key)
+    logits, caches = prefill_chunk_into_slot(params, cfg, toks, start, length,
+                                             caches, slot, page_table=pt_row)
+    ptok = sample_tokens(logits, temp, sub)[0]
+    tok = tok.at[slot].set(ptok)
+    pos = pos.at[slot].set(start + length)
     return tok, caches, pos, key
 
 
@@ -163,14 +232,43 @@ class EngineConfig:
     slot_native: bool = True        # False -> legacy data plane (benchmarks)
     decode_block: int = 64          # max decode steps in flight per host drain
     min_bucket: int = 16            # smallest prefill padding bucket
+    # paged KV cache (serving.pager): full-length attention buffers become a
+    # shared page pool; capacity = tokens in flight, not max_batch * max_len
+    paged: bool = False
+    page_size: int = 16             # tokens per page
+    num_pages: int = 0              # per-layer pool size incl. scratch page;
+    #                                 0 -> dense-equivalent capacity
+    # split prompts longer than the largest bucket into bucket-sized chunks
+    # admitted across successive decode blocks (False -> legacy eager-prefill
+    # fallback; forced True when paged)
+    chunked_prefill: bool = True
+    cache_dtype: str = "bfloat16"   # K/V buffer dtype (f32 for exactness tests)
 
 
 class _Stream:
-    def __init__(self, req: Request, slot: int, last_token: int, pos: int):
+    def __init__(self, req: Request, slot: int, last_token: int, pos: int,
+                 order: int = 0):
         self.req = req
         self.slot = slot
         self.last_token = last_token
         self.pos = pos
+        self.order = order          # admission sequence; preemption victims
+        #                             are chosen youngest-first
+
+
+class _ChunkState:
+    """A stream mid-chunked-prefill: owns a slot (and page chain) but does
+    not decode yet; ``tokens`` is the full context to prefill and ``start``
+    the next chunk's absolute position.  ``resume_tok`` carries the
+    already-sampled next token of a preempted stream being recomputed."""
+
+    def __init__(self, req: Request, slot: int, tokens: np.ndarray,
+                 resume_tok: Optional[int] = None):
+        self.req = req
+        self.slot = slot
+        self.tokens = tokens
+        self.start = 0
+        self.resume_tok = resume_tok
 
 
 class ServingEngine:
@@ -196,14 +294,40 @@ class ServingEngine:
             self.controller = MaxFreqController(hw)
 
         B = ecfg.max_batch
-        self.caches = init_cache(cfg, B, ecfg.max_len)
+        # paged mode needs chunking (preemption resume replays arbitrary-
+        # length contexts); tracked engine-side, the caller's config is
+        # never mutated
+        self._chunked = bool(ecfg.chunked_prefill or ecfg.paged)
+        if ecfg.paged:
+            assert ecfg.slot_native, "paged KV requires the slot-native plane"
+            ps = ecfg.page_size
+            self._max_pages = -(-ecfg.max_len // ps)
+            n_pages = ecfg.num_pages or (B * self._max_pages + 1)
+            self.pager = PageAllocator(n_pages, ps, B, self._max_pages)
+            pool = (n_pages, ps)
+        else:
+            self.pager = None
+            pool = None
+        self.caches = init_cache(cfg, B, ecfg.max_len,
+                                 dtype=jnp.dtype(ecfg.cache_dtype),
+                                 paged_pool=pool)
         self.active: Dict[int, _Stream] = {}
+        self.prefilling: Dict[int, _ChunkState] = {}
         self.free_slots = list(range(B))
         self.pending: List[Request] = []
         self.vtime = 0.0
         self.energy_j = 0.0
+        # per-phase accounting (matches sim.replay.Metrics: prefill vs decode
+        # energy and token counts so real-engine and simulator runs compare)
+        self.prefill_energy_j = 0.0
+        self.decode_energy_j = 0.0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self._occupancy = OccupancyMeter()   # pool-pressure telemetry
+        self._order = 0
         self._tbt: Dict[int, List[float]] = {}
         self._completed = 0
+        self._preempted = 0
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -235,12 +359,21 @@ class ServingEngine:
         # context buckets for decode: attention cost is O(cache buffer), so
         # the decode kernel runs over the cache sliced to the smallest bucket
         # covering every active position in the block, then splices back.
+        # Paged mode slices the *page table* instead, so buckets are rounded
+        # up to page multiples (compile count stays |ctx_buckets|).
         self.ctx_buckets: List[int] = []
         b = max(ecfg.min_bucket, 32)
         while b < ecfg.max_len:
             self.ctx_buckets.append(b)
             b *= 2
         self.ctx_buckets.append(ecfg.max_len)
+        if ecfg.paged:
+            ps = ecfg.page_size
+            self.ctx_buckets = sorted({-(-c // ps) * ps
+                                       for c in self.ctx_buckets})
+        # chunked prefill: chunk length = the largest admission bucket, so
+        # every chunk reuses the existing bucket set (no extra compiles)
+        self.chunk_len = self.buckets[-1]
         # fixed block sizes (steps fused into one jitted lax.scan) bound the
         # (ctx_bucket, k) compile count to |ctx_buckets| * |K_BLOCKS|
         self._k_blocks = tuple(sorted({1, 4, 16, ecfg.decode_block},
@@ -260,22 +393,42 @@ class ServingEngine:
         req.prompt = np.asarray(prompt_tokens, np.int32)[-self.ecfg.max_len // 2:]
         self.pending.append(req)
 
-    def _account_prefill(self, req: Request):
-        t_pf = self.plant.prefill_latency(req.prompt_len, self.controller.freq)
-        p_pf = self.plant.prefill_power(req.prompt_len,
-                                        self.controller.freq, t_pf)
+    def _account_prefill_tokens(self, n_tokens: int, first: bool,
+                                req: Request):
+        """Bill ``n_tokens`` of prefill work (one-shot prompt or one chunk) to
+        the prefill phase.  Chunk billing approximates attention-to-past as
+        part of the per-chunk latency fit (Sarathi-style accounting)."""
+        t_pf = self.plant.prefill_latency(n_tokens, self.controller.freq)
+        p_pf = self.plant.prefill_power(n_tokens, self.controller.freq, t_pf)
         self.energy_j += t_pf * p_pf
+        self.prefill_energy_j += t_pf * p_pf
+        self.prefill_tokens += n_tokens
         self.vtime += t_pf
-        req.prefill_start = self.vtime - t_pf
+        if first:
+            req.prefill_start = self.vtime - t_pf
+
+    def _account_prefill(self, req: Request):
+        self._account_prefill_tokens(req.prompt_len, True, req)
         req.first_token = self.vtime
 
-    def _start_stream(self, req: Request, slot: int, tok: int, pos: int):
-        st = _Stream(req, slot, tok, pos)
-        req.tokens.append(tok)
-        req.tokens_emitted = 1
+    def _start_stream(self, req: Request, slot: int, tok: int, pos: int,
+                      resumed: bool = False):
+        self._order += 1
+        st = _Stream(req, slot, tok, pos, self._order)
+        if not resumed:
+            req.tokens.append(tok)
+            req.tokens_emitted = 1
         self.active[slot] = st
         self._active_host[slot] = True
         self._active = jnp.asarray(self._active_host)
+
+    def _pt_rows(self, slot: int, upto: int):
+        """(1, n_ctx) page-table row covering positions < the smallest ctx
+        bucket >= upto (static widths bound compile count)."""
+        ctx = next((c for c in self.ctx_buckets if c >= upto),
+                   self.ctx_buckets[-1])
+        n_ctx = min(-(-ctx // self.ecfg.page_size), self._max_pages)
+        return self.pager.table_device()[slot:slot + 1, :n_ctx]
 
     def _admit_slot(self, req: Request, slot: int):
         prompt = req.prompt
@@ -283,10 +436,15 @@ class ServingEngine:
         bucket = next(b for b in self.buckets if b >= L)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :L] = prompt
+        pt_row = None
+        if self.pager is not None:
+            ok = self.pager.ensure(slot, L)      # gated by _admit
+            assert ok, "admission gate let an unallocatable prompt through"
+            pt_row = self._pt_rows(slot, bucket)
         self._tok, self.caches, self._pos, self._key = _prefill_kernel(
             self.cfg, self._temp,
             self.params, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
-            self.caches, jnp.asarray(slot, jnp.int32),
+            self.caches, jnp.asarray(slot, jnp.int32), pt_row,
             self._tok, self._pos, self._key)
         self._account_prefill(req)
         # one tiny host read per admission (the first sampled token id)
@@ -299,7 +457,8 @@ class ServingEngine:
         writes need S_pad <= buf_len) and by ``slot_native=False``.
         """
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        caches = init_cache(self.cfg, 1, self.ecfg.max_len)
+        caches = init_cache(self.cfg, 1, self.ecfg.max_len,
+                            dtype=jnp.dtype(self.ecfg.cache_dtype))
         logits, caches, pos = prefill(self.params, self.cfg, toks, caches)
         self.caches = jax.tree.map(
             lambda full, one: full.at[:, slot:slot + 1].set(one)
@@ -315,19 +474,106 @@ class ServingEngine:
 
     def _admit(self):
         while self.pending and self.free_slots:
-            req = self.pending.pop(0)
+            req = self.pending[0]
+            resume = bool(req.tokens)        # preempted stream: recompute
+            ctx_toks = req.prompt if not resume else np.concatenate(
+                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            if self.pager is not None and not self.pager.can_admit(
+                    min(len(ctx_toks), self.chunk_len)):
+                break                        # FIFO head-of-line: wait for pages
+            self.pending.pop(0)
             slot = self.free_slots.pop(0)
-            if self.ecfg.slot_native and len(req.prompt) <= self.buckets[-1]:
-                self._admit_slot(req, slot)
-            else:
+            if not self.ecfg.slot_native:
                 self._admit_legacy(req, slot)
+            elif resume or len(ctx_toks) > self.buckets[-1]:
+                if self._chunked:
+                    self._start_chunked(req, slot, ctx_toks, resume)
+                else:
+                    self._admit_legacy(req, slot)
+            else:
+                self._admit_slot(req, slot)
+
+    def _start_chunked(self, req: Request, slot: int, ctx_toks: np.ndarray,
+                       resume: bool):
+        """Admit via chunked prefill: the stream owns ``slot`` now but joins
+        the decode batch only after its last chunk (``_advance_chunks``)."""
+        self.prefilling[slot] = _ChunkState(
+            req, slot, np.asarray(ctx_toks, np.int32),
+            resume_tok=req.tokens[-1] if resume else None)
+
+    def _advance_chunks(self) -> bool:
+        """Process one chunk for every mid-prefill stream (called once per
+        decode block: chunked admission interleaves with decoding instead of
+        stalling it for a full long prompt).  Returns True if any advanced."""
+        progressed = False
+        finished: List[int] = []
+        for slot, cs in list(self.prefilling.items()):
+            chunk = cs.tokens[cs.start: cs.start + self.chunk_len]
+            if self.pager is not None:
+                ok = self.pager.ensure(slot, cs.start + len(chunk))
+                while not ok and self._preempt_for_pages():
+                    ok = self.pager.ensure(slot, cs.start + len(chunk))
+                if not ok:
+                    continue             # stall this chunk; retry next block
+            bucket = next(b for b in self.buckets if b >= len(chunk))
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :len(chunk)] = chunk
+            pt_row = None
+            if self.pager is not None:
+                pt_row = self._pt_rows(slot, cs.start + bucket)
+            self._tok, self.caches, self._pos, self._key = \
+                _chunk_prefill_kernel(
+                    self.cfg, self._temp, self.params, jnp.asarray(padded),
+                    jnp.asarray(cs.start, jnp.int32),
+                    jnp.asarray(len(chunk), jnp.int32),
+                    self.caches, jnp.asarray(slot, jnp.int32), pt_row,
+                    self._tok, self._pos, self._key)
+            # resumed streams keep their original prefill_start/first_token
+            self._account_prefill_tokens(
+                len(chunk), cs.start == 0 and cs.resume_tok is None, cs.req)
+            cs.start += len(chunk)
+            progressed = True
+            if cs.start >= len(cs.tokens):
+                finished.append(slot)
+        for slot in finished:
+            cs = self.prefilling.pop(slot)
+            if cs.resume_tok is not None:
+                # recomputed stream: next token was already sampled before
+                # preemption; restore it instead of the chunk's provisional
+                self._tok = self._tok.at[slot].set(cs.resume_tok)
+                self._start_stream(cs.req, slot, cs.resume_tok,
+                                   len(cs.tokens), resumed=True)
+            else:
+                cs.req.first_token = self.vtime
+                self._start_stream(cs.req, slot, int(self._tok[slot]),
+                                   len(cs.tokens))
+        return progressed
+
+    def _preempt_for_pages(self) -> bool:
+        """Free the youngest decoding stream's pages and requeue it for
+        recompute-on-resume (its emitted tokens are replayed through chunked
+        prefill).  Returns False when there is nothing to preempt."""
+        if not self.active:
+            return False
+        slot = max(self.active, key=lambda s: self.active[s].order)
+        st = self.active.pop(slot)
+        self.pager.free_chain(slot)
+        self._active_host[slot] = False
+        self._active = jnp.asarray(self._active_host)
+        self.free_slots.append(slot)
+        self.pending.insert(0, st.req)
+        self._preempted += 1
+        return True
 
     # -- decode ----------------------------------------------------------------
     def _account_decode_step(self, batch: int, ctx: float, dur=None) -> float:
         f = self.controller.maybe_tick(self.vtime)
         if dur is None:
             dur = self.plant.decode_step_latency(batch, ctx, f)
-        self.energy_j += dur * self.plant.decode_power(batch, ctx, f, dur)
+        e = dur * self.plant.decode_power(batch, ctx, f, dur)
+        self.energy_j += e
+        self.decode_energy_j += e
+        self.decode_tokens += batch
         self.vtime += dur
         self.controller.record_tokens(self.vtime, batch, dur)
         return dur
@@ -345,8 +591,30 @@ class ServingEngine:
             self.free_slots.append(slot)
             del self.active[slot]
             self._active_host[slot] = False
+            if self.pager is not None:
+                self.pager.free_chain(slot)   # whole chain back to the pool
         if slots:
             self._active = jnp.asarray(self._active_host)
+
+    def _grow_for_block(self, k: int) -> int:
+        """Grow every active chain to cover ``pos + k`` before the block is
+        dispatched (the in-scan writes must stay inside allocated pages).
+        Shrinks ``k``, then preempts youngest streams, if the pool runs dry.
+        """
+        while True:
+            ordered = sorted(self.active.items(),
+                             key=lambda kv: kv[1].order)   # oldest first
+            if all(self.pager.ensure(s, st.pos + k) for s, st in ordered):
+                return k
+            if k > 1:
+                k = max(k // 2, 1)
+                continue
+            if len(self.active) > 1:
+                self._preempt_for_pages()
+                continue
+            raise RuntimeError(
+                "page pool exhausted: a lone stream cannot grow by one page "
+                f"({self.pager.pages_used}/{self.pager.num_pages - 1} used)")
 
     def _decode_block(self, k: int) -> int:
         """Run ``k`` decode steps with a single host drain at the end.
@@ -355,11 +623,20 @@ class ServingEngine:
         to the next join/leave event), so virtual-time accounting needs no
         device data and the jitted steps pipeline without a host sync.
         """
+        if self.pager is not None and self.active:
+            k = self._grow_for_block(k)
         snapshot = list(self.active.items())
         batch = len(snapshot)
         if batch == 0:
             return 0
         max_pos = max(st.pos for st in self.active.values())
+        if self.prefilling:
+            # mid-prefill rows are inactive but still receive the held-pos
+            # write each step; the ctx bucket (cache slice / page-table
+            # slice) must cover their positions or that write wraps onto
+            # position pos % ctx and corrupts their already-written context
+            max_pos = max(max_pos,
+                          max(cs.start for cs in self.prefilling.values()))
         wall = self.ecfg.use_wall_clock
         toks_dev = []
         durs: List[Optional[float]] = []   # per-step; None -> plant model
@@ -372,11 +649,20 @@ class ServingEngine:
             room = max(ctx - max_pos, 1)
             kb = next((b for b in self._k_blocks if b <= min(left, room)), 1)
             t0 = time.perf_counter() if wall else 0.0
-            (self._tok, self.caches, self._pos, self._key, tk) = \
-                _decode_block_kernel(
-                    self.cfg, self._temp, ctx, kb, self.ecfg.max_len,
-                    self.params, self._tok, self.caches, self._pos,
-                    self._active, self._key)
+            if self.pager is not None:
+                n_ctx = min(ctx // self.ecfg.page_size, self._max_pages)
+                pt = self.pager.table_device()[:, :n_ctx]
+                (self._tok, self.caches, self._pos, self._key, tk) = \
+                    _paged_decode_block_kernel(
+                        self.cfg, self._temp, kb,
+                        self.params, self._tok, self.caches, pt, self._pos,
+                        self._active, self._key)
+            else:
+                (self._tok, self.caches, self._pos, self._key, tk) = \
+                    _decode_block_kernel(
+                        self.cfg, self._temp, ctx, kb, self.ecfg.max_len,
+                        self.params, self._tok, self.caches, self._pos,
+                        self._active, self._key)
             toks_dev.append(tk)        # (kb, B) device, drained at block end
             if wall:
                 # wall-clock mode syncs per chunk (still amortized over kb
@@ -409,6 +695,9 @@ class ServingEngine:
                 if self._finish_check(st):
                     done.append(slot)
         self._retire(done)
+        if self.pager is not None:
+            self._occupancy.record(self.vtime,
+                                   self.pager.occupancy()["occupancy"])
         return batch
 
     def _step_legacy(self) -> int:
@@ -439,8 +728,11 @@ class ServingEngine:
         return batch
 
     def step(self) -> int:
-        """Admit + one decode step over all active streams."""
+        """Admit (+ advance chunked prefills) + one decode step over all
+        active streams."""
         self._admit()
+        if self.ecfg.slot_native:
+            self._advance_chunks()
         if not self.active:
             return 0
         if not self.ecfg.slot_native:
@@ -449,7 +741,8 @@ class ServingEngine:
 
     def _horizon(self) -> int:
         """Steps until the next guaranteed stream leave (no joins possible:
-        the caller admits first)."""
+        the caller admits first).  Capped at ``decode_block`` — which also
+        bounds how long a mid-prefill stream waits for its next chunk."""
         rem_out = min(max(st.req.output_len - st.req.tokens_emitted, 1)
                       for st in self.active.values())
         rem_len = min(self.ecfg.max_len - 1 - st.pos
@@ -458,9 +751,20 @@ class ServingEngine:
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
         steps = 0
-        while (self.pending or self.active) and steps < max_steps:
+        while (self.pending or self.active or self.prefilling) \
+                and steps < max_steps:
             self._admit()
+            progressed = False
+            if self.ecfg.slot_native:
+                progressed = self._advance_chunks()
             if not self.active:
+                if progressed:
+                    steps += 1            # chunk-only rounds still count
+                    continue
+                if self.prefilling or self.pending:
+                    raise RuntimeError(
+                        "serving stalled: pending/prefilling streams cannot "
+                        "obtain pages or slots and nothing is decoding")
                 break
             if not self.ecfg.slot_native:
                 self._step_legacy()
@@ -473,12 +777,32 @@ class ServingEngine:
 
     def stats(self) -> Dict:
         tbts = [x for v in self._tbt.values() for x in v]
-        return {
+        s = {
             "completed": self._completed,
             "pending": len(self.pending),
             "active": len(self.active),
+            "prefilling": len(self.prefilling),
             "vtime_s": self.vtime,
             "energy_j": self.energy_j,
+            # per-phase split, comparable with sim.replay.Metrics
+            "prefill_energy_j": self.prefill_energy_j,
+            "decode_energy_j": self.decode_energy_j,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
             "p95_tbt_ms": float(np.percentile(tbts, 95)) * 1e3 if tbts else 0,
             "freq_mhz": self.controller.freq,
         }
+        if self.pager is not None:
+            # a stream at position pos holds K/V for positions 0..pos-1
+            live = {sl: st.pos for sl, st in self.active.items()}
+            live.update({sl: cs.start for sl, cs in self.prefilling.items()})
+            occ = self.pager.occupancy(live)
+            s.update({
+                "pages_used": occ["pages_used"],
+                "pages_total": occ["pages_total"],
+                "page_occupancy": occ["occupancy"],
+                "page_occupancy_peak": occ["peak_occupancy"],
+                "page_fragmentation": occ["fragmentation"],
+                "preempted": self._preempted,
+            })
+        return s

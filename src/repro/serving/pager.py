@@ -1,0 +1,154 @@
+"""Paged KV-cache subsystem: block allocator + device-side page table.
+
+vLLM-style paging for the slot-native serving engine: every full-length
+attention buffer (the ``max_len`` K/V rows that gate concurrent-stream
+capacity) is replaced by a shared pool of fixed-size pages, and each stream
+holds a *chain* of pages covering exactly its live context.  Capacity is then
+bounded by total tokens in flight, not ``max_batch x max_len``, which is the
+phase-aware capacity lever GreenLLM's decode controller needs (decode is
+memory-bound; energy/token falls with batch size at fixed frequency).
+
+Split of responsibilities:
+
+* **Host-side policy** (this module): a free-list allocator with per-stream
+  page chains — alloc on admit, incremental grow at decode-block boundaries,
+  free at retire.  All decisions happen at admission/block granularity, so the
+  engine's no-per-token-host-sync invariant is preserved.
+* **Device-side mechanism**: a ``(max_streams, max_pages_per_stream)`` int32
+  page table mapping (slot, logical page) -> physical page id.  The jitted
+  decode/prefill kernels receive a ctx-bucketed slice of this table and
+  gather/scatter K/V by physical page; the table is re-uploaded only when the
+  host allocator mutates it (admit / grow / retire — never per token).
+
+Page 0 is a reserved scratch page: freed streams' table rows point at it, so
+the (held) writes of inactive batch rows inside a decode block land in scratch
+instead of corrupting pages that may have been reallocated to other streams.
+Reads from scratch are position-masked exactly like unwritten dense slots.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list page allocator with per-stream chains and a host-shadowed
+    device page table.
+
+    Invariants (property-tested in tests/test_paging.py):
+    * a physical page is in exactly one place: the free list or one chain
+      (double frees raise);
+    * ``pages_used + pages_free == num_pages - 1`` (scratch excluded);
+    * chains grow monotonically between ``free_chain`` calls and are returned
+      to the free list in full at retire;
+    * table rows of unallocated logical pages (and of freed streams) point at
+      ``SCRATCH_PAGE``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_streams: int,
+                 max_pages_per_stream: int):
+        assert num_pages >= 2, "need at least scratch + one usable page"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_stream = max_pages_per_stream
+        # LIFO free list: recently-freed pages are reused first (locality)
+        self._free: List[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
+        self._free_set = set(self._free)
+        self.chains: Dict[int, List[int]] = {}
+        self.peak_used = 0               # run peak, monotone (telemetry)
+        self.table = np.full((max_streams, max_pages_per_stream),
+                             SCRATCH_PAGE, np.int32)
+        self._dev = None          # cached device copy, refreshed when dirty
+        self._dirty = True
+
+    # -- capacity queries -----------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_used(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self._free)
+
+    # -- alloc / grow / free --------------------------------------------------
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s chain to cover ``n_tokens``; all-or-nothing.
+
+        Returns False (allocating nothing) if the free list can't cover the
+        growth — the caller shrinks its decode block or preempts a stream.
+        """
+        chain = self.chains.setdefault(slot, [])
+        need = self.pages_for(n_tokens) - len(chain)
+        if need <= 0:
+            return True
+        if need > len(self._free):
+            return False
+        if len(chain) + need > self.max_pages_per_stream:
+            raise ValueError(
+                f"stream {slot} needs {len(chain) + need} pages "
+                f"> max_pages_per_stream={self.max_pages_per_stream}")
+        for _ in range(need):
+            page = self._free.pop()
+            self._free_set.discard(page)
+            self.table[slot, len(chain)] = page
+            chain.append(page)
+        self.peak_used = max(self.peak_used, self.pages_used)
+        self._dirty = True
+        return True
+
+    def free_chain(self, slot: int) -> int:
+        """Return every page of ``slot``'s chain to the free list and point
+        the table row back at scratch.  Returns the number of pages freed."""
+        chain = self.chains.pop(slot, [])
+        for page in chain:
+            if page in self._free_set or page == SCRATCH_PAGE:
+                raise ValueError(f"double free of page {page} (slot {slot})")
+            self._free.append(page)
+            self._free_set.add(page)
+        if chain:
+            self.table[slot, :] = SCRATCH_PAGE
+            self._dirty = True
+        return len(chain)
+
+    # -- device table ---------------------------------------------------------
+    def table_device(self):
+        """jnp copy of the table; re-uploaded only after host mutations."""
+        if self._dirty or self._dev is None:
+            import jax.numpy as jnp
+            self._dev = jnp.asarray(self.table)
+            self._dirty = False
+        return self._dev
+
+    # -- telemetry ------------------------------------------------------------
+    def occupancy(self, live_tokens: Optional[Dict[int, int]] = None) -> Dict:
+        """Pool pressure for ``stats()``/telemetry: later energy PRs feed
+        ``occupancy`` to the controller as a memory-pressure input.
+
+        ``fragmentation`` is internal (last-page slack): 1 - live tokens /
+        token slots held.  There is no external fragmentation — pages are
+        uniform — so this is the only capacity lost to the page granularity.
+        """
+        usable = self.num_pages - 1
+        used = self.pages_used
+        frag = 0.0
+        if live_tokens is not None and used:
+            held = sum(len(self.chains.get(s, [])) for s in live_tokens)
+            live = sum(live_tokens.values())
+            if held:
+                frag = 1.0 - live / (held * self.page_size)
+        return {
+            "pages_used": used,
+            "pages_total": usable,
+            "occupancy": used / usable if usable else 0.0,
+            "peak_occupancy": self.peak_used / usable if usable else 0.0,
+            "fragmentation": frag,
+        }

@@ -45,6 +45,28 @@ def test_moe_capacity_drops_tokens():
     assert float(jnp.min(norms)) == pytest.approx(0.0, abs=1e-6)
 
 
+@pytest.mark.parametrize("impl", ["einsum", "scatter"])
+@pytest.mark.parametrize("cf", [1.0, 1.25])
+def test_moe_bucketed_prefill_pads_masked_at_tight_capacity(impl, cf):
+    """Bucketed slot prefill at *tight* capacity must match the unpadded
+    reference exactly: pads are routed out of expert-capacity competition and
+    the per-row capacity is clamped to what the true length would produce
+    (the static capacity comes from the padded bucket and is inflated)."""
+    from repro.models import prefill_into_slot
+    cfg = _moe_cfg(cf).replace(moe_impl=impl, max_seq=256)
+    params = init_params(KEY, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (11,), 0,
+                                cfg.vocab_size)
+    ref_caches = init_cache(cfg, 1, 64, dtype=jnp.float32)
+    lg_ref, _, _ = prefill(params, cfg, prompt[None], ref_caches)
+    slot_caches = init_cache(cfg, 2, 64, dtype=jnp.float32)
+    padded = jnp.zeros((1, 32), jnp.int32).at[0, :11].set(prompt)
+    lg_slot, _, _ = prefill_into_slot(params, cfg, padded, jnp.asarray(11),
+                                      slot_caches, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_slot),
+                               atol=1e-6)
+
+
 def test_chunked_ce_matches_full():
     cfg = get_config("granite-8b").smoke().replace(dtype="float32")
     params = init_params(KEY, cfg)

@@ -80,9 +80,10 @@ def test_slot_path_matches_reference_mixed_positions(variant):
 
 
 def test_windowed_prompt_falls_back_to_reference_admission():
-    """Prompts longer than a sliding-window buffer can't take the bucketed
-    slot write; the engine must route them through the reference prefill and
-    still decode correctly in the shared batch."""
+    """With chunked prefill disabled, prompts longer than a sliding-window
+    buffer can't take the bucketed slot write; the engine must route them
+    through the reference prefill and still decode correctly in the shared
+    batch.  (The chunked default path is covered in tests/test_paging.py.)"""
     cfg = _cfg("local")
     params = init_params(KEY, cfg)
     rng = np.random.default_rng(5)
@@ -90,7 +91,7 @@ def test_windowed_prompt_falls_back_to_reference_admission():
     p1 = rng.integers(0, cfg.vocab_size, size=9)    # bucketed
     r0 = Request(rid=0, arrival=0.0, prompt_len=len(p0), output_len=8)
     r1 = Request(rid=1, arrival=0.0, prompt_len=len(p1), output_len=8)
-    eng = _engine(cfg, params)
+    eng = _engine(cfg, params, chunked_prefill=False)
     assert eng.buckets[-1] == 16
     eng.submit(r0, p0)
     eng.step()
