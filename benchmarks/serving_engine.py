@@ -24,8 +24,17 @@ Paged scenarios (``--paged``):
   K/V memory: the dense layout pins ``memory / max_len`` streams; paging
   holds ``max_batch`` (the acceptance lever for GreenLLM's decode batching).
 
+Cluster scenario (``--cluster``):
+
+* ``cluster_disagg_1p1d`` — a 2-replica disaggregated prefill/decode cluster
+  (paged-KV handoff, per-phase DVFS) vs a 2x-colocated max-frequency
+  baseline on the same mini-trace: tokens/s, energy ratio (incl. idle up to
+  the shared makespan), handoff and preemption counts.  ``--governors ""``
+  skips the per-governor engine scenarios and runs only this one (CI smoke).
+
     PYTHONPATH=src python benchmarks/serving_engine.py [--quick] [--paged]
-        [--arch qwen2-1.5b] [--batches 1,4,8] [--governors greenllm,defaultnv]
+        [--cluster] [--arch qwen2-1.5b] [--batches 1,4,8]
+        [--governors greenllm,defaultnv]
 
 Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
 """
@@ -160,9 +169,49 @@ def bench_paged_capacity(cfg, params, *, governor, nreq, out_len):
     return peak, dense_eq, s["decode_tokens"] / dt
 
 
+def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
+    """Disaggregated 1 prefill + 1 decode cluster (GreenLLM per-phase DVFS)
+    vs an equal-replica-count colocated max-frequency baseline on the same
+    mini-trace: completed counts must match, and the energy ratio (incl.
+    idle up to the shared makespan) is the headline number.
+
+    Returns (tok/s of the disaggregated run, energy ratio disagg/colocated,
+    handoffs, preemptions).
+    """
+    from repro.core import Request
+    from repro.serving import EngineConfig, ServingCluster
+
+    def trace():
+        rng = np.random.default_rng(0)
+        out = []
+        for i in range(nreq):
+            plen = int(rng.integers(24, max_len // 2))
+            out.append((Request(rid=i, arrival=0.05 * i, prompt_len=plen,
+                                output_len=out_len),
+                        rng.integers(0, cfg.vocab_size, size=plen)))
+        return out
+
+    def run(**kw):
+        cl = ServingCluster(cfg, params=params, ecfg=EngineConfig(
+            max_batch=8, max_len=max_len, governor=kw.pop("governor")), **kw)
+        for r, p in trace():
+            cl.submit(r, np.asarray(p))
+        t0 = time.perf_counter()
+        st = cl.run_until_drained()
+        return st, time.perf_counter() - t0
+
+    base, _ = run(governor="defaultnv", n_prefill=0, n_decode=0,
+                  n_colocated=2)
+    st, dt = run(governor="greenllm", n_prefill=1, n_decode=1)
+    assert st["completed"] == base["completed"] == nreq
+    tokens = st["prefill_tokens"] + st["decode_tokens"]
+    return (tokens / dt, st["energy_j"] / base["energy_j"],
+            st["handoffs"], st["preempted"])
+
+
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                          batches=(1, 4, 8), governors=("greenllm", "defaultnv"),
-                         paged: bool = False):
+                         paged: bool = False, cluster: bool = False):
     from repro.configs import get_config
     from repro.models import init_params
 
@@ -212,6 +261,14 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
             rows.extend(_paged_rows(cfg, params, gov=gov, b=b, steps=steps,
                                     nreq=nreq, n_admit=n_admit, warm2=warm2,
                                     dense_decode=dense_decode[b]))
+    if cluster:
+        # 2-replica disaggregated mini-trace vs 2x-colocated max-freq
+        tps, eratio, handoffs, preempted = bench_cluster(
+            cfg, params, nreq=6 if quick else 12, out_len=12 if quick else 24)
+        rows.append(("cluster_disagg_1p1d", 1e6 / max(tps, 1e-9),
+                     f"{tps:.0f}tok/s;energy_vs_colocated="
+                     f"{eratio:.2f}x;handoffs={handoffs};"
+                     f"preempted={preempted}"))
     return rows
 
 
@@ -261,16 +318,20 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="add paged-vs-dense, capacity and long-prompt-"
                          "admission scenarios")
+    ap.add_argument("--cluster", action="store_true",
+                    help="add the 2-replica disaggregated prefill/decode "
+                         "mini-trace vs the 2x-colocated max-freq baseline")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batches", default="1,4,8")
     ap.add_argument("--governors", default="greenllm,defaultnv")
     args = ap.parse_args()
     batches = tuple(int(x) for x in args.batches.split(","))
-    governors = tuple(args.governors.split(","))
+    # --governors "" runs only the standalone scenarios (e.g. --cluster)
+    governors = tuple(g for g in args.governors.split(",") if g)
     print("name,us_per_call,derived")
     for name, us, derived in bench_serving_engine(
             quick=args.quick, arch=args.arch, batches=batches,
-            governors=governors, paged=args.paged):
+            governors=governors, paged=args.paged, cluster=args.cluster):
         print(f"{name},{us:.0f},{derived}", flush=True)
 
 

@@ -24,7 +24,7 @@ import numpy as np
 
 from .hardware import HardwareProfile
 from .models import TPSFreqTable
-from .telemetry import TPSMeter, TBTMeter
+from .telemetry import TPSMeter, TBTMeter, OccupancyMeter
 
 
 @dataclasses.dataclass
@@ -38,6 +38,14 @@ class DecodeControllerConfig:
     hysteresis: int = 3             # consecutive coarse intervals
     adapt_bias: float = 0.80        # fraction of saturated adjustments
     tbt_window: float = 1.0         # s of TBT samples for the P95
+    # memory pressure (paged serving): sustained KV-pool occupancy above
+    # occ_high raises the coarse band by one f_step per pressured coarse
+    # tick (draining streams before the pool forces preemption — recompute
+    # costs more energy than the extra clock); the boost decays one step per
+    # un-pressured tick, so the band returns to the profiled table value
+    # once the episode ends instead of ratcheting permanently
+    occ_high: float = 0.85
+    occ_window: float = 1.0         # s of occupancy samples for the mean
 
 
 class DualLoopController:
@@ -50,6 +58,8 @@ class DualLoopController:
         self.band = (hw.f_max - hw.f_step, hw.f_max, hw.f_max)
         self.tps_meter = TPSMeter(cfg.coarse_period)
         self.tbt_meter = TBTMeter(cfg.tbt_window)
+        self.occ_meter = OccupancyMeter(cfg.occ_window)
+        self._occ_boost = 0     # band overlay steps under memory pressure
         self._bucket: Optional[int] = None
         self._pending_bucket: Optional[int] = None
         self._pending_count = 0
@@ -64,6 +74,10 @@ class DualLoopController:
         self.tps_meter.record_tokens(t, n)
         if n > 0 and tbt > 0:
             self.tbt_meter.record_tbt(t, tbt)
+
+    def record_occupancy(self, t: float, occupancy: float) -> None:
+        """KV page-pool occupancy in [0, 1] (paged serving engine)."""
+        self.occ_meter.record(t, occupancy)
 
     # -- control ticks -----------------------------------------------------------
     def maybe_tick(self, now: float) -> float:
@@ -98,6 +112,29 @@ class DualLoopController:
         if self._bucket is None:  # first observation: adopt immediately
             self._bucket = bucket
             self.band = self.table.band(bucket, self.hw.f_min, self.hw.f_max)
+        # memory pressure: the band is the table's entry for the current
+        # bucket plus a decaying boost — one f_step up per pressured coarse
+        # tick, one down per calm tick — so decode drains streams before the
+        # pool preempts, and the band returns to the profiled value once the
+        # episode ends (no permanent ratchet, no table corruption).  The
+        # fine loop still rules within the (possibly raised) band.
+        if len(self.occ_meter):
+            if self.occ_meter.mean(t) > self.cfg.occ_high:
+                self._occ_boost += 1
+            elif self._occ_boost:
+                self._occ_boost -= 1
+            if self._bucket is not None:
+                s, fm = self.hw.f_step, self.hw.f_max
+                lo, mid, hi = self.table.band(self._bucket, self.hw.f_min, fm)
+                # saturate at the step count that pins lo to f_max: further
+                # growth changes nothing but would stretch the decay tail
+                self._occ_boost = min(self._occ_boost,
+                                      int(np.ceil((fm - lo) / s)))
+                b = self._occ_boost * s
+                self.band = (min(lo + b, fm), min(mid + b, fm),
+                             min(hi + b, fm))
+                self.freq = float(np.clip(self.freq, self.band[0],
+                                          self.band[2]))
         self.history.append((t, self.freq, tps))
 
     def _fine_tick(self, t: float) -> None:
@@ -146,6 +183,9 @@ class MaxFreqController:
     def record_tokens(self, t, n, tbt):
         pass
 
+    def record_occupancy(self, t, occupancy):
+        pass
+
     def maybe_tick(self, now: float) -> float:
         return self.freq
 
@@ -158,6 +198,9 @@ class FixedFreqController:
         self.freq = float(freq)
 
     def record_tokens(self, t, n, tbt):
+        pass
+
+    def record_occupancy(self, t, occupancy):
         pass
 
     def maybe_tick(self, now: float) -> float:

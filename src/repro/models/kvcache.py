@@ -348,6 +348,45 @@ def paged_cache_kv_arrays(cache: Dict, page_table, dtype=jnp.bfloat16):
     return gather(cache["kp"]).astype(dtype), gather(cache["vp"]).astype(dtype)
 
 
+def paged_chain_extract(cache: Dict, chain):
+    """Gather one stream's page chain out of stacked paged pools.
+
+    ``cache`` leaves are (n_rep, num_pages, page_size, ...); ``chain`` is the
+    stream's physical page ids (host list / array).  Returns a parallel dict
+    of (n_rep, len(chain), page_size, ...) arrays — the stream's live K/V and
+    nothing else, which is what makes replica-to-replica migration cost
+    O(context) instead of O(max_len) (no full-length buffer ever moves).
+    """
+    idx = jnp.asarray(chain, jnp.int32)
+    return {k: v[:, idx] for k, v in cache.items()}
+
+
+def paged_chain_insert(cache: Dict, pages: Dict, chain):
+    """Scatter extracted chain pages (``paged_chain_extract`` output) into the
+    physical pages ``chain`` of another (or the same) pool.  The destination
+    chain must have the same length and page size; dtypes are cast to the
+    destination pool's (migration between equal-dtype pools is bit-exact)."""
+    idx = jnp.asarray(chain, jnp.int32)
+    return {k: cache[k].at[:, idx].set(pages[k].astype(cache[k].dtype))
+            for k in cache}
+
+
+def cache_row_extract(cache: Dict, slot: int):
+    """Copy one batch row out of a stacked dense cache dict (bounded ring
+    buffers and recurrent SSM/RG-LRU states): leaves (n_rep, B, ...) ->
+    (n_rep, 1, ...).  Ring content is position-aligned (slot = pos % W), so a
+    row transplanted into another engine at the same stream position reads
+    identically."""
+    return {k: v[:, slot:slot + 1] for k, v in cache.items()}
+
+
+def cache_row_insert(cache: Dict, row: Dict, slot: int):
+    """Splice an extracted row (``cache_row_extract`` output) into batch row
+    ``slot`` of another stacked dense cache dict."""
+    return {k: cache[k].at[:, slot:slot + 1].set(row[k].astype(cache[k].dtype))
+            for k in cache}
+
+
 def state_row_slot(batch_cache, slot):
     """Slice row ``slot`` (traced) out of a batch-shaped recurrent state
     pytree -> leading-dim-1 pytree (chunked prefill resumes from it)."""

@@ -1,2 +1,4 @@
-from .engine import ServingEngine, EngineConfig
+from .engine import ServingEngine, EngineConfig, StreamHandoff
 from .pager import PageAllocator, SCRATCH_PAGE
+from .cluster import (ServingCluster, ClusterDispatcher, Replica,
+                      PrefillPhaseController)

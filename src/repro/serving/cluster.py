@@ -1,0 +1,472 @@
+"""Disaggregated prefill/decode serving cluster with paged-KV handoff and
+per-phase DVFS.
+
+GreenLLM's core observation — prefill is compute-bound, decode memory-bound,
+so they deserve *separate* frequency control — extends naturally to separate
+*placement* (DualScale, PAPERS.md): dedicated prefill and decode replicas,
+each running its phase-optimal policy all the time, instead of one colocated
+engine whose single clock chases whichever phase currently dominates.
+
+Topology and control plane:
+
+* **Replicas** are full ``ServingEngine`` instances sharing model params and
+  one offline profiling pass, in ``role="prefill"``, ``"decode"`` or
+  ``"colocated"``.  Prefill replicas only admit and chunk-prefill; their
+  clock is set per step by the queueing-aware ``PrefillOptimizer`` over the
+  replica's own queue (Eq. 14 with the deadline from the oldest queued
+  request's TTFT budget).  Decode replicas only decode; each runs its own
+  ``DualLoopController`` (with page-occupancy memory pressure).  Colocated
+  replicas behave like the single-engine baseline.
+* **Dispatch** (``ClusterDispatcher``, a ``LengthRouter``): requests are
+  classified by prompt length, then routed to the candidate prefill replica
+  with the shortest *expected ready time* — replica virtual clock plus
+  ``PrefillOptimizer.busy_time`` of its queue at its current frequency
+  (queueing-aware, not just shortest-queue).  Completed prefills migrate to
+  the least-loaded decode replica.
+* **Paged-KV handoff**: migration moves the stream's page-chain K/V,
+  bounded dense rows, recurrent row state, position and last token via
+  ``ServingEngine.export_stream`` / ``import_stream`` — O(context) data
+  through ``PageAllocator.export_chain`` / ``adopt_chain``, never a
+  full-length buffer.  The handoff is atomic: a stream lives on exactly one
+  replica at any instant, and a failed import (no slot / no pages) takes
+  nothing and retries after the decode replica drains.
+* **Shared virtual clock**: every replica advances its engine's virtual time
+  only while working; the cluster always steps the laggard replica next, so
+  replica timelines interleave at decode-block granularity exactly like
+  concurrently-running hardware.  A migrated stream may not start decoding
+  before its export timestamp; idle gaps (a replica waiting on arrivals or
+  on the other phase) are billed at the plant's idle power, and the run's
+  makespan is the max over replica clocks — total energy is therefore
+  directly comparable between disaggregated and colocated layouts at equal
+  replica count.
+
+``examples/serve_trace_replay.py --cluster`` replays azure/alibaba traces
+through a 1 prefill + 1 decode cluster against a 2x-colocated max-frequency
+baseline; ``benchmarks/serving_engine.py --cluster`` is the CI-sized smoke.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (DualLoopController, DecodeControllerConfig,
+                        LengthRouter, MaxFreqController, PrefillOptimizer,
+                        Request, SLOConfig)
+from repro.core.hardware import HardwareProfile, A100_SXM4_40G
+from repro.core.prefill_optimizer import deadline_from_queue
+from repro.models import ModelConfig, init_params
+from repro.sim import PlantModel
+from repro.sim.profiling import (profile_decode_table, profile_power,
+                                 profile_prefill_latency)
+from .engine import EngineConfig, ServingEngine, StreamHandoff
+
+ROLES = ("prefill", "decode", "colocated")
+
+# mirror sim.engine.PrefillWorker: reserve deadline headroom for dispatch +
+# the first decode step, and protect against arrival burstiness
+DEADLINE_SAFETY = 0.72
+FIRST_TOKEN_RESERVE = 0.060  # s
+
+
+class PrefillPhaseController(MaxFreqController):
+    """Frequency holder for a prefill replica: the cluster writes the
+    queueing-aware optimizer's choice into ``freq`` before each admission
+    round and the engine bills prefill work at it.  Same surface as
+    ``MaxFreqController`` (tick/record are no-ops) — prefill frequency is
+    re-planned from the queue, not from telemetry."""
+
+
+class ClusterDispatcher(LengthRouter):
+    """``LengthRouter`` extended with queueing-aware replica selection.
+
+    Classification (thresholds / class names) is inherited; the cluster adds
+    two placement decisions on top:
+
+    * ``pick_prefill``: among the replicas serving the request's class, the
+      one whose *expected ready time* — virtual clock + optimizer-predicted
+      busy time of its queue (plus this request) at its current clock — is
+      smallest.  Falls back to shortest queue when no optimizer is
+      configured (DefaultNV baseline).
+    * ``pick_decode``: least streams in flight (active + queued imports),
+      ties to the laggard clock — decode batching is capacity-driven, so
+      stream count is the right load signal, not predicted latency.
+    """
+
+    def pick_prefill(self, req: Request, replicas: Sequence["Replica"],
+                     optimizer: Optional[PrefillOptimizer]) -> "Replica":
+        cls = self.class_names[self.classify(req.prompt_len)]
+        cands = [r for r in replicas if not r.classes or cls in r.classes] \
+            or list(replicas)
+        if optimizer is None:
+            return min(cands, key=lambda r: (r.queue_depth(), r.vtime))
+
+        def expected_ready(r: "Replica") -> float:
+            lengths = r.queued_lengths() + [req.prompt_len]
+            return r.vtime + optimizer.busy_time(lengths, r.freq)
+
+        return min(cands, key=expected_ready)
+
+    def pick_decode(self, replicas: Sequence["Replica"]) -> "Replica":
+        return min(replicas, key=lambda r: (r.streams_in_flight(), r.vtime))
+
+
+class Replica:
+    """One engine + its role, import queue, and idle-energy meter."""
+
+    def __init__(self, name: str, role: str, engine: ServingEngine,
+                 classes: Tuple[str, ...] = ()):
+        assert role in ROLES, role
+        self.name = name
+        self.role = role
+        self.engine = engine
+        self.classes = classes          # prefill classes served (() = all)
+        self.import_q: List[StreamHandoff] = []
+        self.idle_j = 0.0               # idle energy billed for clock jumps
+        self.exported = 0
+        self.imported = 0
+
+    @property
+    def vtime(self) -> float:
+        return self.engine.vtime
+
+    @property
+    def freq(self) -> float:
+        return self.engine.controller.freq
+
+    def queued_lengths(self) -> List[int]:
+        """Prefill tokens still owed: queued prompts in full, in-flight
+        chunked prefills by their remaining chunks."""
+        e = self.engine
+        return ([r.prompt_len for r in e.pending]
+                + [max(len(cs.tokens) - cs.start, 0)
+                   for cs in e.prefilling.values()])
+
+    def queue_depth(self) -> int:
+        return len(self.engine.pending) + len(self.engine.prefilling)
+
+    def streams_in_flight(self) -> int:
+        e = self.engine
+        return len(e.active) + len(e.prefilling) + len(e.pending) \
+            + len(self.import_q)
+
+    def has_work(self) -> bool:
+        e = self.engine
+        return bool(e.pending or e.prefilling or e.active or self.import_q)
+
+    def advance_to(self, t: float) -> None:
+        """Move this replica's clock forward to ``t`` (waiting on an arrival
+        or a migration), billing the gap at idle power.  Clocks never move
+        backwards — the shared-clock invariant."""
+        gap = t - self.engine.vtime
+        if gap > 0:
+            self.idle_j += gap * self.engine.plant.idle_power
+            self.engine.vtime = t
+
+
+class ServingCluster:
+    """Multi-replica serving cluster on a shared virtual clock.
+
+    ``n_prefill``/``n_decode`` build a disaggregated layout (both > 0 — the
+    phases need each other); ``n_colocated`` adds single-engine-style
+    replicas (a pure colocated cluster is the baseline configuration).
+    All replicas share ``params`` and one offline profiling pass; the paged
+    slot-native data plane is forced because the handoff moves page chains.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_prefill: int = 1,
+                 n_decode: int = 1, n_colocated: int = 0, params=None,
+                 ecfg: Optional[EngineConfig] = None,
+                 hw: HardwareProfile = A100_SXM4_40G,
+                 plant_cfg: ModelConfig = None,
+                 slo: Optional[SLOConfig] = None, seed: int = 0):
+        assert n_prefill + n_decode + n_colocated > 0
+        assert (n_prefill > 0) == (n_decode > 0), \
+            "disaggregated roles come in pairs (prefill output needs a " \
+            "decode replica and vice versa)"
+        self.cfg = cfg
+        self.hw = hw
+        self.slo = slo if slo is not None else SLOConfig()
+        base = ecfg if ecfg is not None else EngineConfig()
+        greenllm = base.governor.lower() == "greenllm"
+        # handoff moves page chains: force the paged slot-native plane
+        self.ecfg = dataclasses.replace(base, paged=True,
+                                        chunked_prefill=True, slo=self.slo)
+        if params is None:
+            params = init_params(jax.random.PRNGKey(seed), cfg)
+        pcfg = plant_cfg or cfg
+
+        # one offline profiling pass shared by every replica (the paper's
+        # microbenchmarks); per-replica controllers get table *copies* so
+        # runtime band adaptation stays replica-local
+        prof_plant = PlantModel(cfg=pcfg, hw=hw, n_chips=1, seed=seed + 999)
+        self._table = None
+        self.optimizer: Optional[PrefillOptimizer] = None
+        if greenllm:
+            deg = 1 if pcfg.is_subquadratic else 2
+            lat = profile_prefill_latency(prof_plant, degree=deg)
+            pwr = profile_power(prof_plant)
+            self.optimizer = PrefillOptimizer(lat, pwr, hw, hw.p_idle)
+            self._table = profile_decode_table(prof_plant,
+                                               self.slo.tbt_target)
+        self.dispatcher = ClusterDispatcher() if greenllm else \
+            ClusterDispatcher(thresholds=(), class_names=("SM",))
+
+        def controller_for(role: str):
+            if role == "prefill":
+                return PrefillPhaseController(hw) if greenllm \
+                    else MaxFreqController(hw)
+            if not greenllm:
+                return MaxFreqController(hw)
+            table = dataclasses.replace(self._table,
+                                        freq_for=self._table.freq_for.copy())
+            return DualLoopController(
+                hw, table, DecodeControllerConfig(tbt_slo=self.slo.tbt_target))
+
+        self.replicas: List[Replica] = []
+
+        def add(role: str, i: int, classes: Tuple[str, ...] = ()):
+            idx = len(self.replicas)
+            eng = ServingEngine(
+                cfg, params=params, ecfg=self.ecfg, hw=hw, seed=seed + idx,
+                plant_cfg=pcfg,
+                plant=PlantModel(cfg=pcfg, hw=hw, n_chips=1,
+                                 seed=seed + 100 + idx),
+                controller=controller_for(role))
+            self.replicas.append(Replica(f"{role}{i}", role, eng, classes))
+
+        n_cls = self.dispatcher.num_classes
+        per_cls = max(1, n_prefill // n_cls)
+        for i in range(n_prefill):
+            # contiguous class partition like sim.engine (replica 0.. serve
+            # class 0, ...); with fewer replicas than classes, serve all
+            classes = () if n_prefill < n_cls else \
+                (self.dispatcher.class_names[min(i // per_cls, n_cls - 1)],)
+            add("prefill", i, classes)
+        for i in range(n_decode):
+            add("decode", i)
+        for i in range(n_colocated):
+            add("colocated", i)
+
+        self.requests: List[Request] = []
+        self._future: List[Tuple[float, int, Request, object]] = []
+        self._seq = 0
+        self._stalled_rounds = 0
+
+    # -- intake ----------------------------------------------------------------
+    def submit(self, req: Request,
+               prompt_tokens: Optional[np.ndarray] = None) -> None:
+        """Queue a request for dispatch at its arrival time."""
+        req.cls = self.dispatcher.class_names[
+            self.dispatcher.classify(req.prompt_len)]
+        heapq.heappush(self._future, (req.arrival, self._seq, req,
+                                      prompt_tokens))
+        self._seq += 1
+        self.requests.append(req)
+
+    def _inject_arrivals(self, now: float) -> None:
+        cands = [r for r in self.replicas
+                 if r.role in ("prefill", "colocated")]
+        while self._future and self._future[0][0] <= now:
+            _, _, req, ptoks = heapq.heappop(self._future)
+            r = self.dispatcher.pick_prefill(req, cands, self.optimizer)
+            r.engine.submit(req, ptoks)
+
+    # -- per-role stepping ------------------------------------------------------
+    def _retune_prefill(self, r: Replica) -> None:
+        """Per-phase DVFS: solve Eq. 14 over this replica's queue with the
+        deadline set by the oldest queued request's TTFT budget."""
+        e = r.engine
+        jobs = list(e.pending) + [cs.req for cs in e.prefilling.values()]
+        if not jobs or self.optimizer is None:
+            return
+        lengths = r.queued_lengths()
+        oldest = min(q.arrival for q in jobs)
+        slo_ttft = min(self.slo.ttft_target(q.cls or "SM") for q in jobs)
+        D = deadline_from_queue(lengths, slo_ttft,
+                                max(e.vtime - oldest, 0.0))
+        D = max(DEADLINE_SAFETY * D - FIRST_TOKEN_RESERVE, 1e-3)
+        f, _ = self.optimizer.choose_frequency(lengths, D)
+        e.controller.freq = f
+        e.controller.history.append((e.vtime, f, 0.0))
+
+    def _migrate(self, src: Replica, ho: StreamHandoff) -> None:
+        dec = [r for r in self.replicas if r.role == "decode"]
+        dst = self.dispatcher.pick_decode(dec)
+        dst.import_q.append(ho)
+        src.exported += 1
+
+    def _drain_imports(self, r: Replica) -> bool:
+        """Adopt queued handoffs whose export time has passed on this
+        replica's clock; capacity-refused imports stay queued (all-or-
+        nothing) and retry after streams retire."""
+        moved, rest = False, []
+        for ho in r.import_q:
+            if ho.export_time <= r.vtime + 1e-12 \
+                    and r.engine.import_stream(ho):
+                r.imported += 1
+                moved = True
+            else:
+                rest.append(ho)
+        r.import_q = rest
+        return moved
+
+    def _admit_arrived(self, r: Replica) -> None:
+        """Admit only requests that have *arrived* on this replica's clock.
+
+        An idle replica first jumps (billing idle) to the earliest pending
+        arrival; requests still in the future are held out of ``_admit`` so
+        a batch of injected arrivals can never be prefilled before its
+        arrival time (which would yield negative TTFT and bill work early).
+        Held requests re-enter on a later step once the clock catches up.
+        """
+        e = r.engine
+        if e.pending and not e.prefilling and not e.active:
+            r.advance_to(min(q.arrival for q in e.pending))
+        held = [q for q in e.pending if q.arrival > e.vtime + 1e-12]
+        if held:
+            e.pending = [q for q in e.pending
+                         if q.arrival <= e.vtime + 1e-12]
+        e._admit()
+        if held:
+            e.pending.extend(held)    # injection order == arrival order
+
+    def _step_prefill(self, r: Replica) -> None:
+        e = r.engine
+        self._retune_prefill(r)
+        self._admit_arrived(r)
+        e._advance_chunks()
+        for slot in list(e.active):   # completed prefills migrate eagerly
+            self._migrate(r, e.export_stream(slot))
+
+    def _step_decode(self, r: Replica) -> None:
+        e = r.engine
+        if not e.active and not e.prefilling and not e.pending \
+                and r.import_q:
+            r.advance_to(min(ho.export_time for ho in r.import_q))
+        self._drain_imports(r)
+        e._admit()              # re-admits locally-preempted streams only
+        e._advance_chunks()     # (recompute-on-resume; no raw prompts here)
+        if e.active:
+            e._decode_block(max(1, e._horizon()))
+
+    def _step_colocated(self, r: Replica) -> None:
+        e = r.engine
+        self._admit_arrived(r)
+        e._advance_chunks()
+        if e.active:
+            e._decode_block(max(1, e._horizon()))
+
+    # -- main loop --------------------------------------------------------------
+    def step(self) -> bool:
+        """Advance the laggard replica by one unit of work (an admission
+        round, a chunk round, or one decode block).  Returns False when the
+        cluster is drained."""
+        workers = [r for r in self.replicas if r.has_work()]
+        now = min((r.vtime for r in workers), default=None)
+        if now is None:
+            if not self._future:
+                return False
+            now = self._future[0][0]
+        self._inject_arrivals(now)
+        workers = [r for r in self.replicas if r.has_work()]
+        if not workers:
+            return bool(self._future)
+        r = min(workers, key=lambda x: x.vtime)
+        marker = self._progress_marker()
+        if r.role == "prefill":
+            self._step_prefill(r)
+        elif r.role == "decode":
+            self._step_decode(r)
+        else:
+            self._step_colocated(r)
+        if self._progress_marker() == marker:
+            self._stalled_rounds += 1
+            if self._stalled_rounds > 4 * len(self.replicas) + 8:
+                raise RuntimeError(
+                    f"cluster stalled: replica {r.name} makes no progress "
+                    f"(pending={len(r.engine.pending)} "
+                    f"prefilling={len(r.engine.prefilling)} "
+                    f"imports={len(r.import_q)})")
+        else:
+            self._stalled_rounds = 0
+        return True
+
+    def _progress_marker(self):
+        done = sum(1 for q in self.requests if q.finish >= 0)
+        return (done, sum(r.vtime for r in self.replicas),
+                sum(r.imported + r.exported for r in self.replicas),
+                sum(len(r.engine.pending) + len(r.engine.prefilling)
+                    + len(r.engine.active) for r in self.replicas))
+
+    def run_until_drained(self, max_rounds: int = 1_000_000) -> Dict:
+        rounds = 0
+        while self.step():
+            rounds += 1
+            if rounds >= max_rounds:
+                raise RuntimeError("cluster did not drain within "
+                                   f"{max_rounds} rounds")
+        return self.stats()
+
+    # -- metrics ----------------------------------------------------------------
+    def stats(self) -> Dict:
+        """Cluster roll-up: per-replica energy/occupancy (active split by
+        phase + idle up to the shared makespan) and request-level SLO
+        metrics computed like ``sim.replay.compute_metrics``."""
+        makespan = max((r.vtime for r in self.replicas), default=0.0)
+        per: List[Dict] = []
+        tot = {"prefill_energy_j": 0.0, "decode_energy_j": 0.0,
+               "idle_energy_j": 0.0, "energy_j": 0.0,
+               "prefill_tokens": 0, "decode_tokens": 0}
+        for r in self.replicas:
+            s = r.engine.stats()
+            idle = r.idle_j + (makespan - r.vtime) \
+                * r.engine.plant.idle_power
+            row = {
+                "name": r.name, "role": r.role, "vtime_s": r.vtime,
+                "prefill_energy_j": s["prefill_energy_j"],
+                "decode_energy_j": s["decode_energy_j"],
+                "idle_energy_j": idle,
+                "energy_j": s["energy_j"] + idle,
+                "prefill_tokens": s["prefill_tokens"],
+                "decode_tokens": s["decode_tokens"],
+                "exported": r.exported, "imported": r.imported,
+                "preempted": s.get("preempted", 0),
+                "page_occupancy_peak": s.get("page_occupancy_peak", 0.0),
+                "freq_mhz": s["freq_mhz"],
+            }
+            per.append(row)
+            tot["prefill_energy_j"] += s["prefill_energy_j"]
+            tot["decode_energy_j"] += s["decode_energy_j"]
+            tot["idle_energy_j"] += idle
+            tot["energy_j"] += s["energy_j"] + idle
+            tot["prefill_tokens"] += s["prefill_tokens"]
+            tot["decode_tokens"] += s["decode_tokens"]
+
+        # request-level SLO metrics (requests carry cluster-wide state; TBT
+        # records live on whichever replica decoded the stream) — scored by
+        # the same definition as the simulator and the single engine
+        from repro.sim.replay import slo_pass_metrics
+        tbt: Dict[int, List[float]] = {}
+        for r in self.replicas:
+            for rid, v in r.engine._tbt.items():
+                tbt.setdefault(rid, []).extend(v)
+        m = slo_pass_metrics(self.requests, tbt, self.slo,
+                             self.dispatcher.class_names)
+        return {
+            "replicas": per,
+            "completed": sum(1 for q in self.requests if q.finish >= 0),
+            "n_requests": len(self.requests),
+            "makespan_s": makespan,
+            "handoffs": sum(r.imported for r in self.replicas),
+            "preempted": sum(row["preempted"] for row in per),
+            "ttft_pass": m["ttft_pass"],
+            "tbt_pass": m["tbt_pass"],
+            "p90_ttft_s": m["p90_ttft"],
+            "p95_tbt_ms": m["p95_tbt"] * 1e3,
+            "p99_tbt_ms": m["p99_tbt"] * 1e3,
+            **tot,
+        }

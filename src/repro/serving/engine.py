@@ -35,6 +35,14 @@ Data-plane design (the hot path):
   jitted ``prefill_chunk_into_slot`` call that attends to the stream's cached
   context; sliding-window and long-context configs stay on the slot-native
   path end to end instead of falling back to the eager reference prefill.
+* **Stream migration** (``export_stream`` / ``import_stream``) — a decodable
+  stream is a first-class movable object: its page-chain K/V, bounded dense
+  rows, recurrent (SSM/RG-LRU) row state, position and last token transfer
+  into another engine's pool in O(context) data (no full-length buffer is
+  ever copied), which is what makes disaggregated prefill/decode replicas
+  (``serving.cluster``) a cheap placement decision instead of a data-plane
+  rewrite.  Pool pressure can preempt streams in *either* phase (decoding or
+  mid-chunked-prefill), youngest-first, with recompute-on-resume.
 
 On this CPU container the engine runs reduced models; *virtual time* for
 SLO/energy accounting comes from the calibrated plant model (wall-clock CPU
@@ -66,7 +74,9 @@ from repro.models import (ModelConfig, init_cache, init_params, prefill,
                           prefill_into_slot, prefill_chunk_into_slot,
                           decode_step, sample_tokens)
 from repro.models.config import FULL_ATTN, LOCAL_ATTN
-from repro.models.kvcache import attn_buffer_len
+from repro.models.kvcache import (attn_buffer_len, is_paged,
+                                  paged_chain_extract, paged_chain_insert,
+                                  cache_row_extract, cache_row_insert)
 from repro.sim import PlantModel
 from repro.sim.profiling import profile_decode_table
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
@@ -243,6 +253,34 @@ class EngineConfig:
     # fallback; forced True when paged)
     chunked_prefill: bool = True
     cache_dtype: str = "bfloat16"   # K/V buffer dtype (f32 for exactness tests)
+    # SLO targets for stats() pass-rate reporting (parity with
+    # sim.replay.Metrics); virtual-time accounting itself is unaffected
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+
+
+@dataclasses.dataclass
+class StreamHandoff:
+    """A stream extracted from one engine for adoption by another (the
+    disaggregated prefill->decode migration unit).
+
+    ``blocks`` parallels the engine cache pytree: per stage, a tuple of
+    ``("pages", extracted_chain_dict | None)`` for paged attention pools
+    (only the live chain's pages — O(context) data, never a full-length
+    buffer) or ``("row", row_dict)`` for bounded dense buffers (sliding-
+    window rings) and recurrent SSM/RG-LRU states.  Together with ``pos``
+    and ``last_token`` this is the *complete* decodable state of the stream:
+    import followed by decode is token-for-token identical to never having
+    migrated (greedy sampling; temperature sampling draws from the adopting
+    engine's key stream).
+    """
+    req: Request
+    pos: int
+    last_token: int
+    n_pages: int                    # chain length to adopt (0 = nothing paged)
+    blocks: List                    # per-stage tuples of (kind, payload)
+    export_time: float              # exporter's vtime at extraction
+    page_size: int = 0              # 0 when the exporter is unpaged
+    cfg_name: str = ""              # guard against cross-model migration
 
 
 class _Stream:
@@ -263,12 +301,14 @@ class _ChunkState:
     already-sampled next token of a preempted stream being recomputed."""
 
     def __init__(self, req: Request, slot: int, tokens: np.ndarray,
-                 resume_tok: Optional[int] = None):
+                 resume_tok: Optional[int] = None, order: int = 0):
         self.req = req
         self.slot = slot
         self.tokens = tokens
         self.start = 0
         self.resume_tok = resume_tok
+        self.order = order          # admission sequence (preemption victims
+        #                             are youngest-first across phases)
 
 
 class ServingEngine:
@@ -277,18 +317,26 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params=None, *,
                  ecfg: Optional[EngineConfig] = None,
                  hw: HardwareProfile = A100_SXM4_40G, seed: int = 0,
-                 plant_cfg: ModelConfig = None):
+                 plant_cfg: ModelConfig = None, plant: PlantModel = None,
+                 decode_table=None, controller=None):
         # plant_cfg: config used for virtual-time/energy accounting (e.g. the
         # FULL model) while `cfg` (possibly reduced) produces real tokens.
+        # plant / decode_table / controller: cluster injection points — a
+        # multi-replica cluster shares one offline profiling pass and gives
+        # each replica its role's controller (prefill-optimizer-driven or
+        # dual-loop) instead of re-profiling per engine.
         self.cfg = cfg
         self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
         self.params = params if params is not None else init_params(
             jax.random.PRNGKey(seed), cfg)
         self.router = make_router(ecfg.governor.lower() != "defaultnv")
-        self.plant = PlantModel(cfg=plant_cfg or cfg, hw=hw, n_chips=1,
-                                seed=seed)
-        if ecfg.governor.lower() == "greenllm":
-            table = profile_decode_table(self.plant)
+        self.plant = plant if plant is not None else PlantModel(
+            cfg=plant_cfg or cfg, hw=hw, n_chips=1, seed=seed)
+        if controller is not None:
+            self.controller = controller
+        elif ecfg.governor.lower() == "greenllm":
+            table = decode_table if decode_table is not None else \
+                profile_decode_table(self.plant)
             self.controller = DualLoopController(hw, table)
         else:
             self.controller = MaxFreqController(hw)
@@ -328,6 +376,7 @@ class ServingEngine:
         self._tbt: Dict[int, List[float]] = {}
         self._completed = 0
         self._preempted = 0
+        self._done: List[Request] = []   # finished requests (SLO reporting)
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -385,7 +434,9 @@ class ServingEngine:
 
     # -- request intake --------------------------------------------------------
     def submit(self, req: Request, prompt_tokens: Optional[np.ndarray] = None):
-        req.cls = self.router.class_names[self.router.classify(req.prompt_len)]
+        if not req.cls:      # a cluster dispatcher may have classified already
+            req.cls = self.router.class_names[
+                self.router.classify(req.prompt_len)]
         if prompt_tokens is None:
             rng = np.random.default_rng(req.rid)
             prompt_tokens = rng.integers(
@@ -497,9 +548,10 @@ class ServingEngine:
                        resume: bool):
         """Admit via chunked prefill: the stream owns ``slot`` now but joins
         the decode batch only after its last chunk (``_advance_chunks``)."""
+        self._order += 1
         self.prefilling[slot] = _ChunkState(
             req, slot, np.asarray(ctx_toks, np.int32),
-            resume_tok=req.tokens[-1] if resume else None)
+            resume_tok=req.tokens[-1] if resume else None, order=self._order)
 
     def _advance_chunks(self) -> bool:
         """Process one chunk for every mid-prefill stream (called once per
@@ -508,10 +560,12 @@ class ServingEngine:
         progressed = False
         finished: List[int] = []
         for slot, cs in list(self.prefilling.items()):
+            if slot not in self.prefilling:
+                continue        # preempted by a later-iterated stream's growth
             chunk = cs.tokens[cs.start: cs.start + self.chunk_len]
             if self.pager is not None:
                 ok = self.pager.ensure(slot, cs.start + len(chunk))
-                while not ok and self._preempt_for_pages():
+                while not ok and self._preempt_for_pages(exclude=slot):
                     ok = self.pager.ensure(slot, cs.start + len(chunk))
                 if not ok:
                     continue             # stall this chunk; retry next block
@@ -536,7 +590,10 @@ class ServingEngine:
             if cs.start >= len(cs.tokens):
                 finished.append(slot)
         for slot in finished:
-            cs = self.prefilling.pop(slot)
+            cs = self.prefilling.pop(slot, None)
+            if cs is None:
+                continue        # preempted after its last chunk this round:
+                #                 the request recomputes from the queue head
             if cs.resume_tok is not None:
                 # recomputed stream: next token was already sampled before
                 # preemption; restore it instead of the chunk's provisional
@@ -549,20 +606,110 @@ class ServingEngine:
                                    len(cs.tokens))
         return progressed
 
-    def _preempt_for_pages(self) -> bool:
-        """Free the youngest decoding stream's pages and requeue it for
-        recompute-on-resume (its emitted tokens are replayed through chunked
-        prefill).  Returns False when there is nothing to preempt."""
-        if not self.active:
+    def _preempt_for_pages(self, exclude: Optional[int] = None) -> bool:
+        """Free the youngest stream's pages and requeue it for recompute-on-
+        resume (emitted tokens are replayed through chunked prefill).
+
+        Victims are chosen youngest-first by admission order across *both*
+        phases: decoding streams and mid-chunked-prefill streams — a pool
+        full of prefilling streams must not deadlock a grower (``exclude``
+        keeps a chunk from preempting itself).  A preempted mid-prefill
+        stream discards its chunk progress entirely; its request re-enters
+        the queue head and re-admits when pages free up.  Returns False when
+        there is nothing (else) to preempt.
+        """
+        order = {s: st.order for s, st in self.active.items()}
+        order.update({s: cs.order for s, cs in self.prefilling.items()
+                      if s != exclude})
+        if not order:
             return False
-        slot = max(self.active, key=lambda s: self.active[s].order)
-        st = self.active.pop(slot)
+        slot = max(order, key=order.get)
+        if slot in self.active:
+            req = self.active.pop(slot).req
+        else:
+            req = self.prefilling.pop(slot).req
         self.pager.free_chain(slot)
         self._active_host[slot] = False
         self._active = jnp.asarray(self._active_host)
         self.free_slots.append(slot)
-        self.pending.insert(0, st.req)
+        self.pending.insert(0, req)
         self._preempted += 1
+        return True
+
+    # -- replica-to-replica migration (disaggregated serving) ------------------
+    def export_stream(self, slot: int) -> StreamHandoff:
+        """Extract an active (decodable) stream for adoption by another
+        engine: the live page-chain K/V, bounded dense rows (sliding-window
+        rings), recurrent SSM/RG-LRU row state, position and last sampled
+        token.  The slot, its pages, and the batch row are released here —
+        export is atomic from this engine's point of view: after it returns,
+        the stream has no residue on this replica beyond scratch-page writes
+        by the (now inactive) batch row.
+
+        Only host-visible state at block granularity is touched, so exports
+        ride the existing block cadence; the copied data is O(context), never
+        a full-length buffer.
+        """
+        st = self.active.pop(slot)
+        self._active_host[slot] = False
+        self._active = jnp.asarray(self._active_host)
+        self.free_slots.append(slot)
+        chain = list(self.pager.chains.get(slot, [])) \
+            if self.pager is not None else []
+        blocks = []
+        for stage in self.caches:
+            sblocks = []
+            for d in stage:
+                if is_paged(d):
+                    sblocks.append(("pages", paged_chain_extract(d, chain)
+                                    if chain else None))
+                else:
+                    sblocks.append(("row", cache_row_extract(d, slot)))
+            blocks.append(tuple(sblocks))
+        if self.pager is not None:
+            self.pager.export_chain(slot)
+        return StreamHandoff(
+            req=st.req, pos=st.pos, last_token=st.last_token,
+            n_pages=len(chain), blocks=blocks, export_time=self.vtime,
+            page_size=self.ecfg.page_size if self.pager is not None else 0,
+            cfg_name=self.cfg.name)
+
+    def import_stream(self, ho: StreamHandoff) -> bool:
+        """Adopt a migrated stream: allocate a slot + an equal-length page
+        chain, scatter the extracted pages/rows in, and join the decode
+        batch at the handed-off position and token.  All-or-nothing: returns
+        False — taking nothing — when no slot is free or the pool cannot
+        cover the chain (the caller retries after streams retire).
+        """
+        assert ho.cfg_name == self.cfg.name, (
+            f"cross-model handoff: {ho.cfg_name} -> {self.cfg.name}")
+        if ho.n_pages:
+            assert self.pager is not None and \
+                ho.page_size == self.ecfg.page_size, \
+                "handoff requires matching paged layouts on both replicas"
+        if not self.free_slots:
+            return False
+        slot = self.free_slots[0]
+        chain = None
+        if ho.n_pages:
+            chain = self.pager.adopt_chain(slot, ho.n_pages)
+            if chain is None:
+                return False
+        self.free_slots.pop(0)
+        caches = []
+        for stage, hstage in zip(self.caches, ho.blocks):
+            sblocks = []
+            for d, (kind, payload) in zip(stage, hstage):
+                if kind == "pages":
+                    sblocks.append(paged_chain_insert(d, payload, chain)
+                                   if payload is not None else d)
+                else:
+                    sblocks.append(cache_row_insert(d, payload, slot))
+            caches.append(tuple(sblocks))
+        self.caches = caches
+        self._tok = self._tok.at[slot].set(ho.last_token)
+        self._pos = self._pos.at[slot].set(ho.pos)
+        self._start_stream(ho.req, slot, ho.last_token, ho.pos, resumed=True)
         return True
 
     # -- decode ----------------------------------------------------------------
@@ -583,6 +730,7 @@ class ServingEngine:
                 or st.pos >= self.ecfg.max_len - 1):
             st.req.finish = self.vtime
             self._completed += 1
+            self._done.append(st.req)
             return True
         return False
 
@@ -609,7 +757,7 @@ class ServingEngine:
             if k > 1:
                 k = max(k // 2, 1)
                 continue
-            if len(self.active) > 1:
+            if len(self.active) + len(self.prefilling) > 1:
                 self._preempt_for_pages()
                 continue
             raise RuntimeError(
@@ -696,8 +844,14 @@ class ServingEngine:
                     done.append(slot)
         self._retire(done)
         if self.pager is not None:
-            self._occupancy.record(self.vtime,
-                                   self.pager.occupancy()["occupancy"])
+            occ = self.pager.occupancy()["occupancy"]
+            self._occupancy.record(self.vtime, occ)
+            # memory pressure is a controller input: sustained high pool
+            # occupancy biases the coarse loop toward higher clocks so
+            # streams drain before the pool forces preemption
+            record = getattr(self.controller, "record_occupancy", None)
+            if record is not None:
+                record(self.vtime, occ)
         return batch
 
     def _step_legacy(self) -> int:
@@ -775,6 +929,17 @@ class ServingEngine:
             steps += max(k, 1)
         return self.stats()
 
+    def _slo_stats(self) -> Dict:
+        """Per-class p90 TTFT and TTFT/TBT SLO pass rates over finished
+        requests — ``sim.replay.slo_pass_metrics`` is the single scoring
+        definition, so real-engine and simulator replays are directly
+        comparable by construction."""
+        from repro.sim.replay import slo_pass_metrics
+        m = slo_pass_metrics(self._done, self._tbt, self.ecfg.slo,
+                             self.router.class_names)
+        return {"ttft_pass": m["ttft_pass"], "tbt_pass": m["tbt_pass"],
+                "p90_ttft_s": m["p90_ttft"]}
+
     def stats(self) -> Dict:
         tbts = [x for v in self._tbt.values() for x in v]
         s = {
@@ -790,8 +955,10 @@ class ServingEngine:
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
             "p95_tbt_ms": float(np.percentile(tbts, 95)) * 1e3 if tbts else 0,
+            "p99_tbt_ms": float(np.percentile(tbts, 99)) * 1e3 if tbts else 0,
             "freq_mhz": self.controller.freq,
         }
+        s.update(self._slo_stats())
         if self.pager is not None:
             # a stream at position pos holds K/V for positions 0..pos-1
             live = {sl: st.pos for sl, st in self.active.items()}

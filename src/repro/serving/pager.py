@@ -119,6 +119,34 @@ class PageAllocator:
             self._dirty = True
         return len(chain)
 
+    # -- migration (replica-to-replica paged-KV handoff) ----------------------
+    def export_chain(self, slot: int) -> List[int]:
+        """Release ``slot``'s chain for migration: returns the physical page
+        ids (in logical order) and hands them back to the free list, pointing
+        the table row at scratch.
+
+        The caller must have copied the pages' *contents* out (e.g. via
+        ``kvcache.paged_chain_extract``) before calling — after this returns,
+        the pages may be reallocated to other streams at the next ``ensure``.
+        """
+        chain = list(self.chains.get(slot, []))
+        self.free_chain(slot)
+        return chain
+
+    def adopt_chain(self, slot: int, n_pages: int) -> Optional[List[int]]:
+        """Allocate a fresh chain of exactly ``n_pages`` for an imported
+        stream and return the physical ids (scatter targets for
+        ``kvcache.paged_chain_insert``), or None — allocating nothing — if the
+        free list cannot cover it.  ``slot`` must not already hold a chain:
+        adoption is the first act of an imported stream's life on this pool.
+        """
+        if self.chains.get(slot):
+            raise ValueError(f"slot {slot} already holds a chain; "
+                             "free it before adopting")
+        if not self.ensure(slot, n_pages * self.page_size):
+            return None
+        return list(self.chains[slot])
+
     # -- device table ---------------------------------------------------------
     def table_device(self):
         """jnp copy of the table; re-uploaded only after host mutations."""

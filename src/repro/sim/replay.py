@@ -94,35 +94,51 @@ class Metrics:
     throughput_tok_s: float
 
 
-def compute_metrics(res: SimResult, slo: SLOConfig) -> Metrics:
-    done = [r for r in res.requests if r.first_token >= 0]
+def slo_pass_metrics(requests: List[Request], tbt_records: Dict[int, list],
+                     slo: SLOConfig,
+                     class_names=("SM", "L")) -> Dict:
+    """SLO scoring shared by the simulator, the real-execution engine, and
+    the cluster (single definition = the parity guarantee): TTFT pass rate
+    over requests that produced a first token, per-request p95-TBT pass
+    rate, per-class p90 TTFT, and aggregate p95/p99 TBT (seconds)."""
+    done = [r for r in requests if r.first_token >= 0]
     ttft_ok = sum(1 for r in done if r.ttft <= slo.ttft_target(r.cls))
     tbt_ok, total = 0, 0
     all_tbt: List[float] = []
     for r in done:
-        tbts = res.tbt_records.get(r.rid, [])
+        tbts = tbt_records.get(r.rid, [])
         if not tbts:
             continue
         total += 1
-        p95 = float(np.percentile(tbts, 95))
         all_tbt.extend(tbts)
-        if p95 <= slo.tbt_target:
+        if float(np.percentile(tbts, 95)) <= slo.tbt_target:
             tbt_ok += 1
     p90 = {}
-    for cls in ("SM", "L"):
+    for cls in class_names:
         v = [r.ttft for r in done if r.cls == cls]
         if v:
             p90[cls] = float(np.percentile(v, 90))
+    return {
+        "ttft_pass": ttft_ok / max(len(done), 1),
+        "tbt_pass": tbt_ok / max(total, 1),
+        "p90_ttft": p90,
+        "p95_tbt": float(np.percentile(all_tbt, 95)) if all_tbt else 0.0,
+        "p99_tbt": float(np.percentile(all_tbt, 99)) if all_tbt else 0.0,
+    }
+
+
+def compute_metrics(res: SimResult, slo: SLOConfig) -> Metrics:
+    m = slo_pass_metrics(res.requests, res.tbt_records, slo)
     tokens = sum(r.tokens_emitted for r in res.requests)
     return Metrics(
-        ttft_pass=ttft_ok / max(len(done), 1),
-        tbt_pass=tbt_ok / max(total, 1),
+        ttft_pass=m["ttft_pass"],
+        tbt_pass=m["tbt_pass"],
         prefill_energy_j=res.prefill_energy_j,
         decode_energy_j=res.decode_energy_j,
         total_energy_j=res.total_energy_j,
-        p90_ttft=p90,
-        p95_tbt=float(np.percentile(all_tbt, 95)) if all_tbt else 0.0,
-        p99_tbt=float(np.percentile(all_tbt, 99)) if all_tbt else 0.0,
+        p90_ttft=m["p90_ttft"],
+        p95_tbt=m["p95_tbt"],
+        p99_tbt=m["p99_tbt"],
         n_requests=len(res.requests),
         throughput_tok_s=tokens / max(res.duration, 1e-9),
     )
@@ -134,3 +150,24 @@ def replay(cfg: ModelConfig, trace: List[Request], rc: ReplayConfig,
     sim = build_simulator(cfg, hw, rc)
     res = sim.run([copy.copy(r) for r in trace])
     return compute_metrics(res, rc.slo)
+
+
+def metrics_from_cluster(stats: Dict) -> Metrics:
+    """Adapt ``serving.ServingCluster.stats()`` to the paper's ``Metrics``
+    row, so real-execution cluster replays print alongside the simulator
+    governors column-for-column.  Cluster total energy includes idle up to
+    the shared makespan (matching the simulator's ``EnergyMeter.finalize``).
+    """
+    tokens = stats["prefill_tokens"] + stats["decode_tokens"]
+    return Metrics(
+        ttft_pass=stats["ttft_pass"],
+        tbt_pass=stats["tbt_pass"],
+        prefill_energy_j=stats["prefill_energy_j"],
+        decode_energy_j=stats["decode_energy_j"],
+        total_energy_j=stats["energy_j"],
+        p90_ttft=dict(stats["p90_ttft_s"]),
+        p95_tbt=stats["p95_tbt_ms"] / 1e3,
+        p99_tbt=stats["p99_tbt_ms"] / 1e3,
+        n_requests=stats["n_requests"],
+        throughput_tok_s=tokens / max(stats["makespan_s"], 1e-9),
+    )

@@ -1,0 +1,374 @@
+"""Disaggregated prefill/decode cluster tests: KV-handoff token equivalence
+(a stream prefilled on replica A, exported, and imported into replica B must
+decode token-for-token identically to the same request served colocated on
+one engine — full/GQA and hybrid SSM/RG-LRU configs, paged pool layout),
+role constraints (prefill replicas never decode, decode replicas never admit
+raw prompts), allocator adopt/export invariants, shared-clock + idle-energy
+accounting, and the occupancy-pressure controller input.
+
+Equivalence runs pin float32 K/V buffers and greedy sampling: migration is
+bit-exact at any dtype (pages are copied, not recomputed), but the colocated
+reference decodes through the same cache dtype, so f32 removes the rounding
+lottery from the comparison (same rationale as tests/test_paging.py).
+"""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (A100_SXM4_40G, DualLoopController, Request,
+                        TPSFreqTable)
+from repro.models import init_params, init_cache, prefill, decode_step
+from repro.models.config import ModelConfig
+from repro.serving import EngineConfig, ServingCluster, ServingEngine
+from repro.serving.cluster import ClusterDispatcher
+
+KEY = jax.random.PRNGKey(0)
+MAXLEN = 96
+HW = A100_SXM4_40G
+
+
+def _cfg(variant: str) -> ModelConfig:
+    kw = dict(name=f"tc-{variant}", arch_type="dense", num_layers=2,
+              d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+              vocab_size=128, dtype="float32", max_seq=512)
+    if variant == "gqa":
+        kw["num_kv_heads"] = 2
+    elif variant == "hybrid-rglru":
+        kw.update(arch_type="hybrid", num_layers=3,
+                  block_pattern=("rglru", "rglru", "local"), window=16,
+                  lru_width=64, conv_width=4)
+    elif variant == "hybrid-ssm":
+        kw.update(arch_type="hybrid", num_layers=2,
+                  block_pattern=("ssm", "local"), window=16,
+                  ssm_state=16, ssm_headdim=16, conv_width=4)
+    return ModelConfig(**kw)
+
+
+def _reference_tokens(params, cfg, prompt, output_len):
+    caches = init_cache(cfg, 1, MAXLEN, dtype=jnp.float32)
+    lg, caches, pos = prefill(params, cfg,
+                              jnp.asarray(prompt, jnp.int32)[None], caches)
+    toks = [int(jnp.argmax(lg[0]))]
+    while len(toks) < max(output_len, 2) and pos < MAXLEN - 1:
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 caches, jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
+def _ecfg(**kw):
+    kw.setdefault("cache_dtype", "float32")
+    kw.setdefault("governor", "defaultnv")
+    return EngineConfig(max_batch=4, max_len=MAXLEN, paged=True, **kw)
+
+
+def _engine(cfg, params, **kw):
+    return ServingEngine(cfg, params=params, ecfg=_ecfg(**kw))
+
+
+# -- engine-level handoff ------------------------------------------------------
+
+@pytest.mark.parametrize("variant",
+                         ["full", "gqa", "hybrid-ssm", "hybrid-rglru"])
+def test_handoff_after_prefill_is_token_exact(variant):
+    """Prefill on A, export, import into B, decode on B == colocated run."""
+    cfg = _cfg(variant)
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    # > window (16) on hybrids: exercises the chunked path + recurrent state
+    prompt = rng.integers(0, cfg.vocab_size, size=37)
+    A, B = _engine(cfg, params), _engine(cfg, params)
+    req = Request(rid=0, arrival=0.0, prompt_len=37, output_len=10)
+    A.submit(req, prompt)
+    A._admit()
+    while A.prefilling:
+        A._advance_chunks()
+    [slot] = list(A.active)
+    ho = A.export_stream(slot)
+    # export is atomic: no residue on A
+    assert not A.active and slot in A.free_slots
+    if A.pager is not None:
+        assert A.pager.pages_used == 0
+    assert B.import_stream(ho)
+    B.run_until_drained()
+    assert req.tokens == _reference_tokens(params, cfg, prompt, 10)
+
+
+def test_handoff_mid_decode_is_token_exact():
+    """A stream that already decoded on A continues identically on B, while
+    a second stream keeps decoding on A (mixed-position batches on both)."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (19, 8)]
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=len(p), output_len=12)
+            for i, p in enumerate(prompts)]
+    A, B = _engine(cfg, params), _engine(cfg, params)
+    for r, p in zip(reqs, prompts):
+        A.submit(r, p)
+    for _ in range(4):
+        A.step()
+    slot = next(s for s, st in A.active.items() if st.req.rid == 0)
+    assert B.import_stream(A.export_stream(slot))
+    A.run_until_drained()
+    B.run_until_drained()
+    for r, p in zip(reqs, prompts):
+        assert r.tokens == _reference_tokens(params, cfg, p, 12)
+
+
+def test_import_is_all_or_nothing():
+    """A refused import (no free pages) takes nothing; it succeeds verbatim
+    once capacity frees up."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(7)
+    A = _engine(cfg, params)
+    B = _engine(cfg, params, page_size=16, num_pages=3)  # 2 usable pages
+    prompt = rng.integers(0, cfg.vocab_size, size=40)    # needs 3 pages
+    req = Request(rid=0, arrival=0.0, prompt_len=40, output_len=4)
+    A.submit(req, prompt)
+    A._admit()
+    while A.prefilling:
+        A._advance_chunks()
+    ho = A.export_stream(next(iter(A.active)))
+    used_before = B.pager.pages_used
+    assert not B.import_stream(ho)
+    assert B.pager.pages_used == used_before      # took nothing
+    assert not B.active and len(B.free_slots) == B.ecfg.max_batch
+    C = _engine(cfg, params)                      # ample pool: same handoff
+    assert C.import_stream(ho)
+    C.run_until_drained()
+    assert req.tokens == _reference_tokens(params, cfg, prompt, 4)
+
+
+def test_adopt_chain_matches_export_and_conserves_pages():
+    from repro.serving.pager import PageAllocator, SCRATCH_PAGE
+    a = PageAllocator(num_pages=9, page_size=8, max_streams=4,
+                      max_pages_per_stream=8)
+    assert a.ensure(0, 20)                        # 3 pages
+    chain = a.export_chain(0)
+    assert len(chain) == 3 and a.pages_used == 0
+    assert (a.table[0] == SCRATCH_PAGE).all()
+    got = a.adopt_chain(1, 3)
+    assert got is not None and len(got) == 3
+    assert a.pages_used == 3
+    with pytest.raises(ValueError, match="already holds"):
+        a.adopt_chain(1, 1)
+    assert a.adopt_chain(2, 6) is None            # only 5 free: all-or-nothing
+    assert a.pages_used == 3
+
+
+# -- cluster-level -------------------------------------------------------------
+
+def _mini_trace(cfg, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(6, 40))) for _ in range(n)]
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=len(p),
+                    output_len=int(rng.integers(4, 12)))
+            for i, p in enumerate(prompts)]
+    return reqs, prompts
+
+
+@pytest.mark.parametrize("governor", ["defaultnv", "greenllm"])
+def test_cluster_matches_colocated_engine_tokens(governor):
+    """The full disaggregated pipeline (dispatch -> prefill replica ->
+    paged-KV handoff -> decode replica) emits exactly the tokens of a single
+    colocated engine, under both governors (DVFS changes virtual time and
+    energy, never greedy token values)."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    reqs, prompts = _mini_trace(cfg)
+    ref = [Request(rid=r.rid, arrival=0.0, prompt_len=r.prompt_len,
+                   output_len=r.output_len) for r in reqs]
+    eng = _engine(cfg, params)
+    for r, p in zip(ref, prompts):
+        eng.submit(r, p)
+    eng.run_until_drained()
+
+    cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
+                        ecfg=_ecfg(governor=governor))
+    for r, p in zip(reqs, prompts):
+        cl.submit(r, p)
+    st = cl.run_until_drained()
+    assert st["completed"] == len(reqs)
+    for a, b in zip(ref, reqs):
+        assert a.tokens == b.tokens
+
+
+def test_cluster_role_constraints_and_energy_split():
+    """Prefill replicas bill no decode tokens, decode replicas no prefill
+    tokens (ample pool: no recompute), every stream migrates exactly once,
+    and the cluster roll-up conserves energy (active split + idle == total).
+    """
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    reqs, prompts = _mini_trace(cfg)
+    cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
+                        ecfg=_ecfg(governor="greenllm"))
+    for r, p in zip(reqs, prompts):
+        cl.submit(r, p)
+    st = cl.run_until_drained()
+    by_role = {row["role"]: row for row in st["replicas"]}
+    assert by_role["prefill"]["decode_tokens"] == 0
+    assert by_role["prefill"]["prefill_tokens"] > 0
+    assert by_role["decode"]["prefill_tokens"] == 0
+    assert by_role["decode"]["decode_tokens"] > 0
+    assert by_role["prefill"]["exported"] == len(reqs)
+    assert by_role["decode"]["imported"] == len(reqs)
+    assert st["handoffs"] == len(reqs)
+    total = sum(row["energy_j"] for row in st["replicas"])
+    assert st["energy_j"] == pytest.approx(total)
+    assert st["energy_j"] == pytest.approx(
+        st["prefill_energy_j"] + st["decode_energy_j"]
+        + st["idle_energy_j"])
+    # shared clock: no replica outruns the makespan, idle billed to it
+    assert all(row["vtime_s"] <= st["makespan_s"] + 1e-12
+               for row in st["replicas"])
+
+
+def test_cluster_slo_metrics_report_per_class():
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    reqs, prompts = _mini_trace(cfg)
+    cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
+                        ecfg=_ecfg(governor="greenllm"))
+    for r, p in zip(reqs, prompts):
+        cl.submit(r, p)
+    st = cl.run_until_drained()
+    assert 0.0 <= st["ttft_pass"] <= 1.0 and 0.0 <= st["tbt_pass"] <= 1.0
+    assert "SM" in st["p90_ttft_s"]          # all mini-trace prompts short
+    assert all(r.cls == "SM" for r in reqs)
+    # adapter to the paper's Metrics row (sim/replay parity)
+    from repro.sim import metrics_from_cluster
+    m = metrics_from_cluster(st)
+    assert m.n_requests == len(reqs)
+    assert m.total_energy_j == pytest.approx(st["energy_j"])
+    assert m.p99_tbt >= m.p95_tbt >= 0.0
+    assert m.throughput_tok_s > 0
+
+
+def test_dispatcher_prefers_shortest_expected_busy_time():
+    """With one candidate loaded and one idle, the queueing-aware pick lands
+    on the idle replica; classification still routes long prompts to the L
+    class."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    cl = ServingCluster(cfg, n_prefill=2, n_decode=1, params=params,
+                        ecfg=_ecfg(governor="greenllm"))
+    d = cl.dispatcher
+    assert isinstance(d, ClusterDispatcher)
+    assert d.classify(1024) == 0 and d.classify(1025) == 1
+    p0, p1 = [r for r in cl.replicas if r.role == "prefill"]
+    p0.classes = p1.classes = ()             # same class: pure load choice
+    for i in range(3):
+        p0.engine.pending.append(
+            Request(rid=100 + i, arrival=0.0, prompt_len=30, output_len=4))
+    req = Request(rid=0, arrival=0.0, prompt_len=24, output_len=4)
+    assert d.pick_prefill(req, [p0, p1], cl.optimizer) is p1
+
+
+def test_colocated_cluster_is_the_single_engine_baseline():
+    """A colocated 'cluster' of one replica behaves like one engine (same
+    tokens, no handoffs) — the baseline configuration for energy compares."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    reqs, prompts = _mini_trace(cfg, n=4)
+    cl = ServingCluster(cfg, n_prefill=0, n_decode=0, n_colocated=1,
+                        params=params, ecfg=_ecfg(governor="defaultnv"))
+    for r, p in zip(reqs, prompts):
+        cl.submit(r, p)
+    st = cl.run_until_drained()
+    assert st["completed"] == len(reqs) and st["handoffs"] == 0
+    ref = [Request(rid=r.rid, arrival=0.0, prompt_len=r.prompt_len,
+                   output_len=r.output_len) for r in reqs]
+    eng = _engine(cfg, params)
+    for r, p in zip(ref, prompts):
+        eng.submit(r, p)
+    eng.run_until_drained()
+    for a, b in zip(ref, reqs):
+        assert a.tokens == b.tokens
+
+
+def test_no_request_prefills_before_its_arrival():
+    """Arrival gating: several arrivals injected in one batch (a long decode
+    block on the other replica jumps the cluster clock across them) must not
+    be prefilled back-to-back ahead of the lagging prefill replica's clock —
+    TTFT is never negative.  Needs a *realistic* plant config: decode blocks
+    of a big model span multiple close arrivals (regression: ungated
+    ``_admit`` produced first_token < arrival for the tail of the batch)."""
+    cfg = _cfg("full")
+    big_plant = ModelConfig(
+        name="tc-plant", arch_type="dense", num_layers=40, d_model=5120,
+        num_heads=40, num_kv_heads=8, head_dim=128, d_ff=13824,
+        vocab_size=32000, max_seq=8192)
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=20) for _ in range(5)]
+    reqs = [Request(rid=i, arrival=a, prompt_len=20, output_len=40)
+            for i, a in enumerate((0.0, 0.3, 0.35, 0.4, 0.45))]
+    cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
+                        plant_cfg=big_plant, ecfg=_ecfg(governor="greenllm"))
+    for r, p in zip(reqs, prompts):
+        cl.submit(r, p)
+    st = cl.run_until_drained()
+    assert st["completed"] == len(reqs)
+    for r in reqs:
+        assert r.first_token >= r.arrival - 1e-9, (r.rid, r.ttft)
+        assert r.ttft >= 0.0
+
+
+# -- occupancy-pressure controller input ---------------------------------------
+
+def _flat_table():
+    tps = [200, 1000, 3000]
+    freqs = HW.ladder()[::4]
+    p95 = 0.08 * (np.asarray(tps)[:, None] / 3000.0) \
+        * (HW.f_max / freqs[None, :])
+    ept = np.tile(np.linspace(0.3, 1.0, len(freqs)), (3, 1))
+    return TPSFreqTable.from_profile(tps, freqs, p95, ept, 0.1, HW.f_step)
+
+
+def test_sustained_occupancy_biases_band_upward_then_releases():
+    """High sustained page occupancy shifts the coarse band up (memory
+    pressure -> drain faster); low occupancy leaves it at the table value;
+    and once an episode ends, the boost decays back to the table band
+    instead of ratcheting permanently."""
+    def drive(ctl, occ, t0, seconds):
+        t = t0
+        for _ in range(int(seconds / 0.01)):
+            t += 0.01
+            ctl.record_tokens(t, 5, 0.08)
+            ctl.record_occupancy(t, occ)
+            ctl.maybe_tick(t)
+        return t
+    lo = DualLoopController(HW, _flat_table())
+    drive(lo, 0.10, 0.0, 1.0)
+    hi = DualLoopController(HW, _flat_table())
+    t = drive(hi, 0.97, 0.0, 1.0)
+    assert hi.band[1] > lo.band[1]
+    assert hi.band[2] <= HW.f_max
+    assert hi.band[0] <= hi.freq <= hi.band[2]
+    # the boost saturates where lo pins at f_max instead of growing
+    # unboundedly (a long episode must not stretch the decay tail)
+    assert hi._occ_boost <= int(np.ceil((HW.f_max - HW.f_min) / HW.f_step))
+    # pressure episode over: the boost decays back to the table band
+    # (occupancy window ~1s to clear, then one f_step down per coarse tick)
+    drive(hi, 0.10, t, 3.0)
+    assert hi.band[1] == lo.band[1]
+    assert hi._occ_boost == 0
+
+
+def test_engine_feeds_occupancy_to_controller():
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params)
+    eng.controller = DualLoopController(HW, _flat_table())
+    rng = np.random.default_rng(1)
+    req = Request(rid=0, arrival=0.0, prompt_len=16, output_len=8)
+    eng.submit(req, rng.integers(0, cfg.vocab_size, size=16))
+    eng.run_until_drained()
+    assert len(eng.controller.occ_meter) > 0

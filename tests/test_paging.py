@@ -208,6 +208,27 @@ def test_paged_capacity_exceeds_dense_envelope():
     assert s["pages_used"] == 0          # chains freed at retire
 
 
+def test_prefill_only_pool_pressure_preempts_instead_of_stalling():
+    """Regression: a pool exhausted entirely by *mid-chunked-prefill* streams
+    used to stall forever (only decoding streams were preemption victims).
+    Two long prompts that cannot both hold their chains must now complete via
+    youngest-first preemption + recompute-on-resume, token-exactly."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    # 3 usable pages of 16 tokens; each 40-token prompt needs 3 pages, so the
+    # second stream's chunks exhaust the pool while both are still prefilling
+    eng = _engine(cfg, params, paged=True, page_size=16, num_pages=4)
+    _force_chunk(eng)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, size=40) for _ in range(2)]
+    tokens = _serve(eng, prompts, [6, 6])
+    s = eng.stats()
+    assert s["completed"] == 2
+    assert s["preempted"] > 0
+    for p, t in zip(prompts, tokens):
+        assert t == _reference_tokens(params, cfg, p, 6)
+
+
 def test_pool_pressure_preempts_and_recomputes_exactly():
     """An over-committed pool forces preemption; victims are recomputed via
     chunked prefill and still produce token-exact output."""

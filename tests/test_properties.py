@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (A100_SXM4_40G, CubicPowerModel, DualLoopController,
                         QuadraticLatencyModel, PrefillOptimizer, TPSFreqTable,
-                        make_router)
+                        deadline_from_queue, make_router)
 from repro.models.kvcache import ring_slot_positions
 from repro.models.moe import capacity, _slots
 from repro.models.config import ModelConfig
@@ -79,6 +79,55 @@ def test_energy_model_nonnegative_and_bounded(T_ref, D):
     E = opt.energy_total(T_ref, D, HW.ladder())
     assert np.all(E > 0)
     assert np.all(np.isfinite(E))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lengths=st.lists(st.integers(16, 8192), min_size=1, max_size=12),
+    D_loose=st.floats(0.2, 10.0),
+    shrink=st.floats(0.05, 0.95),
+)
+def test_chosen_frequency_monotone_in_deadline_tightness(lengths, D_loose,
+                                                         shrink):
+    """Tightening the deadline never picks a *lower* clock (the feasible set
+    shrinks from the bottom of the ladder; Eq. 14's argmin can only move
+    up)."""
+    opt = _opt()
+    f_loose, _ = opt.choose_frequency(lengths, D_loose)
+    f_tight, _ = opt.choose_frequency(lengths, D_loose * shrink)
+    assert f_tight >= f_loose
+
+
+@settings(max_examples=50, deadline=None)
+@given(slo=st.floats(0.01, 5.0), wait=st.floats(0.0, 10.0),
+       n=st.integers(0, 20))
+def test_deadline_from_queue_floor_and_monotonicity(slo, wait, n):
+    """D is the remaining TTFT budget of the oldest queued request, floored
+    at 1 ms; longer waits never yield looser deadlines."""
+    D = deadline_from_queue([64] * n, slo, wait)
+    assert D >= 1e-3
+    assert D == pytest.approx(max(slo - wait, 1e-3))
+    assert deadline_from_queue([64] * n, slo, wait + 0.5) <= D
+
+
+@settings(max_examples=50, deadline=None)
+@given(thresholds=st.lists(st.integers(1, 10000), min_size=1, max_size=4,
+                           unique=True))
+def test_router_class_boundaries_inclusive_below(thresholds):
+    """Each threshold belongs to the class *below* it (classify uses <=):
+    classify(t) == i and classify(t + 1) == i + 1 for every cut-off, and
+    class indices are monotone in prompt length."""
+    from repro.core import LengthRouter
+    ts = tuple(sorted(thresholds))
+    r = LengthRouter(thresholds=ts,
+                     class_names=tuple(f"c{i}" for i in range(len(ts) + 1)))
+    for i, t in enumerate(ts):
+        assert r.classify(t) == i
+        assert r.classify(t + 1) == i + 1 or (t + 1) in ts
+    lens = sorted({1, *ts, *(t + 1 for t in ts), 10 ** 6})
+    cls = [r.classify(L) for L in lens]
+    assert cls == sorted(cls)
+    assert r.classify(1) == 0 and r.classify(10 ** 6) == len(ts)
 
 
 # -- MoE slot assignment ---------------------------------------------------------------------

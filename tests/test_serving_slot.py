@@ -179,6 +179,32 @@ def test_bucket_list_covers_truncation_cap(monkeypatch):
     assert calls == []          # 90 > 64 but <= 96: still slot admission
 
 
+def test_stats_slo_parity_with_sim_metrics():
+    """Engine stats report per-class p90 TTFT and TTFT/TBT SLO pass rates
+    with the same semantics as sim.replay.compute_metrics, so real-engine
+    and simulator replays compare column-for-column."""
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=int(rng.integers(8, 40)),
+                    output_len=8) for i in range(5)]
+    for r in reqs:
+        eng.submit(r, rng.integers(0, cfg.vocab_size, size=r.prompt_len))
+    s = eng.run_until_drained()
+    for key in ("ttft_pass", "tbt_pass", "p90_ttft_s", "p99_tbt_ms"):
+        assert key in s
+    assert 0.0 <= s["ttft_pass"] <= 1.0 and 0.0 <= s["tbt_pass"] <= 1.0
+    # recompute from ground truth: arrival=0 -> ttft == first_token vtime
+    slo = eng.ecfg.slo
+    want_pass = sum(1 for r in reqs
+                    if r.ttft <= slo.ttft_target(r.cls)) / len(reqs)
+    assert s["ttft_pass"] == pytest.approx(want_pass)
+    assert s["p90_ttft_s"]["SM"] == pytest.approx(
+        float(np.percentile([r.ttft for r in reqs], 90)))
+    assert s["p99_tbt_ms"] >= s["p95_tbt_ms"] >= 0.0
+
+
 def test_wall_clock_mode_drains():
     """use_wall_clock=True accounts measured block latency (first-compile
     chunks billed to the plant model) and still drains."""
