@@ -104,12 +104,20 @@ def bench_admit(cfg, params, *, governor, slot_native, n):
 
 def bench_serve(cfg, params, *, batch, governor, slot_native, nreq, out_len,
                 paged=False):
+    """Sustained serving through the ``serving.api`` front door (the same
+    driver loop production callers use)."""
+    from repro.core import SamplingParams
+    from repro.serving import Server
     eng = _engine(cfg, params, batch=batch, governor=governor,
                   slot_native=slot_native, paged=paged)
+    srv = Server(eng)
     rng = np.random.default_rng(0)
-    _fill(eng, nreq, output_len=out_len, rng=rng)
+    for _ in range(nreq):
+        srv.submit(rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(8, 100))),
+                   SamplingParams(max_tokens=out_len))
     t0 = time.perf_counter()
-    eng.run_until_drained()
+    srv.run()
     jax.block_until_ready(eng._tok)
     return nreq * out_len / (time.perf_counter() - t0)
 
@@ -146,27 +154,29 @@ def bench_paged_capacity(cfg, params, *, governor, nreq, out_len):
     engine runs ``nreq`` concurrent streams against a pool whose token
     capacity would pin only ``pool_tokens / max_len`` dense rows.
     """
-    from repro.core import Request
+    from repro.core import SamplingParams
+    from repro.serving import Server
     max_len = 256
     ps = 16
     num_pages = (nreq * max_len // ps) // 2 + 1     # half dense memory
     eng = _engine(cfg, params, batch=nreq, governor=governor,
                   slot_native=True, max_len=max_len, paged=True,
                   num_pages=num_pages)
+    srv = Server(eng)
     rng = np.random.default_rng(0)
-    for i in range(nreq):
-        eng.submit(Request(rid=i, arrival=0.0,
-                           prompt_len=int(rng.integers(16, 64)),
-                           output_len=out_len))
+    for _ in range(nreq):
+        srv.submit(rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(16, 64))),
+                   SamplingParams(max_tokens=out_len))
     eng._admit()
     peak = len(eng.active) + len(eng.prefilling)
     t0 = time.perf_counter()
-    eng.run_until_drained()
+    rep = srv.run()
     jax.block_until_ready(eng._tok)
     dt = time.perf_counter() - t0
-    s = eng.stats()
-    dense_eq = (s["pages_total"] * ps) // max_len
-    return peak, dense_eq, s["decode_tokens"] / dt
+    # usable pool size from the allocator (page 0 is reserved scratch)
+    dense_eq = (eng.pager.occupancy()["pages_total"] * ps) // max_len
+    return peak, dense_eq, rep.decode_tokens / dt
 
 
 def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
@@ -178,35 +188,30 @@ def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
     Returns (tok/s of the disaggregated run, energy ratio disagg/colocated,
     handoffs, preemptions).
     """
-    from repro.core import Request
-    from repro.serving import EngineConfig, ServingCluster
-
-    def trace():
-        rng = np.random.default_rng(0)
-        out = []
-        for i in range(nreq):
-            plen = int(rng.integers(24, max_len // 2))
-            out.append((Request(rid=i, arrival=0.05 * i, prompt_len=plen,
-                                output_len=out_len),
-                        rng.integers(0, cfg.vocab_size, size=plen)))
-        return out
+    from repro.core import SamplingParams
+    from repro.serving import EngineConfig, Server, ServingCluster
 
     def run(**kw):
         cl = ServingCluster(cfg, params=params, ecfg=EngineConfig(
             max_batch=8, max_len=max_len, governor=kw.pop("governor")), **kw)
-        for r, p in trace():
-            cl.submit(r, np.asarray(p))
+        srv = Server(cl)
+        rng = np.random.default_rng(0)
+        for i in range(nreq):
+            plen = int(rng.integers(24, max_len // 2))
+            srv.submit(rng.integers(0, cfg.vocab_size, size=plen),
+                       SamplingParams(max_tokens=out_len),
+                       arrival=0.05 * i)
         t0 = time.perf_counter()
-        st = cl.run_until_drained()
-        return st, time.perf_counter() - t0
+        rep = srv.run()
+        return rep, time.perf_counter() - t0
 
     base, _ = run(governor="defaultnv", n_prefill=0, n_decode=0,
                   n_colocated=2)
-    st, dt = run(governor="greenllm", n_prefill=1, n_decode=1)
-    assert st["completed"] == base["completed"] == nreq
-    tokens = st["prefill_tokens"] + st["decode_tokens"]
-    return (tokens / dt, st["energy_j"] / base["energy_j"],
-            st["handoffs"], st["preempted"])
+    rep, dt = run(governor="greenllm", n_prefill=1, n_decode=1)
+    assert rep.completed == base.completed == nreq
+    tokens = rep.prefill_tokens + rep.decode_tokens
+    return (tokens / dt, rep.total_energy_j / base.total_energy_j,
+            rep.migrated, rep.preempted)
 
 
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",

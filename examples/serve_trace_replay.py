@@ -2,7 +2,9 @@
 Alibaba-chat-like trace against the serving node under all three governors
 and print the paper's Table-3-style comparison, then run a short burst of
 *real* JAX inference (batched requests through the actual model) with the
-same control plane.
+same control plane — everything driven through the ``serving.api.Server``
+front door (submit → stream → cancel) and reported as the shared typed
+``ServingReport``.
 
     PYTHONPATH=src python examples/serve_trace_replay.py [--trace chat_5qps]
         [--arch qwen3-14b] [--duration 120] [--cluster]
@@ -16,10 +18,26 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Request
+from repro.core import SamplingParams
 from repro.data import get_trace
-from repro.serving import EngineConfig, ServingEngine, ServingCluster
+from repro.serving import (EngineConfig, Server, ServingCluster,
+                           ServingEngine)
 from repro.sim import ReplayConfig, replay
+
+
+def replay_burst(server, trace, vocab, *, max_len=192, out_cap=48,
+                 keep_arrivals=True):
+    """Replay ``trace`` through any backend behind ``server`` (the same
+    code path drives a single engine and a cluster — the point of the
+    API).  ``keep_arrivals=False`` injects everything at t=0 (a pure
+    burst: maximum pool pressure)."""
+    rng = np.random.default_rng(0)
+    for r in trace:
+        plen = min(r.prompt_len, max_len // 2)
+        server.submit(rng.integers(0, vocab, size=plen),
+                      SamplingParams(max_tokens=min(r.output_len, out_cap)),
+                      arrival=r.arrival if keep_arrivals else 0.0)
+    return server.run()
 
 
 def run_cluster(cfg, smoke, trace, *, max_len=192):
@@ -30,47 +48,38 @@ def run_cluster(cfg, smoke, trace, *, max_len=192):
     params = init_params(jax.random.PRNGKey(0), smoke)
 
     def build(governor, **kw):
-        return ServingCluster(
+        return Server(ServingCluster(
             smoke, params=params, plant_cfg=cfg,
             ecfg=EngineConfig(max_batch=8, max_len=max_len,
-                              governor=governor), **kw)
+                              governor=governor), **kw))
 
-    def replay_on(cl):
-        rng = np.random.default_rng(0)
-        for i, r in enumerate(trace):
-            cl.submit(Request(
-                rid=i, arrival=r.arrival,
-                prompt_len=min(r.prompt_len, max_len // 2),
-                output_len=min(r.output_len, 48)),
-                rng.integers(0, smoke.vocab_size,
-                             size=min(r.prompt_len, max_len // 2)))
-        return cl.run_until_drained()
-
-    base = replay_on(build("defaultnv", n_prefill=0, n_decode=0,
-                           n_colocated=2))
-    st = replay_on(build("greenllm", n_prefill=1, n_decode=1))
-    assert st["completed"] == base["completed"] == len(trace), \
+    base = replay_burst(build("defaultnv", n_prefill=0, n_decode=0,
+                              n_colocated=2), trace, smoke.vocab_size,
+                        max_len=max_len)
+    rep = replay_burst(build("greenllm", n_prefill=1, n_decode=1),
+                       trace, smoke.vocab_size, max_len=max_len)
+    assert rep.completed == base.completed == len(trace), \
         "cluster must drain the burst completely (zero stalls)"
 
     print(f"{'replica':12s} {'role':10s} {'E_pre J':>9s} {'E_dec J':>9s} "
           f"{'E_idle J':>9s} {'tok pre/dec':>12s} {'handoffs':>9s}")
-    for row in st["replicas"]:
-        print(f"{row['name']:12s} {row['role']:10s} "
-              f"{row['prefill_energy_j']:9.1f} {row['decode_energy_j']:9.1f} "
-              f"{row['idle_energy_j']:9.1f} "
-              f"{row['prefill_tokens']:5d}/{row['decode_tokens']:5d} "
-              f"{row['exported'] + row['imported']:9d}")
-    save = 100 * (1 - st["energy_j"] / base["energy_j"])
-    print(f"completed={st['completed']}/{len(trace)}  "
-          f"handoffs={st['handoffs']}  preempted={st['preempted']}  "
-          f"makespan={st['makespan_s']:.2f}s")
-    print(f"TTFT pass={st['ttft_pass']*100:.0f}%  "
-          f"TBT pass={st['tbt_pass']*100:.0f}%  "
-          f"p95 TBT={st['p95_tbt_ms']:.1f}ms")
-    print(f"energy: disaggregated={st['energy_j']/1e3:.2f}kJ  "
-          f"colocated@fmax={base['energy_j']/1e3:.2f}kJ  "
+    for row in rep.replicas:
+        print(f"{row.name:12s} {row.role:10s} "
+              f"{row.prefill_energy_j:9.1f} {row.decode_energy_j:9.1f} "
+              f"{row.idle_energy_j:9.1f} "
+              f"{row.prefill_tokens:5d}/{row.decode_tokens:5d} "
+              f"{row.exported + row.imported:9d}")
+    save = 100 * (1 - rep.total_energy_j / base.total_energy_j)
+    print(f"completed={rep.completed}/{len(trace)}  "
+          f"handoffs={rep.migrated}  preempted={rep.preempted}  "
+          f"makespan={rep.duration_s:.2f}s")
+    print(f"TTFT pass={rep.ttft_pass * 100:.0f}%  "
+          f"TBT pass={rep.tbt_pass * 100:.0f}%  "
+          f"p95 TBT={rep.p95_tbt_s * 1e3:.1f}ms")
+    print(f"energy: disaggregated={rep.total_energy_j / 1e3:.2f}kJ  "
+          f"colocated@fmax={base.total_energy_j / 1e3:.2f}kJ  "
           f"saving={save:.1f}%")
-    assert st["energy_j"] <= base["energy_j"], \
+    assert rep.total_energy_j <= base.total_energy_j, \
         "per-phase DVFS must not cost energy vs the max-freq baseline"
 
 
@@ -103,19 +112,24 @@ def main():
               f"{m.throughput_tok_s:7.0f}")
 
     # --- real JAX execution with the same control plane ------------------------
+    # streamed through the request-lifecycle API: tokens arrive in decode-
+    # block bursts while the rest of the batch is still in flight
     print("\n=== real-execution burst (reduced model, GreenLLM control) ===")
     smoke = cfg.smoke()
-    eng = ServingEngine(smoke, ecfg=EngineConfig(max_batch=8, max_len=192),
-                        plant_cfg=cfg)
+    srv = Server(ServingEngine(smoke,
+                               ecfg=EngineConfig(max_batch=8, max_len=192),
+                               plant_cfg=cfg))
     rng = np.random.default_rng(0)
-    for i in range(12):
-        eng.submit(Request(rid=i, arrival=0.0,
-                           prompt_len=int(rng.integers(16, 80)),
-                           output_len=int(rng.integers(16, 60))))
-    stats = eng.run_until_drained()
-    print(f"completed={stats['completed']}  virtual_time={stats['vtime_s']:.2f}s  "
-          f"energy={stats['energy_j']/1e3:.2f}kJ  "
-          f"p95 TBT={stats['p95_tbt_ms']:.1f}ms  clock={stats['freq_mhz']:.0f}MHz")
+    handles = [srv.submit(rng.integers(0, smoke.vocab_size,
+                                       size=int(rng.integers(16, 80))),
+                          SamplingParams(
+                              max_tokens=int(rng.integers(16, 60))))
+               for _ in range(12)]
+    first = sum(1 for _ in handles[0].tokens())   # stream one to completion
+    rep = srv.run()                               # drain the rest
+    print(f"streamed {first} tokens from request 0 while "
+          f"{rep.n_requests - 1} others decoded")
+    print(rep.summary())
 
     # --- paged engine on a long-prompt-heavy trace -----------------------------
     # azure_code prompts are long (code context); on half the dense K/V memory
@@ -129,21 +143,19 @@ def main():
     peng = ServingEngine(smoke, plant_cfg=cfg, ecfg=EngineConfig(
         max_batch=batch, max_len=max_len, paged=True, page_size=page_size,
         num_pages=num_pages))
-    for i, r in enumerate(code_trace[:16]):
-        peng.submit(Request(rid=1000 + i, arrival=0.0,
-                            prompt_len=min(r.prompt_len, max_len // 2),
-                            output_len=min(r.output_len, 48)))
-    st = peng.run_until_drained(max_steps=50_000)
-    dense_equiv = (st["pages_total"] * page_size) // max_len
-    print(f"completed={st['completed']}  preempted={st['preempted']}  "
-          f"pool={st['pages_total']}p ({dense_equiv} dense-equivalent rows "
+    pst = replay_burst(Server(peng), code_trace[:16], smoke.vocab_size,
+                       max_len=max_len, keep_arrivals=False)
+    pool = peng.pager.occupancy()["pages_total"]   # page 0 is scratch
+    dense_equiv = (pool * page_size) // max_len
+    print(f"completed={pst.completed}  preempted={pst.preempted}  "
+          f"pool={pool}p ({dense_equiv} dense-equivalent rows "
           f"for batch={batch})")
-    print(f"occupancy(now)={st['page_occupancy']*100:.0f}%  "
-          f"peak={st['page_occupancy_peak']*100:.0f}%  "
-          f"fragmentation={st['page_fragmentation']*100:.0f}%")
-    print(f"E_prefill={st['prefill_energy_j']/1e3:.2f}kJ ({st['prefill_tokens']} tok)  "
-          f"E_decode={st['decode_energy_j']/1e3:.2f}kJ ({st['decode_tokens']} tok)  "
-          f"p95 TBT={st['p95_tbt_ms']:.1f}ms")
+    print(f"peak occupancy={pst.page_occupancy_peak * 100:.0f}%")
+    print(f"E_prefill={pst.prefill_energy_j/1e3:.2f}kJ "
+          f"({pst.prefill_tokens} tok)  "
+          f"E_decode={pst.decode_energy_j/1e3:.2f}kJ "
+          f"({pst.decode_tokens} tok)  "
+          f"p95 TBT={pst.p95_tbt_s * 1e3:.1f}ms")
 
     # --- disaggregated prefill/decode cluster on the azure_code burst ---------
     if args.cluster:

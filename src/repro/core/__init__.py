@@ -1,5 +1,8 @@
 from .hardware import HardwareProfile, A100_SXM4_40G, TPU_V5E, PROFILES
-from .types import Request, SLOConfig
+from .types import (Request, RequestState, SamplingParams, SLOConfig,
+                    StateEvent, TokenEvent)
+from .report import (ReplicaReport, RequestReport, ServingReport,
+                     build_report, slo_pass_metrics)
 from .models import QuadraticLatencyModel, CubicPowerModel, TPSFreqTable
 from .router import LengthRouter, make_router, SINGLE_QUEUE
 from .prefill_optimizer import PrefillOptimizer, deadline_from_queue

@@ -1,8 +1,53 @@
-"""Shared serving-plane types."""
+"""Shared serving-plane types: requests, SLOs, and the request-lifecycle
+vocabulary (states, sampling parameters, stream events) spoken by every
+backend (``serving.engine``, ``serving.cluster``, ``sim.engine``) and by the
+``serving.api`` front door."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import enum
+from typing import List, Optional, Tuple
+
+
+class RequestState(str, enum.Enum):
+    """Lifecycle of a request inside any serving backend.
+
+    QUEUED -> PREFILLING -> DECODING -> FINISHED is the happy path; a
+    preempted stream returns to QUEUED (recompute-on-resume keeps its
+    emitted tokens), and ``cancel`` moves any non-terminal state to
+    CANCELLED (terminal).  One-shot (non-chunked) prefills jump straight
+    from QUEUED to DECODING — PREFILLING marks the *observable* mid-chunk
+    window, not an accounting phase.
+    """
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.FINISHED, RequestState.CANCELLED)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling surface of ``serving.api.Server.submit``.
+
+    ``temperature=None`` inherits the backend's configured sampling mode.
+    The real-execution engines fuse sampling into jitted kernels with the
+    temperature static, so a non-None temperature must match the backend's
+    (``Server.submit`` validates and raises instead of silently resampling).
+    """
+    max_tokens: int = 64           # output length cap (the request's budget)
+    temperature: Optional[float] = None   # None -> backend default; 0 -> greedy
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.temperature is not None and self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
 
 
 @dataclasses.dataclass
@@ -17,6 +62,8 @@ class Request:
     finish: float = -1.0
     tokens_emitted: int = 0
     cls: str = ""              # routing class ("SM" | "L")
+    state: RequestState = RequestState.QUEUED
+    deadline: float = -1.0     # optional absolute finish deadline (< 0: none)
     # real-execution engine state: tokenized prompt (np.ndarray int32) and
     # the emitted output token ids, filled in by ServingEngine.  Excluded
     # from __eq__: ndarray comparison would make Request equality raise.
@@ -30,6 +77,32 @@ class Request:
     @property
     def ttft(self) -> float:
         return self.first_token - self.arrival if self.first_token >= 0 else float("inf")
+
+
+# -- stream events -------------------------------------------------------------
+# Backends buffer these at their natural cadence (the real engines at decode-
+# block granularity — never per token) and hand them out via
+# ``Backend.drain_events`` — the observability surface for external
+# consumers; ``serving.api`` handles read their request's token list
+# directly.
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """``n`` new tokens for stream ``rid``.  Real-execution backends carry
+    the token ids; the discrete-event simulator emits counts only
+    (``tokens=()``) — it models time and energy, not token values."""
+    rid: int
+    time: float
+    tokens: Tuple[int, ...]
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StateEvent:
+    """Stream ``rid`` entered ``state`` at backend time ``time``."""
+    rid: int
+    time: float
+    state: RequestState
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,53 +1,101 @@
-"""Serving launcher: real-execution engine (reduced model) under the
-GreenLLM or defaultNV governor, fed by a synthetic request stream.
+"""Serving launcher: drive any of the repo's data planes — single colocated
+engine, paged engine, or the disaggregated prefill/decode cluster — through
+the ``serving.api.Server`` front door, fed by a synthetic stream or a named
+trace, and print the shared typed ``ServingReport``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 16
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --governor defaultnv
+  PYTHONPATH=src python -m repro.launch.serve --governor defaultnv --paged
+  PYTHONPATH=src python -m repro.launch.serve --cluster --trace azure_code8
+  PYTHONPATH=src python -m repro.launch.serve --no-chunked --requests 8
 """
 import argparse
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Request
-from repro.serving import EngineConfig, ServingEngine
+from repro.core import SamplingParams
+from repro.serving import EngineConfig, Server, ServingCluster, ServingEngine
 
 
-def main():
+def build_backend(args, full, smoke):
+    ecfg = EngineConfig(max_batch=args.max_batch, max_len=args.max_len,
+                        governor=args.governor, paged=args.paged,
+                        chunked_prefill=args.chunked)
+    if args.cluster:
+        # paged slot-native plane is forced by the cluster (KV handoff)
+        return ServingCluster(smoke, n_prefill=1, n_decode=1,
+                              plant_cfg=full, ecfg=ecfg)
+    return ServingEngine(smoke, plant_cfg=full, ecfg=ecfg)
+
+
+def workload(args, vocab):
+    """(arrival, prompt_tokens, max_tokens) triples: a named trace's
+    arrival/length mix, or the synthetic burst."""
+    rng = np.random.default_rng(0)
+    if args.trace != "synthetic":
+        from repro.data import get_trace
+        trace = get_trace(args.trace, duration=args.duration)
+        for r in trace[: args.requests]:
+            plen = min(r.prompt_len, args.max_len // 2)
+            yield (r.arrival, rng.integers(0, vocab, size=plen),
+                   min(r.output_len, args.max_len // 3))
+    else:
+        for _ in range(args.requests):
+            yield (0.0, rng.integers(0, vocab,
+                                     size=int(rng.integers(16, 80))),
+                   int(rng.integers(16, 64)))
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--governor", default="greenllm",
                     choices=["greenllm", "defaultnv"])
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=192)
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache (page-table data plane)")
-    args = ap.parse_args()
+    ap.add_argument("--chunked", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="chunked prefill admission (--no-chunked falls "
+                         "back to eager reference prefill for long prompts)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="disaggregated 1-prefill + 1-decode cluster with "
+                         "paged-KV handoff instead of one colocated engine")
+    ap.add_argument("--trace", default="synthetic",
+                    help="synthetic | chat_5qps | azure_code8 | azure_conv5 "
+                         "| ... (data.traces names; arrivals replayed on "
+                         "the virtual clock)")
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="trace horizon in seconds (named traces only)")
+    args = ap.parse_args(argv)
 
     full = get_config(args.arch)
-    cfg = full.smoke()
-    eng = ServingEngine(cfg, plant_cfg=full,
-                        ecfg=EngineConfig(max_batch=args.max_batch,
-                                          max_len=192,
-                                          governor=args.governor,
-                                          paged=args.paged))
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.submit(Request(rid=i, arrival=0.0,
-                           prompt_len=int(rng.integers(16, 80)),
-                           output_len=int(rng.integers(16, 64))))
-    stats = eng.run_until_drained()
-    print(f"arch={args.arch} governor={args.governor}")
-    print(f"  completed      {stats['completed']}")
-    print(f"  virtual time   {stats['vtime_s']:.2f} s")
-    print(f"  node energy    {stats['energy_j']/1e3:.2f} kJ")
-    print(f"  p95 TBT        {stats['p95_tbt_ms']:.1f} ms (SLO 100 ms)")
-    print(f"  final clock    {stats['freq_mhz']:.0f} MHz")
-    print(f"  E prefill/dec  {stats['prefill_energy_j']/1e3:.2f} / "
-          f"{stats['decode_energy_j']/1e3:.2f} kJ")
-    if args.paged:
-        print(f"  pages          {stats['pages_used']}/{stats['pages_total']}"
-              f" used, {stats['preempted']} preemptions")
+    smoke = full.smoke()
+    server = Server(build_backend(args, full, smoke))
+    n = 0
+    for arrival, prompt, max_tokens in workload(args, smoke.vocab_size):
+        server.submit(prompt, SamplingParams(max_tokens=max_tokens),
+                      arrival=arrival)
+        n += 1
+    rep = server.run()
+    plane = "cluster(1p+1d)" if args.cluster else \
+        ("engine/paged" if args.paged else "engine")
+    print(f"arch={args.arch} governor={args.governor} plane={plane} "
+          f"trace={args.trace} requests={n}")
+    print(rep.summary())
+    for row in rep.replicas:
+        print(f"  {row.name:10s} {row.role:9s} "
+              f"E={row.energy_j / 1e3:6.2f}kJ "
+              f"(pre {row.prefill_energy_j / 1e3:.2f} / "
+              f"dec {row.decode_energy_j / 1e3:.2f} / "
+              f"idle {row.idle_energy_j / 1e3:.2f}) "
+              f"tok {row.prefill_tokens}/{row.decode_tokens} "
+              f"handoffs {row.exported + row.imported} "
+              f"clock {row.freq_mhz:.0f}MHz")
+    assert rep.completed == n, "launcher burst must drain completely"
+    return rep
 
 
 if __name__ == "__main__":

@@ -2,3 +2,4 @@ from .engine import ServingEngine, EngineConfig, StreamHandoff
 from .pager import PageAllocator, SCRATCH_PAGE
 from .cluster import (ServingCluster, ClusterDispatcher, Replica,
                       PrefillPhaseController)
+from .api import Backend, RequestHandle, Server

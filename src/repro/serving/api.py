@@ -1,0 +1,215 @@
+"""Request-lifecycle serving API: the one front door over every data plane.
+
+``Server`` wraps any ``Backend`` — the real-execution ``ServingEngine``, the
+disaggregated ``ServingCluster``, or the discrete-event
+``sim.ServingSimulator`` — behind a submit → stream → cancel surface:
+
+    server = Server(ServingEngine(cfg, ...))
+    h = server.submit(prompt_tokens, SamplingParams(max_tokens=32),
+                      arrival=0.25)
+    for tok in h.tokens():        # drains at decode-block granularity
+        ...
+    h.cancel()                    # queued, mid-chunked-prefill or mid-decode
+    report = server.run()         # typed ServingReport (core.report)
+
+Design constraints inherited from the engine (ROADMAP invariants):
+
+* **No new per-token host syncs** — handles do not poll the device.  The
+  backends append tokens to each ``Request`` (and buffer ``TokenEvent`` /
+  ``StateEvent`` records for ``drain_events`` consumers) at their natural
+  cadence — the real engines once per decode block, the simulator per
+  discrete event — and handles read that list through a cursor.
+  ``handle.tokens()`` therefore yields in bursts of block size.
+* **One driver loop** — ``Server.run`` / ``Server._pump`` is the only place
+  that steps a backend; the three divergent ``run_until_drained`` loops are
+  legacy shims kept for one release.
+* **Typed results** — every backend's ``report()`` returns the same
+  ``ServingReport``; there are no string-keyed stats dicts to adapt.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import Request, RequestState, SamplingParams, ServingReport
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a data plane must expose to sit behind ``Server``.
+
+    Implemented by ``serving.ServingEngine``, ``serving.ServingCluster``
+    and ``sim.ServingSimulator``.  ``step`` advances one unit of work (a
+    decode block / an admission round / one discrete event); ``has_work``
+    is False exactly when the backend is drained; ``drain_events`` hands
+    out buffered stream events (cleared on read); ``cancel`` releases a
+    request anywhere short of completion; ``report`` builds the shared
+    typed report over everything served so far.
+    """
+
+    def submit(self, req: Request,
+               prompt_tokens: Optional[np.ndarray] = None) -> None: ...
+
+    def has_work(self) -> bool: ...
+
+    def step(self) -> object: ...
+
+    def drain_events(self) -> List: ...
+
+    def cancel(self, rid: int) -> bool: ...
+
+    def report(self) -> ServingReport: ...
+
+
+class RequestHandle:
+    """A live view of one submitted request.
+
+    ``tokens()`` streams token ids incrementally (bursts of decode-block
+    size — see module docstring); ``result()`` blocks until the request is
+    terminal and returns its ``Request``; ``cancel()`` releases it
+    mid-queue, mid-chunked-prefill or mid-decode.  The discrete-event
+    simulator emits token *counts* only, so its handles stream nothing but
+    still resolve ``result()`` / ``state``.
+    """
+
+    def __init__(self, server: "Server", req: Request):
+        self._server = server
+        self.request = req
+        self._cursor = 0        # next unread index into request.tokens
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def state(self) -> RequestState:
+        return self.request.state
+
+    @property
+    def done(self) -> bool:
+        return self.request.state.terminal
+
+    def tokens(self) -> Iterator[int]:
+        """Yield output token ids as the backend produces them; returns
+        when the request finishes or is cancelled (tokens produced before
+        a cancel remain readable).
+
+        The handle reads ``request.tokens`` through a cursor — the list the
+        backend appends to at block granularity — so streaming adds no
+        per-request copy of the output.  The simulator emits token *counts*
+        only (``request.tokens`` stays empty), so its handles stream
+        nothing but still resolve ``result()`` / ``state``."""
+        while True:
+            toks = self.request.tokens
+            while self._cursor < len(toks):
+                tok = toks[self._cursor]
+                self._cursor += 1
+                yield tok
+            if self.done:
+                return
+            if not self._server._pump():
+                return          # backend drained without finishing us
+
+    def result(self) -> Request:
+        """Run the backend until this request is terminal; returns the
+        ``Request`` (token ids in ``.tokens``, timestamps/state on it)."""
+        for _ in self.tokens():
+            pass
+        return self.request
+
+    def cancel(self) -> bool:
+        """Release the request wherever it lives (slot freed, page chain
+        released, recurrent state frozen).  Tokens already produced stay
+        buffered and readable.  False if it was already terminal."""
+        if self.done:
+            return False
+        return self._server.backend.cancel(self.rid)
+
+
+class Server:
+    """The serving front door: submit → stream → cancel over any backend."""
+
+    def __init__(self, backend: Backend):
+        self.backend = backend
+        self._handles: Dict[int, RequestHandle] = {}
+        self._next_rid = 0
+
+    # -- intake ----------------------------------------------------------------
+    def submit(self, prompt, params: Optional[SamplingParams] = None, *,
+               arrival: float = 0.0, deadline: float = -1.0,
+               rid: Optional[int] = None) -> RequestHandle:
+        """Submit one request.
+
+        ``prompt`` is either a sequence of token ids (the real engines
+        compute on them) or an int prompt length (tokens synthesized /
+        simulator).  ``arrival`` is the request's arrival time on the
+        backend's virtual clock — backends never start work before it.
+        ``deadline`` (absolute, optional) is carried into the per-request
+        report rows.  Sampling temperature is engine-global (static in the
+        jitted kernels), so a non-None ``params.temperature`` must match
+        the backend's configured sampling mode.
+        """
+        params = params if params is not None else SamplingParams()
+        self._check_sampling(params)
+        if isinstance(prompt, (int, np.integer)):
+            prompt_len, prompt_tokens = int(prompt), None
+        else:
+            prompt_tokens = np.asarray(prompt, np.int32)
+            prompt_len = len(prompt_tokens)
+        if rid is None:
+            rid = self._next_rid
+        if rid in self._handles:
+            raise ValueError(f"duplicate rid {rid}")
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = Request(rid=rid, arrival=arrival, prompt_len=prompt_len,
+                      output_len=params.max_tokens, deadline=deadline)
+        self.backend.submit(req, prompt_tokens)
+        handle = RequestHandle(self, req)
+        self._handles[rid] = handle
+        return handle
+
+    def _check_sampling(self, params: SamplingParams) -> None:
+        ecfg = getattr(self.backend, "ecfg", None)
+        if params.temperature is None or ecfg is None:
+            return      # inherit backend default / simulator (time-only)
+        backend_temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
+        if abs(params.temperature - backend_temp) > 1e-9:
+            raise ValueError(
+                f"SamplingParams.temperature={params.temperature} does not "
+                f"match the backend's configured temperature {backend_temp} "
+                "(sampling is fused into jitted kernels with a static "
+                "temperature; configure it via EngineConfig)")
+
+    # -- driving ----------------------------------------------------------------
+    def _pump(self) -> bool:
+        """Advance the backend one unit of work.  False when the backend is
+        drained.  Handles observe progress directly through their request
+        objects (token list + state), so the buffered stream events only
+        need draining — kept for external ``drain_events`` consumers, and
+        cleared here so nothing accumulates."""
+        if not self.backend.has_work():
+            self.backend.drain_events()
+            return False
+        self.backend.step()
+        self.backend.drain_events()
+        return True
+
+    def run(self, max_rounds: int = 1_000_000) -> ServingReport:
+        """The one driver loop: serve until the backend drains, then return
+        the typed report.  (Interleave with ``handle.tokens()`` freely —
+        streaming consumes the same loop.)"""
+        rounds = 0
+        while self._pump():
+            rounds += 1
+            if rounds >= max_rounds and self.backend.has_work():
+                raise RuntimeError(
+                    f"backend did not drain within {max_rounds} rounds")
+        return self.report()
+
+    def cancel(self, rid: int) -> bool:
+        h = self._handles.get(rid)
+        return h.cancel() if h is not None else self.backend.cancel(rid)
+
+    def report(self) -> ServingReport:
+        return self.backend.report()

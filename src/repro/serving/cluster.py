@@ -55,7 +55,8 @@ import numpy as np
 
 from repro.core import (DualLoopController, DecodeControllerConfig,
                         LengthRouter, MaxFreqController, PrefillOptimizer,
-                        Request, SLOConfig)
+                        ReplicaReport, Request, RequestState, ServingReport,
+                        SLOConfig, StateEvent, build_report)
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
 from repro.core.prefill_optimizer import deadline_from_queue
 from repro.models import ModelConfig, init_params
@@ -255,6 +256,7 @@ class ServingCluster:
         self._future: List[Tuple[float, int, Request, object]] = []
         self._seq = 0
         self._stalled_rounds = 0
+        self._events: List = []      # cluster-level events (future cancels)
 
     # -- intake ----------------------------------------------------------------
     def submit(self, req: Request,
@@ -272,8 +274,45 @@ class ServingCluster:
                  if r.role in ("prefill", "colocated")]
         while self._future and self._future[0][0] <= now:
             _, _, req, ptoks = heapq.heappop(self._future)
+            if req.state.terminal:      # cancelled before arrival
+                continue
             r = self.dispatcher.pick_prefill(req, cands, self.optimizer)
             r.engine.submit(req, ptoks)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it lives in the cluster: not yet
+        arrived (future heap), queued / mid-prefill / mid-decode on a
+        replica, or in flight between replicas (import queue — the exported
+        page payload is host data and is simply dropped; the source replica
+        already released the chain)."""
+        for t, seq, req, ptoks in self._future:
+            if req.rid == rid and not req.state.terminal:
+                req.state = RequestState.CANCELLED
+                self._events.append(StateEvent(
+                    rid, max((r.vtime for r in self.replicas), default=0.0),
+                    RequestState.CANCELLED))
+                return True      # lazily skipped at injection
+        for r in self.replicas:
+            if r.engine.cancel(rid):
+                return True
+            for ho in list(r.import_q):
+                if ho.req.rid == rid:
+                    r.import_q.remove(ho)
+                    ho.req.state = RequestState.CANCELLED
+                    self._events.append(StateEvent(
+                        rid, r.vtime, RequestState.CANCELLED))
+                    return True
+        return False
+
+    def drain_events(self) -> List:
+        """Backend protocol: merge every replica's buffered stream events
+        (plus cluster-level cancellations) in event-time order."""
+        ev = self._events
+        self._events = []
+        for r in self.replicas:
+            ev.extend(r.engine.drain_events())
+        ev.sort(key=lambda e: e.time)
+        return ev
 
     # -- per-role stepping ------------------------------------------------------
     def _retune_prefill(self, r: Replica) -> None:
@@ -360,6 +399,10 @@ class ServingCluster:
         if e.active:
             e._decode_block(max(1, e._horizon()))
 
+    def has_work(self) -> bool:
+        """Backend protocol: future arrivals or any replica with work."""
+        return bool(self._future) or any(r.has_work() for r in self.replicas)
+
     # -- main loop --------------------------------------------------------------
     def step(self) -> bool:
         """Advance the laggard replica by one unit of work (an admission
@@ -403,8 +446,17 @@ class ServingCluster:
                     + len(r.engine.active) for r in self.replicas))
 
     def run_until_drained(self, max_rounds: int = 1_000_000) -> Dict:
+        """Legacy batch driver, kept for one release as a thin shim over
+        the Backend protocol (``serving.api.Server`` is the front door).
+        Returns the legacy ``stats()`` dict."""
         rounds = 0
         while self.step():
+            # no consumer in the batch interface: drop each replica's
+            # buffered events through its public drain (skipping the
+            # cluster-level time-sorted merge, which would be wasted work)
+            for r in self.replicas:
+                r.engine.drain_events()
+            self._events.clear()
             rounds += 1
             if rounds >= max_rounds:
                 raise RuntimeError("cluster did not drain within "
@@ -412,61 +464,69 @@ class ServingCluster:
         return self.stats()
 
     # -- metrics ----------------------------------------------------------------
-    def stats(self) -> Dict:
-        """Cluster roll-up: per-replica energy/occupancy (active split by
-        phase + idle up to the shared makespan) and request-level SLO
-        metrics computed like ``sim.replay.compute_metrics``."""
+    def report(self) -> ServingReport:
+        """Backend protocol: cluster roll-up as the shared typed report —
+        per-replica energy split (active by phase + idle up to the shared
+        makespan) and request-level SLO metrics scored by the same
+        definition as the simulator and the single engine.  Requests carry
+        cluster-wide state; TBT records live on whichever replica decoded
+        the stream."""
         makespan = max((r.vtime for r in self.replicas), default=0.0)
-        per: List[Dict] = []
-        tot = {"prefill_energy_j": 0.0, "decode_energy_j": 0.0,
-               "idle_energy_j": 0.0, "energy_j": 0.0,
-               "prefill_tokens": 0, "decode_tokens": 0}
+        rows: List[ReplicaReport] = []
         for r in self.replicas:
-            s = r.engine.stats()
-            idle = r.idle_j + (makespan - r.vtime) \
-                * r.engine.plant.idle_power
-            row = {
-                "name": r.name, "role": r.role, "vtime_s": r.vtime,
-                "prefill_energy_j": s["prefill_energy_j"],
-                "decode_energy_j": s["decode_energy_j"],
-                "idle_energy_j": idle,
-                "energy_j": s["energy_j"] + idle,
-                "prefill_tokens": s["prefill_tokens"],
-                "decode_tokens": s["decode_tokens"],
-                "exported": r.exported, "imported": r.imported,
-                "preempted": s.get("preempted", 0),
-                "page_occupancy_peak": s.get("page_occupancy_peak", 0.0),
-                "freq_mhz": s["freq_mhz"],
-            }
-            per.append(row)
-            tot["prefill_energy_j"] += s["prefill_energy_j"]
-            tot["decode_energy_j"] += s["decode_energy_j"]
-            tot["idle_energy_j"] += idle
-            tot["energy_j"] += s["energy_j"] + idle
-            tot["prefill_tokens"] += s["prefill_tokens"]
-            tot["decode_tokens"] += s["decode_tokens"]
-
-        # request-level SLO metrics (requests carry cluster-wide state; TBT
-        # records live on whichever replica decoded the stream) — scored by
-        # the same definition as the simulator and the single engine
-        from repro.sim.replay import slo_pass_metrics
+            e = r.engine
+            idle = r.idle_j + (makespan - r.vtime) * e.plant.idle_power
+            rows.append(ReplicaReport(
+                name=r.name, role=r.role, vtime_s=r.vtime,
+                prefill_energy_j=e.prefill_energy_j,
+                decode_energy_j=e.decode_energy_j,
+                idle_energy_j=idle,
+                energy_j=e.energy_j + idle,
+                prefill_tokens=e.prefill_tokens,
+                decode_tokens=e.decode_tokens,
+                exported=r.exported, imported=r.imported,
+                preempted=e._preempted,
+                page_occupancy_peak=e.page_occupancy_peak(),
+                freq_mhz=e.controller.freq))
         tbt: Dict[int, List[float]] = {}
         for r in self.replicas:
             for rid, v in r.engine._tbt.items():
                 tbt.setdefault(rid, []).extend(v)
-        m = slo_pass_metrics(self.requests, tbt, self.slo,
-                             self.dispatcher.class_names)
+        return build_report(
+            backend="cluster", requests=self.requests, tbt_records=tbt,
+            slo=self.slo, class_names=self.dispatcher.class_names,
+            prefill_energy_j=sum(w.prefill_energy_j for w in rows),
+            decode_energy_j=sum(w.decode_energy_j for w in rows),
+            idle_energy_j=sum(w.idle_energy_j for w in rows),
+            prefill_tokens=sum(w.prefill_tokens for w in rows),
+            decode_tokens=sum(w.decode_tokens for w in rows),
+            duration_s=makespan,
+            preempted=sum(w.preempted for w in rows),
+            migrated=sum(w.imported for w in rows),
+            page_occupancy_peak=max([w.page_occupancy_peak for w in rows]
+                                    or [0.0]),
+            replicas=tuple(rows))
+
+    def stats(self) -> Dict:
+        """Legacy dict view, kept for one release: derived entirely from
+        ``report()`` so there is a single metrics definition."""
+        rep = self.report()
         return {
-            "replicas": per,
-            "completed": sum(1 for q in self.requests if q.finish >= 0),
-            "n_requests": len(self.requests),
-            "makespan_s": makespan,
-            "handoffs": sum(r.imported for r in self.replicas),
-            "preempted": sum(row["preempted"] for row in per),
-            "ttft_pass": m["ttft_pass"],
-            "tbt_pass": m["tbt_pass"],
-            "p90_ttft_s": m["p90_ttft"],
-            "p95_tbt_ms": m["p95_tbt"] * 1e3,
-            "p99_tbt_ms": m["p99_tbt"] * 1e3,
-            **tot,
+            "replicas": [dataclasses.asdict(w) for w in rep.replicas],
+            "completed": rep.completed,
+            "n_requests": rep.n_requests,
+            "makespan_s": rep.duration_s,
+            "handoffs": rep.migrated,
+            "preempted": rep.preempted,
+            "ttft_pass": rep.ttft_pass,
+            "tbt_pass": rep.tbt_pass,
+            "p90_ttft_s": dict(rep.p90_ttft_s),
+            "p95_tbt_ms": rep.p95_tbt_s * 1e3,
+            "p99_tbt_ms": rep.p99_tbt_s * 1e3,
+            "prefill_energy_j": rep.prefill_energy_j,
+            "decode_energy_j": rep.decode_energy_j,
+            "idle_energy_j": rep.idle_energy_j,
+            "energy_j": rep.total_energy_j,
+            "prefill_tokens": rep.prefill_tokens,
+            "decode_tokens": rep.decode_tokens,
         }

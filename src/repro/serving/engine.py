@@ -68,7 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DualLoopController, MaxFreqController, Request,
-                        SLOConfig, make_router)
+                        RequestState, ServingReport, SLOConfig, StateEvent,
+                        TokenEvent, build_report, make_router)
 from repro.core.telemetry import OccupancyMeter
 from repro.models import (ModelConfig, init_cache, init_params, prefill,
                           prefill_into_slot, prefill_chunk_into_slot,
@@ -257,6 +258,52 @@ class EngineConfig:
     # sim.replay.Metrics); virtual-time accounting itself is unaffected
     slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
 
+    def __post_init__(self):
+        """Reject impossible configurations here, with a readable message,
+        instead of letting them fail deep inside jitted shape logic."""
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {self.max_len}")
+        if self.decode_block < 1:
+            raise ValueError(
+                f"decode_block must be >= 1, got {self.decode_block}")
+        if self.min_bucket < 1:
+            raise ValueError(
+                f"min_bucket must be >= 1, got {self.min_bucket}")
+        if self.min_bucket > max(self.max_len // 2, 1):
+            raise ValueError(
+                f"min_bucket={self.min_bucket} exceeds the prefill bucket "
+                f"cap max_len//2={self.max_len // 2} (prompts are truncated "
+                f"to max_len//2, so no bucket could ever be used)")
+        if not self.greedy and self.temperature <= 0.0:
+            raise ValueError(
+                "greedy=False requires temperature > 0 "
+                f"(got {self.temperature})")
+        if self.paged:
+            if not self.slot_native:
+                raise ValueError(
+                    "paged KV requires the slot-native data plane "
+                    "(slot_native=True)")
+            if self.page_size < 1:
+                raise ValueError(
+                    f"page_size must be >= 1, got {self.page_size}")
+            if self.max_len % self.page_size:
+                raise ValueError(
+                    f"max_len={self.max_len} must be divisible by "
+                    f"page_size={self.page_size}: pages are linear "
+                    "(position == logical index) and ctx buckets round to "
+                    "page multiples")
+            if self.num_pages and self.num_pages < 2:
+                # undersized pools (< one page per slot) are legal: pool
+                # pressure is handled by preemption + recompute-on-resume.
+                # But page 0 is the reserved scratch page, so the pool
+                # needs at least one usable page beyond it.
+                raise ValueError(
+                    f"num_pages={self.num_pages} leaves no usable pages: "
+                    "page 0 is the reserved scratch page (need num_pages "
+                    ">= 2, or 0 for dense-equivalent capacity)")
+
 
 @dataclasses.dataclass
 class StreamHandoff:
@@ -347,7 +394,6 @@ class ServingEngine:
         # never mutated
         self._chunked = bool(ecfg.chunked_prefill or ecfg.paged)
         if ecfg.paged:
-            assert ecfg.slot_native, "paged KV requires the slot-native plane"
             ps = ecfg.page_size
             self._max_pages = -(-ecfg.max_len // ps)
             n_pages = ecfg.num_pages or (B * self._max_pages + 1)
@@ -369,6 +415,7 @@ class ServingEngine:
         # energy and token counts so real-engine and simulator runs compare)
         self.prefill_energy_j = 0.0
         self.decode_energy_j = 0.0
+        self.idle_energy_j = 0.0    # billed when waiting on future arrivals
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self._occupancy = OccupancyMeter()   # pool-pressure telemetry
@@ -376,7 +423,11 @@ class ServingEngine:
         self._tbt: Dict[int, List[float]] = {}
         self._completed = 0
         self._preempted = 0
-        self._done: List[Request] = []   # finished requests (SLO reporting)
+        self._cancelled = 0
+        self._imported = 0   # adopted handoffs (report().migrated);
+        #                      exports are counted by the cluster's Replica
+        self.requests: List[Request] = []  # everything this engine has seen
+        self._events: List = []     # buffered stream events (drain_events)
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -393,6 +444,13 @@ class ServingEngine:
                       if k in (FULL_ATTN, LOCAL_ATTN)]
         slot_cap = min([attn_buffer_len(cfg, k, ecfg.max_len, False)
                         for k in attn_kinds] or [ecfg.max_len])
+        if slot_cap < ecfg.min_bucket:
+            raise ValueError(
+                f"min_bucket={ecfg.min_bucket} exceeds the smallest "
+                f"attention buffer ({slot_cap} positions — sliding-window / "
+                f"long-context ring) of model '{cfg.name}': no prefill "
+                "bucket would fit a slot write; lower EngineConfig.min_bucket"
+            )
         cap = min(slot_cap, max(ecfg.max_len // 2, 1))
         self.buckets: List[int] = []
         b = ecfg.min_bucket
@@ -442,7 +500,9 @@ class ServingEngine:
             prompt_tokens = rng.integers(
                 0, self.cfg.vocab_size, size=max(req.prompt_len, 1))
         req.prompt = np.asarray(prompt_tokens, np.int32)[-self.ecfg.max_len // 2:]
+        req.state = RequestState.QUEUED
         self.pending.append(req)
+        self.requests.append(req)
 
     def _account_prefill_tokens(self, n_tokens: int, first: bool,
                                 req: Request):
@@ -469,6 +529,10 @@ class ServingEngine:
         if not resumed:
             req.tokens.append(tok)
             req.tokens_emitted = 1
+            self._events.append(TokenEvent(req.rid, self.vtime, (tok,), 1))
+        req.state = RequestState.DECODING
+        self._events.append(StateEvent(req.rid, self.vtime,
+                                       RequestState.DECODING))
         self.active[slot] = st
         self._active_host[slot] = True
         self._active = jnp.asarray(self._active_host)
@@ -526,6 +590,9 @@ class ServingEngine:
     def _admit(self):
         while self.pending and self.free_slots:
             req = self.pending[0]
+            if req.arrival > self.vtime + 1e-12:
+                break        # FIFO head not arrived yet (online traffic);
+                #              the driver jumps the clock when fully idle
             resume = bool(req.tokens)        # preempted stream: recompute
             ctx_toks = req.prompt if not resume else np.concatenate(
                 [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
@@ -552,6 +619,9 @@ class ServingEngine:
         self.prefilling[slot] = _ChunkState(
             req, slot, np.asarray(ctx_toks, np.int32),
             resume_tok=req.tokens[-1] if resume else None, order=self._order)
+        req.state = RequestState.PREFILLING
+        self._events.append(StateEvent(req.rid, self.vtime,
+                                       RequestState.PREFILLING))
 
     def _advance_chunks(self) -> bool:
         """Process one chunk for every mid-prefill stream (called once per
@@ -628,12 +698,54 @@ class ServingEngine:
             req = self.active.pop(slot).req
         else:
             req = self.prefilling.pop(slot).req
-        self.pager.free_chain(slot)
+        self._release_slot(slot)
+        self.pending.insert(0, req)
+        self._preempted += 1
+        req.state = RequestState.QUEUED
+        self._events.append(StateEvent(req.rid, self.vtime,
+                                       RequestState.QUEUED))
+        return True
+
+    # -- cancellation ----------------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it currently lives — queued,
+        mid-chunked-prefill, or mid-decode — freeing its slot and page chain
+        immediately (the preemption machinery minus the requeue/recompute).
+        The recurrent row state is frozen by the inactive mask and the freed
+        pages' future held-pos writes land in the scratch page, so surviving
+        streams are untouched.  Returns False for unknown or already-terminal
+        requests; operates at block granularity like every host-side
+        decision (no mid-block aborts, no new host syncs)."""
+        for i, req in enumerate(self.pending):
+            if req.rid == rid:
+                self.pending.pop(i)
+                return self._mark_cancelled(req)
+        for slot, cs in list(self.prefilling.items()):
+            if cs.req.rid == rid:
+                del self.prefilling[slot]
+                self._release_slot(slot)
+                return self._mark_cancelled(cs.req)
+        for slot, st in list(self.active.items()):
+            if st.req.rid == rid:
+                del self.active[slot]
+                self._release_slot(slot)
+                return self._mark_cancelled(st.req)
+        return False
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot (and its page chain) to the free pool and drop its
+        batch row from the active mask."""
+        if self.pager is not None:
+            self.pager.free_chain(slot)
         self._active_host[slot] = False
         self._active = jnp.asarray(self._active_host)
         self.free_slots.append(slot)
-        self.pending.insert(0, req)
-        self._preempted += 1
+
+    def _mark_cancelled(self, req: Request) -> bool:
+        req.state = RequestState.CANCELLED
+        self._cancelled += 1
+        self._events.append(StateEvent(req.rid, self.vtime,
+                                       RequestState.CANCELLED))
         return True
 
     # -- replica-to-replica migration (disaggregated serving) ------------------
@@ -709,6 +821,8 @@ class ServingEngine:
         self.caches = caches
         self._tok = self._tok.at[slot].set(ho.last_token)
         self._pos = self._pos.at[slot].set(ho.pos)
+        self._imported += 1
+        self.requests.append(ho.req)
         self._start_stream(ho.req, slot, ho.last_token, ho.pos, resumed=True)
         return True
 
@@ -726,11 +840,15 @@ class ServingEngine:
         return dur
 
     def _finish_check(self, st: _Stream) -> bool:
+        """Mark a stream finished when it has emitted its budget (or hit
+        max_len).  The FINISHED StateEvent is emitted by the caller *after*
+        the stream's TokenEvent so drain_events consumers never see
+        end-of-stream before the final tokens."""
         if (st.req.tokens_emitted >= st.req.output_len
                 or st.pos >= self.ecfg.max_len - 1):
             st.req.finish = self.vtime
+            st.req.state = RequestState.FINISHED
             self._completed += 1
-            self._done.append(st.req)
             return True
         return False
 
@@ -765,11 +883,15 @@ class ServingEngine:
                 f"({self.pager.pages_used}/{self.pager.num_pages - 1} used)")
 
     def _decode_block(self, k: int) -> int:
-        """Run ``k`` decode steps with a single host drain at the end.
+        """Run ``k`` decode steps with a single host drain at the end;
+        returns the number of steps actually executed (pool pressure may
+        shrink ``k``).
 
         The batch composition is fixed for the block (the caller sizes ``k``
         to the next join/leave event), so virtual-time accounting needs no
         device data and the jitted steps pipeline without a host sync.
+        Stream events (tokens, finishes) are emitted here, once per block —
+        the streaming API inherits the no-per-token-host-sync invariant.
         """
         if self.pager is not None and self.active:
             k = self._grow_for_block(k)
@@ -828,6 +950,7 @@ class ServingEngine:
         # single drain per block: (k, B) int32
         toks = np.concatenate(jax.device_get(toks_dev), axis=0)
         done: List[int] = []
+        block_toks: Dict[int, List[int]] = {slot: [] for slot, _ in snapshot}
         for i in range(k):
             ctx = float(np.mean([st.pos for st in self.active.values()
                                  if st.slot not in done]))
@@ -837,11 +960,22 @@ class ServingEngine:
                     continue
                 st.last_token = int(toks[i, slot])
                 st.req.tokens.append(st.last_token)
+                block_toks[slot].append(st.last_token)
                 st.pos += 1
                 st.req.tokens_emitted += 1
                 self._tbt.setdefault(st.req.rid, []).append(dur)
                 if self._finish_check(st):
                     done.append(slot)
+        for slot, st in snapshot:       # one TokenEvent per stream per block
+            if block_toks[slot]:
+                self._events.append(TokenEvent(
+                    st.req.rid, self.vtime, tuple(block_toks[slot]),
+                    len(block_toks[slot])))
+        by_slot = dict(snapshot)        # FINISHED strictly after the tokens
+        for slot in done:
+            self._events.append(StateEvent(by_slot[slot].req.rid,
+                                           self.vtime,
+                                           RequestState.FINISHED))
         self._retire(done)
         if self.pager is not None:
             occ = self.pager.occupancy()["occupancy"]
@@ -852,7 +986,7 @@ class ServingEngine:
             record = getattr(self.controller, "record_occupancy", None)
             if record is not None:
                 record(self.vtime, occ)
-        return batch
+        return k
 
     def _step_legacy(self) -> int:
         """Pre-slot data plane: host argmax + batch-wide max(pos).  Kept only
@@ -876,22 +1010,72 @@ class ServingEngine:
             st.pos += 1
             st.req.tokens_emitted += 1
             self._tbt.setdefault(st.req.rid, []).append(dur)
+            self._events.append(TokenEvent(st.req.rid, self.vtime,
+                                           (st.last_token,), 1))
             if self._finish_check(st):
+                self._events.append(StateEvent(st.req.rid, self.vtime,
+                                               RequestState.FINISHED))
                 done.append(slot)
         self._retire(done)
         return batch
 
-    def step(self) -> int:
-        """Admit (+ advance chunked prefills) + one decode step over all
-        active streams."""
+    def has_work(self) -> bool:
+        """Backend protocol: anything queued, mid-prefill, or decoding."""
+        return bool(self.pending or self.prefilling or self.active)
+
+    def drain_events(self) -> List:
+        """Backend protocol: hand out (and clear) the buffered stream
+        events.  Events accumulate at block granularity — draining them is
+        a host-side list swap, never a device sync."""
+        ev, self._events = self._events, []
+        return ev
+
+    def _advance_idle(self) -> bool:
+        """Nothing running and the FIFO head not yet arrived: jump the
+        virtual clock to the *head's* arrival, billing the gap at idle
+        power (same accounting as a cluster replica waiting on arrivals).
+        The head — not the minimum over the queue — because ``_admit`` is
+        strictly FIFO by submission order: jumping to a later-submitted
+        earlier arrival would leave the head still unadmittable and
+        deadlock the driver."""
+        if not self.pending:
+            return False
+        nxt = self.pending[0].arrival
+        if nxt <= self.vtime + 1e-12:
+            return False
+        self.idle_energy_j += (nxt - self.vtime) * self.plant.idle_power
+        self.vtime = nxt
+        return True
+
+    def step(self, k: Optional[int] = None) -> int:
+        """One scheduling round: admit arrived requests, advance chunked
+        prefills, then decode a block of ``k`` steps (default: the horizon
+        to the next guaranteed join/leave event).  Returns the number of
+        decode steps executed — 0 for admission/chunk/idle-only rounds.
+
+        This is the ``Backend.step`` entry point: the ``serving.api``
+        driver loop calls it with no argument; pass ``k=1`` for
+        single-step-granularity tests."""
         self._admit()
+        progressed = False
         if self.ecfg.slot_native:
-            self._advance_chunks()
+            progressed = self._advance_chunks()
         if not self.active:
+            if progressed or self._advance_idle():
+                return 0
+            if self.prefilling or self.pending:
+                raise RuntimeError(
+                    "serving stalled: pending/prefilling streams cannot "
+                    "obtain pages or slots and nothing is decoding")
             return 0
         if not self.ecfg.slot_native:
-            return self._step_legacy()
-        return self._decode_block(1)
+            self._step_legacy()
+            return 1
+        # clamp to the horizon: _decode_block's batch composition is fixed
+        # for the whole block, so k may never cross a guaranteed leave event
+        horizon = self._horizon()
+        return self._decode_block(max(min(k, horizon) if k is not None
+                                      else horizon, 1))
 
     def _horizon(self) -> int:
         """Steps until the next guaranteed stream leave (no joins possible:
@@ -904,38 +1088,52 @@ class ServingEngine:
         return max(1, min(rem_out, rem_len, self.ecfg.decode_block))
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
+        """Legacy batch driver, kept for one release as a thin shim over
+        the Backend protocol (``serving.api.Server`` is the front door:
+        it streams tokens and supports arrivals/cancellation mid-run).
+        Returns the legacy ``stats()`` dict."""
         steps = 0
-        while (self.pending or self.active or self.prefilling) \
-                and steps < max_steps:
-            self._admit()
-            progressed = False
-            if self.ecfg.slot_native:
-                progressed = self._advance_chunks()
-            if not self.active:
-                if progressed:
-                    steps += 1            # chunk-only rounds still count
-                    continue
-                if self.prefilling or self.pending:
-                    raise RuntimeError(
-                        "serving stalled: pending/prefilling streams cannot "
-                        "obtain pages or slots and nothing is decoding")
-                break
-            if not self.ecfg.slot_native:
-                self._step_legacy()
-                steps += 1
-                continue
-            k = min(self._horizon(), max_steps - steps)
-            self._decode_block(max(k, 1))
-            steps += max(k, 1)
+        while self.has_work() and steps < max_steps:
+            # pass the remaining budget so max_steps stays an exact bound
+            # (step() clamps it to the horizon)
+            steps += max(self.step(max_steps - steps), 1)
+            self._events.clear()     # no consumer in the batch interface
         return self.stats()
 
+    def page_occupancy_peak(self) -> float:
+        """Peak page-pool occupancy over the run (0 when unpaged)."""
+        if self.pager is None:
+            return 0.0
+        live = {sl: st.pos for sl, st in self.active.items()}
+        live.update({sl: cs.start for sl, cs in self.prefilling.items()})
+        return self.pager.occupancy(live)["peak_occupancy"]
+
+    def report(self) -> ServingReport:
+        """Backend protocol: the typed serving report (single scoring
+        definition shared with the cluster and the simulator)."""
+        peak = self.page_occupancy_peak()
+        return build_report(
+            backend="engine", requests=self.requests, tbt_records=self._tbt,
+            slo=self.ecfg.slo, class_names=self.router.class_names,
+            prefill_energy_j=self.prefill_energy_j,
+            decode_energy_j=self.decode_energy_j,
+            idle_energy_j=self.idle_energy_j,
+            prefill_tokens=self.prefill_tokens,
+            decode_tokens=self.decode_tokens,
+            duration_s=self.vtime, preempted=self._preempted,
+            # adopted handoffs only, matching the cluster-level definition
+            # (summing imports counts each migration exactly once)
+            migrated=self._imported,
+            page_occupancy_peak=peak)
+
     def _slo_stats(self) -> Dict:
-        """Per-class p90 TTFT and TTFT/TBT SLO pass rates over finished
-        requests — ``sim.replay.slo_pass_metrics`` is the single scoring
-        definition, so real-engine and simulator replays are directly
-        comparable by construction."""
-        from repro.sim.replay import slo_pass_metrics
-        m = slo_pass_metrics(self._done, self._tbt, self.ecfg.slo,
+        """Per-class p90 TTFT and TTFT/TBT SLO pass rates —
+        ``core.report.slo_pass_metrics`` is the single scoring definition,
+        applied to the same population as ``report()`` (every request with
+        a first token, cancelled included), so the legacy dict and the
+        typed report can never diverge."""
+        from repro.core.report import slo_pass_metrics
+        m = slo_pass_metrics(self.requests, self._tbt, self.ecfg.slo,
                              self.router.class_names)
         return {"ttft_pass": m["ttft_pass"], "tbt_pass": m["tbt_pass"],
                 "p90_ttft_s": m["p90_ttft"]}
@@ -944,11 +1142,15 @@ class ServingEngine:
         tbts = [x for v in self._tbt.values() for x in v]
         s = {
             "completed": self._completed,
+            "cancelled": self._cancelled,
             "pending": len(self.pending),
             "active": len(self.active),
             "prefilling": len(self.prefilling),
             "vtime_s": self.vtime,
-            "energy_j": self.energy_j,
+            # active + idle, matching the cluster's legacy dict (idle is 0
+            # for batch workloads; billed only while waiting on arrivals)
+            "energy_j": self.energy_j + self.idle_energy_j,
+            "idle_energy_j": self.idle_energy_j,
             # per-phase split, comparable with sim.replay.Metrics
             "prefill_energy_j": self.prefill_energy_j,
             "decode_energy_j": self.decode_energy_j,

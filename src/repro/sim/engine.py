@@ -22,7 +22,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import (DualLoopController, LengthRouter, MaxFreqController,
-                        PrefillOptimizer, Request, SLOConfig)
+                        PrefillOptimizer, Request, RequestState, SLOConfig,
+                        ServingReport, StateEvent, TokenEvent, build_report)
 from repro.core.prefill_optimizer import deadline_from_queue
 from .plant import PlantModel
 
@@ -168,6 +169,16 @@ class SimResult:
 
 
 class ServingSimulator:
+    """Discrete-event serving node, steppable one event at a time.
+
+    Conforms to the ``serving.api.Backend`` protocol (``submit`` / ``step``
+    / ``drain_events`` / ``cancel`` / ``report``): requests can arrive, be
+    cancelled, and stream (count-only) token events while the simulation is
+    in flight — the same driver loop serves the simulator and the
+    real-execution engines.  ``run(requests)`` keeps the batch interface
+    used by ``sim.replay.replay``.
+    """
+
     def __init__(self, plant_fn: Callable[[int, int], PlantModel],
                  router: LengthRouter,
                  prefill_optimizers: Optional[Sequence[Optional[PrefillOptimizer]]],
@@ -190,6 +201,11 @@ class ServingSimulator:
                          decode_controller_fn(i), node.max_streams)
             for i in range(node.decode_workers)]
         self.tbt_records: Dict[int, List[float]] = {}
+        self.requests: List[Request] = []
+        self._evq: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._last_time = 0.0
+        self._events: List = []
 
     # -- prefill routing -----------------------------------------------------------
     def _prefill_worker_for(self, cls_idx: int, rid: int) -> PrefillWorker:
@@ -201,89 +217,177 @@ class ServingSimulator:
         cands = self.prefill[base: base + per_class] or self.prefill[-1:]
         return min(cands, key=lambda w: (len(w.queue), w.busy_until))
 
-    # -- main loop --------------------------------------------------------------------
-    def run(self, requests: Sequence[Request]) -> SimResult:
-        evq: List[Tuple[float, int, str, object]] = []
-        seq = 0
+    # -- Backend protocol --------------------------------------------------------
+    def submit(self, req: Request, prompt_tokens=None) -> None:
+        """Queue a request for its arrival time (``prompt_tokens`` is
+        accepted for interface parity and ignored: the simulator models
+        time/energy, not token values)."""
+        req.state = RequestState.QUEUED
+        self.requests.append(req)
+        self._push(req.arrival, "arrival", req)
 
-        def push(t, kind, payload):
-            nonlocal seq
-            heapq.heappush(evq, (t, seq, kind, payload))
-            seq += 1
+    def has_work(self) -> bool:
+        return bool(self._evq)
 
-        for r in requests:
-            push(r.arrival, "arrival", r)
-
-        def start_prefill_if_idle(w: PrefillWorker, now: float):
-            if w.busy_until > now or not w.queue:
-                return
-            w.queue.sort(key=lambda r: r.arrival)
-            req = w.queue.pop(0)
-            w.freq = w.choose_freq(now, req)
-            w.freq_history.append((now, w.freq))
-            dur = w.plant.prefill_latency(req.prompt_len, w.freq)
-            power = w.plant.prefill_power(req.prompt_len, w.freq, dur)
-            w.energy.record_active(now, dur, power)
-            req.prefill_start = now
-            w.busy_until = now + dur
-            push(now + dur, "prefill_done", (w, req))
-
-        def schedule_decode_step(w: DecodeWorker, now: float):
-            if w.stepping:
-                return
-            w.admit()
-            if not w.streams:
-                return
-            w.stepping = True
-            f = w.controller.maybe_tick(now)
-            batch = len(w.streams)
-            avg_ctx = float(np.mean([s.ctx for s in w.streams]))
-            dur = w.plant.decode_step_latency(batch, avg_ctx, f)
-            power = w.plant.decode_power(batch, avg_ctx, f, dur)
-            w.energy.record_active(now, dur, power)
-            push(now + dur, "decode_step_done", (w, dur, batch))
-
-        last_time = 0.0
-        while evq:
-            now, _, kind, payload = heapq.heappop(evq)
-            last_time = max(last_time, now)
-            if kind == "arrival":
-                req: Request = payload
-                cls_idx = self.router.route(req)
-                w = self._prefill_worker_for(cls_idx, req.rid)
-                w.queue.append(req)
-                if w.optimizer is not None:
-                    w.observe_arrival(
-                        now, float(w.optimizer.latency_model.t_ref(req.prompt_len)))
-                start_prefill_if_idle(w, now)
-            elif kind == "prefill_done":
-                w, req = payload
-                dw = min(self.decode, key=lambda d: d.load)
-                dw.pending.append(req)
-                start_prefill_if_idle(w, now)
-                schedule_decode_step(dw, now)
-            elif kind == "decode_step_done":
-                w, dur, batch = payload
-                w.stepping = False
-                done: List[DecodeStream] = []
-                for s in w.streams:
-                    s.req.tokens_emitted += 1
-                    s.ctx += 1
-                    if s.req.first_token < 0:
-                        s.req.first_token = now
-                    self.tbt_records.setdefault(s.req.rid, []).append(dur)
-                    if s.req.tokens_emitted >= s.req.output_len:
-                        s.req.finish = now
-                        done.append(s)
-                for s in done:
-                    w.streams.remove(s)
-                w.controller.record_tokens(now, batch, dur)
-                schedule_decode_step(w, now)
-
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request anywhere short of completion: drop it from
+        prefill queues / decode pending / live decode batches.  A prefill
+        already in flight runs to completion (its energy is spent) but the
+        stream is dropped at ``prefill_done``."""
+        for req in self.requests:
+            if req.rid == rid:
+                break
+        else:
+            return False
+        if req.state.terminal:
+            return False
+        req.state = RequestState.CANCELLED
         for w in self.prefill:
-            w.energy.finalize(last_time)
+            if req in w.queue:
+                w.queue.remove(req)
+        for d in self.decode:
+            if req in d.pending:
+                d.pending.remove(req)
+            for s in list(d.streams):
+                if s.req is req:
+                    d.streams.remove(s)
+        self._events.append(StateEvent(rid, self._last_time,
+                                       RequestState.CANCELLED))
+        return True
+
+    def drain_events(self) -> List:
+        ev, self._events = self._events, []
+        return ev
+
+    def step(self) -> bool:
+        """Process one discrete event; False when the queue is empty."""
+        if not self._evq:
+            return False
+        now, _, kind, payload = heapq.heappop(self._evq)
+        self._last_time = max(self._last_time, now)
+        if kind == "arrival":
+            self._on_arrival(now, payload)
+        elif kind == "prefill_done":
+            self._on_prefill_done(now, *payload)
+        elif kind == "decode_step_done":
+            self._on_decode_step_done(now, *payload)
+        return True
+
+    def report(self) -> ServingReport:
+        """Typed report over everything simulated so far.  Worker energy
+        meters fold idle into the pool totals (``EnergyMeter``), so the
+        phase fields match ``compute_metrics`` and ``idle_energy_j`` is 0.
+        """
+        self._finalize_energy()
+        return build_report(
+            backend="simulator", requests=self.requests,
+            tbt_records=self.tbt_records, slo=self.slo,
+            class_names=self.router.class_names,
+            prefill_energy_j=sum(w.energy.total_j for w in self.prefill),
+            decode_energy_j=sum(w.energy.total_j for w in self.decode),
+            idle_energy_j=0.0,
+            prefill_tokens=sum(r.prompt_len for r in self.requests
+                               if r.prefill_start >= 0),
+            decode_tokens=sum(r.tokens_emitted for r in self.requests),
+            duration_s=self._last_time)
+
+    # -- event plumbing -----------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._evq, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _start_prefill_if_idle(self, w: PrefillWorker, now: float) -> None:
+        if w.busy_until > now or not w.queue:
+            return
+        w.queue.sort(key=lambda r: r.arrival)
+        req = w.queue.pop(0)
+        w.freq = w.choose_freq(now, req)
+        w.freq_history.append((now, w.freq))
+        dur = w.plant.prefill_latency(req.prompt_len, w.freq)
+        power = w.plant.prefill_power(req.prompt_len, w.freq, dur)
+        w.energy.record_active(now, dur, power)
+        req.prefill_start = now
+        req.state = RequestState.PREFILLING
+        self._events.append(StateEvent(req.rid, now,
+                                       RequestState.PREFILLING))
+        w.busy_until = now + dur
+        self._push(now + dur, "prefill_done", (w, req))
+
+    def _schedule_decode_step(self, w: DecodeWorker, now: float) -> None:
+        if w.stepping:
+            return
+        w.admit()
+        if not w.streams:
+            return
+        w.stepping = True
+        f = w.controller.maybe_tick(now)
+        batch = len(w.streams)
+        avg_ctx = float(np.mean([s.ctx for s in w.streams]))
+        dur = w.plant.decode_step_latency(batch, avg_ctx, f)
+        power = w.plant.decode_power(batch, avg_ctx, f, dur)
+        w.energy.record_active(now, dur, power)
+        self._push(now + dur, "decode_step_done", (w, dur, batch))
+
+    # -- event handlers -----------------------------------------------------------
+    def _on_arrival(self, now: float, req: Request) -> None:
+        if req.state.terminal:          # cancelled before arrival
+            return
+        cls_idx = self.router.route(req)
+        w = self._prefill_worker_for(cls_idx, req.rid)
+        w.queue.append(req)
+        if w.optimizer is not None:
+            w.observe_arrival(
+                now, float(w.optimizer.latency_model.t_ref(req.prompt_len)))
+        self._start_prefill_if_idle(w, now)
+
+    def _on_prefill_done(self, now: float, w: PrefillWorker,
+                         req: Request) -> None:
+        if not req.state.terminal:      # cancelled mid-prefill: drop stream
+            req.state = RequestState.DECODING
+            self._events.append(StateEvent(req.rid, now,
+                                           RequestState.DECODING))
+            dw = min(self.decode, key=lambda d: d.load)
+            dw.pending.append(req)
+            self._schedule_decode_step(dw, now)
+        self._start_prefill_if_idle(w, now)
+
+    def _on_decode_step_done(self, now: float, w: DecodeWorker, dur: float,
+                             batch: int) -> None:
+        w.stepping = False
+        done: List[DecodeStream] = []
+        for s in w.streams:
+            s.req.tokens_emitted += 1
+            s.ctx += 1
+            if s.req.first_token < 0:
+                s.req.first_token = now
+            self.tbt_records.setdefault(s.req.rid, []).append(dur)
+            self._events.append(TokenEvent(s.req.rid, now, (), 1))
+            if s.req.tokens_emitted >= s.req.output_len:
+                s.req.finish = now
+                s.req.state = RequestState.FINISHED
+                self._events.append(StateEvent(s.req.rid, now,
+                                               RequestState.FINISHED))
+                done.append(s)
+        for s in done:
+            w.streams.remove(s)
+        w.controller.record_tokens(now, batch, dur)
+        self._schedule_decode_step(w, now)
+
+    def _finalize_energy(self) -> None:
+        # EnergyMeter.finalize is monotone in the horizon, so calling it at
+        # every report() only extends idle up to the latest event time
+        for w in self.prefill:
+            w.energy.finalize(self._last_time)
         for w in self.decode:
-            w.energy.finalize(last_time)
+            w.energy.finalize(self._last_time)
+
+    # -- batch interface (sim.replay) ---------------------------------------------
+    def run(self, requests: Sequence[Request]) -> SimResult:
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            self._events.clear()     # no consumer in the batch interface
+        self._finalize_energy()
         freq_traces = {}
         for w in self.decode:
             if hasattr(w.controller, "history"):
@@ -294,7 +398,7 @@ class ServingSimulator:
             requests=list(requests),
             prefill_energy_j=sum(w.energy.total_j for w in self.prefill),
             decode_energy_j=sum(w.energy.total_j for w in self.decode),
-            duration=last_time,
+            duration=self._last_time,
             tbt_records=self.tbt_records,
             freq_traces=freq_traces,
         )

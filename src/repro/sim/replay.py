@@ -6,11 +6,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
 from repro.core import (DualLoopController, DecodeControllerConfig,
                         MaxFreqController, FixedFreqController,
                         PrefillOptimizer, Request, SLOConfig, make_router)
+# single scoring definition, shared with the serving backends' report();
+# re-exported here because it historically lived in this module
+from repro.core.report import slo_pass_metrics  # noqa: F401
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
 from repro.models import ModelConfig
 from .engine import NodeConfig, ServingSimulator, SimResult
@@ -94,39 +95,6 @@ class Metrics:
     throughput_tok_s: float
 
 
-def slo_pass_metrics(requests: List[Request], tbt_records: Dict[int, list],
-                     slo: SLOConfig,
-                     class_names=("SM", "L")) -> Dict:
-    """SLO scoring shared by the simulator, the real-execution engine, and
-    the cluster (single definition = the parity guarantee): TTFT pass rate
-    over requests that produced a first token, per-request p95-TBT pass
-    rate, per-class p90 TTFT, and aggregate p95/p99 TBT (seconds)."""
-    done = [r for r in requests if r.first_token >= 0]
-    ttft_ok = sum(1 for r in done if r.ttft <= slo.ttft_target(r.cls))
-    tbt_ok, total = 0, 0
-    all_tbt: List[float] = []
-    for r in done:
-        tbts = tbt_records.get(r.rid, [])
-        if not tbts:
-            continue
-        total += 1
-        all_tbt.extend(tbts)
-        if float(np.percentile(tbts, 95)) <= slo.tbt_target:
-            tbt_ok += 1
-    p90 = {}
-    for cls in class_names:
-        v = [r.ttft for r in done if r.cls == cls]
-        if v:
-            p90[cls] = float(np.percentile(v, 90))
-    return {
-        "ttft_pass": ttft_ok / max(len(done), 1),
-        "tbt_pass": tbt_ok / max(total, 1),
-        "p90_ttft": p90,
-        "p95_tbt": float(np.percentile(all_tbt, 95)) if all_tbt else 0.0,
-        "p99_tbt": float(np.percentile(all_tbt, 99)) if all_tbt else 0.0,
-    }
-
-
 def compute_metrics(res: SimResult, slo: SLOConfig) -> Metrics:
     m = slo_pass_metrics(res.requests, res.tbt_records, slo)
     tokens = sum(r.tokens_emitted for r in res.requests)
@@ -151,23 +119,6 @@ def replay(cfg: ModelConfig, trace: List[Request], rc: ReplayConfig,
     res = sim.run([copy.copy(r) for r in trace])
     return compute_metrics(res, rc.slo)
 
-
-def metrics_from_cluster(stats: Dict) -> Metrics:
-    """Adapt ``serving.ServingCluster.stats()`` to the paper's ``Metrics``
-    row, so real-execution cluster replays print alongside the simulator
-    governors column-for-column.  Cluster total energy includes idle up to
-    the shared makespan (matching the simulator's ``EnergyMeter.finalize``).
-    """
-    tokens = stats["prefill_tokens"] + stats["decode_tokens"]
-    return Metrics(
-        ttft_pass=stats["ttft_pass"],
-        tbt_pass=stats["tbt_pass"],
-        prefill_energy_j=stats["prefill_energy_j"],
-        decode_energy_j=stats["decode_energy_j"],
-        total_energy_j=stats["energy_j"],
-        p90_ttft=dict(stats["p90_ttft_s"]),
-        p95_tbt=stats["p95_tbt_ms"] / 1e3,
-        p99_tbt=stats["p99_tbt_ms"] / 1e3,
-        n_requests=stats["n_requests"],
-        throughput_tok_s=tokens / max(stats["makespan_s"], 1e-9),
-    )
+# ``metrics_from_cluster`` is gone: every backend (engine, cluster,
+# simulator) now returns the same typed ``core.ServingReport`` from
+# ``report()``, so there is no per-caller stats-dict to adapt.

@@ -1,0 +1,448 @@
+"""Request-lifecycle serving API tests: the ``serving.api.Server`` front
+door (submit -> stream -> cancel) over all three backends, cancellation
+resource accounting, and typed-report parity.
+
+* Cancellation: cancelling a queued / mid-chunked-prefill / mid-decode
+  stream returns its slot and page chain to baseline, never perturbs the
+  surviving streams' tokens (greedy f32: decode rows are independent), and
+  is recorded in ``ServingReport``.
+* Report parity: the ``ServingReport`` from engine, cluster and simulator
+  runs of the same trace agrees field-for-field with the paper's
+  ``sim.replay.compute_metrics`` scoring (one definition:
+  ``core.report.slo_pass_metrics``) — replacing the old ad-hoc dict-key
+  assertions.
+* Online scenario (impossible before this API): requests arriving over
+  virtual time, tokens streamed incrementally at block granularity, a
+  mid-flight cancellation, and per-request SLO attainment in the report.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Request, RequestState, SamplingParams
+from repro.core.hardware import A100_SXM4_40G
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+from repro.serving import (Backend, EngineConfig, Server, ServingCluster,
+                           ServingEngine)
+from repro.sim import (ReplayConfig, ServingSimulator, build_simulator,
+                       compute_metrics)
+
+KEY = jax.random.PRNGKey(0)
+MAXLEN = 96
+
+
+def _cfg(**kw) -> ModelConfig:
+    base = dict(name="ta", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                vocab_size=128, dtype="float32", max_seq=512)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, init_params(KEY, cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("cache_dtype", "float32")
+    kw.setdefault("governor", "defaultnv")
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", MAXLEN)
+    kw.setdefault("paged", True)
+    return ServingEngine(cfg, params=params, ecfg=EngineConfig(**kw))
+
+
+def _reference_tokens(params, cfg, prompt, output_len):
+    caches = init_cache(cfg, 1, MAXLEN, dtype=jnp.float32)
+    lg, caches, pos = prefill(params, cfg,
+                              jnp.asarray(prompt, jnp.int32)[None], caches)
+    toks = [int(jnp.argmax(lg[0]))]
+    while len(toks) < max(output_len, 2) and pos < MAXLEN - 1:
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 caches, jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
+def _pool_at_baseline(eng):
+    assert eng.pager.pages_used == 0
+    assert sorted(eng.free_slots) == list(range(eng.ecfg.max_batch))
+    assert not eng.active and not eng.prefilling
+
+
+# -- Backend protocol conformance ---------------------------------------------
+
+def test_all_backends_satisfy_the_protocol(model):
+    cfg, params = model
+    assert isinstance(_engine(cfg, params), Backend)
+    assert isinstance(ServingCluster(cfg, n_prefill=1, n_decode=1,
+                                     params=params,
+                                     ecfg=EngineConfig(max_batch=2,
+                                                       max_len=MAXLEN)),
+                      Backend)
+    sim = build_simulator(_cfg(), A100_SXM4_40G,
+                          ReplayConfig(governor="defaultnv"))
+    assert isinstance(sim, ServingSimulator) and isinstance(sim, Backend)
+
+
+# -- cancellation --------------------------------------------------------------
+
+def test_cancel_queued_request_is_released_and_reported(model):
+    cfg, params = model
+    eng = _engine(cfg, params)
+    srv = Server(eng)
+    rng = np.random.default_rng(0)
+    h0 = srv.submit(rng.integers(0, cfg.vocab_size, size=12),
+                    SamplingParams(max_tokens=6))
+    h1 = srv.submit(rng.integers(0, cfg.vocab_size, size=12),
+                    SamplingParams(max_tokens=6))
+    assert h1.state == RequestState.QUEUED    # nothing stepped yet
+    assert h1.cancel() and not h1.cancel()    # second cancel is a no-op
+    rep = srv.run()
+    _pool_at_baseline(eng)
+    assert rep.completed == 1 and rep.cancelled == 1
+    assert h0.state == RequestState.FINISHED
+    rows = {r.rid: r for r in rep.requests}
+    assert rows[h1.rid].state == RequestState.CANCELLED
+    assert rows[h1.rid].tokens_out == 0
+
+
+def test_cancel_mid_chunked_prefill_frees_slot_and_chain():
+    # sliding-window config: the bucket cap is the window (16), so a
+    # 37-token prompt admits through chunked prefill and is still
+    # mid-chunk after one scheduling round
+    cfg = _cfg(name="ta-local", block_pattern=("local", "full"), window=16)
+    params = init_params(KEY, cfg)
+    eng = _engine(cfg, params)
+    srv = Server(eng)
+    rng = np.random.default_rng(1)
+    h = srv.submit(rng.integers(0, cfg.vocab_size, size=37),
+                   SamplingParams(max_tokens=6))
+    eng.step(1)
+    assert h.state == RequestState.PREFILLING
+    assert eng.pager.pages_used > 0
+    assert h.cancel()
+    _pool_at_baseline(eng)
+    rep = srv.run()
+    assert rep.cancelled == 1 and rep.completed == 0
+    assert not eng.has_work()
+
+
+def test_cancel_mid_decode_frees_pool_and_pool_is_reusable(model):
+    cfg, params = model
+    eng = _engine(cfg, params)
+    srv = Server(eng)
+    rng = np.random.default_rng(2)
+    h = srv.submit(rng.integers(0, cfg.vocab_size, size=20),
+                   SamplingParams(max_tokens=40))
+    for _ in range(3):
+        eng.step(1)
+    assert h.state == RequestState.DECODING and eng.pager.pages_used > 0
+    got_before = h.request.tokens_emitted
+    assert h.cancel()
+    _pool_at_baseline(eng)
+    # tokens produced before the cancel stay readable on the handle
+    assert list(h.tokens()) == h.request.tokens
+    assert h.request.tokens_emitted == got_before
+    # the freed slot/pages serve a new request to completion
+    prompt = rng.integers(0, cfg.vocab_size, size=9)
+    h2 = srv.submit(prompt, SamplingParams(max_tokens=8))
+    rep = srv.run()
+    assert h2.request.tokens == _reference_tokens(params, cfg, prompt, 8)
+    assert rep.completed == 1 and rep.cancelled == 1
+    _pool_at_baseline(eng)
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_cancel_never_perturbs_surviving_streams(model, paged):
+    """Token equivalence: survivors of a mid-decode cancellation emit
+    exactly the tokens of a run without the cancelled stream (and of the
+    single-stream reference)."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    p_keep = rng.integers(0, cfg.vocab_size, size=19)
+    p_cancel = rng.integers(0, cfg.vocab_size, size=8)
+
+    eng = _engine(cfg, params, paged=paged)
+    srv = Server(eng)
+    h_keep = srv.submit(p_keep, SamplingParams(max_tokens=14))
+    h_cancel = srv.submit(p_cancel, SamplingParams(max_tokens=14))
+    for _ in range(4):
+        eng.step(1)
+    assert h_cancel.cancel()
+    srv.run()
+    assert h_keep.request.tokens == _reference_tokens(params, cfg, p_keep,
+                                                      14)
+    # control: the same request served with no co-resident stream at all
+    solo = Server(_engine(cfg, params, paged=paged))
+    hs = solo.submit(p_keep, SamplingParams(max_tokens=14))
+    solo.run()
+    assert hs.request.tokens == h_keep.request.tokens
+
+
+def test_cluster_cancel_before_arrival_and_in_flight(model):
+    cfg, params = model
+    cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
+                        ecfg=EngineConfig(max_batch=4, max_len=MAXLEN,
+                                          cache_dtype="float32",
+                                          governor="defaultnv"))
+    srv = Server(cl)
+    rng = np.random.default_rng(4)
+    hs = [srv.submit(rng.integers(0, cfg.vocab_size, size=10),
+                     SamplingParams(max_tokens=6), arrival=0.01 * i)
+          for i in range(4)]
+    assert hs[3].cancel()         # still in the future-arrival heap
+    rep = srv.run()
+    assert rep.completed == 3 and rep.cancelled == 1
+    assert hs[3].request.tokens_emitted == 0
+
+
+# -- report parity -------------------------------------------------------------
+
+def _burst(cfg, n=5, seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 30))),
+             int(rng.integers(4, 10))) for _ in range(n)]
+
+
+def test_report_parity_engine_vs_colocated_cluster(model):
+    """The same burst through the single engine and a 1-replica colocated
+    cluster yields the same typed report (identical plant seed): token
+    counts and SLO fields exactly, energies to float tolerance."""
+    cfg, params = model
+    from repro.sim import PlantModel
+    burst = _burst(cfg)
+
+    eng = ServingEngine(cfg, params=params,
+                        ecfg=EngineConfig(max_batch=4, max_len=MAXLEN,
+                                          paged=True, cache_dtype="float32",
+                                          governor="defaultnv"),
+                        plant=PlantModel(cfg=cfg, hw=A100_SXM4_40G,
+                                         n_chips=1, seed=100))
+    cl = ServingCluster(cfg, n_prefill=0, n_decode=0, n_colocated=1,
+                        params=params,
+                        ecfg=EngineConfig(max_batch=4, max_len=MAXLEN,
+                                          cache_dtype="float32",
+                                          governor="defaultnv"))
+    reps = []
+    for backend in (eng, cl):
+        srv = Server(backend)
+        for prompt, out in burst:
+            srv.submit(prompt, SamplingParams(max_tokens=out))
+        reps.append(srv.run())
+    a, b = reps
+    assert a.backend == "engine" and b.backend == "cluster"
+    for field in ("n_requests", "completed", "cancelled", "preempted",
+                  "prefill_tokens", "decode_tokens", "ttft_pass",
+                  "tbt_pass"):
+        assert getattr(a, field) == getattr(b, field), field
+    assert a.prefill_energy_j == pytest.approx(b.prefill_energy_j)
+    assert a.decode_energy_j == pytest.approx(b.decode_energy_j)
+    assert a.duration_s == pytest.approx(b.duration_s)
+    assert a.p95_tbt_s == pytest.approx(b.p95_tbt_s)
+    ra = sorted(a.requests, key=lambda r: r.rid)
+    rb = sorted(b.requests, key=lambda r: r.rid)
+    for x, y in zip(ra, rb):
+        assert (x.state, x.tokens_out, x.ttft_ok, x.tbt_ok) == \
+            (y.state, y.tokens_out, y.ttft_ok, y.tbt_ok)
+
+
+def test_report_parity_simulator_vs_compute_metrics():
+    """The simulator's ``report()`` agrees field-for-field with the paper's
+    ``compute_metrics`` over the identical run (same plant seeds)."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b")
+    rc = ReplayConfig(governor="greenllm")
+    rng = np.random.default_rng(11)
+    trace = [Request(rid=i, arrival=0.2 * i,
+                     prompt_len=int(rng.integers(64, 2000)),
+                     output_len=int(rng.integers(8, 40)))
+             for i in range(12)]
+
+    res = build_simulator(cfg, A100_SXM4_40G, rc).run(
+        [copy.copy(r) for r in trace])
+    m = compute_metrics(res, rc.slo)
+
+    sim = build_simulator(cfg, A100_SXM4_40G, rc)
+    srv = Server(sim)
+    for r in trace:
+        srv.submit(r.prompt_len, SamplingParams(max_tokens=r.output_len),
+                   arrival=r.arrival, rid=r.rid)
+    rep = srv.run()
+
+    assert rep.backend == "simulator"
+    assert rep.n_requests == m.n_requests
+    assert rep.ttft_pass == pytest.approx(m.ttft_pass)
+    assert rep.tbt_pass == pytest.approx(m.tbt_pass)
+    assert dict(rep.p90_ttft_s) == pytest.approx(m.p90_ttft)
+    assert rep.p95_tbt_s == pytest.approx(m.p95_tbt)
+    assert rep.p99_tbt_s == pytest.approx(m.p99_tbt)
+    assert rep.prefill_energy_j == pytest.approx(m.prefill_energy_j)
+    assert rep.decode_energy_j == pytest.approx(m.decode_energy_j)
+    assert rep.total_energy_j == pytest.approx(m.total_energy_j)
+    assert rep.throughput_tok_s == pytest.approx(m.throughput_tok_s)
+
+
+# -- the online scenario (the acceptance demo) ---------------------------------
+
+def test_online_arrivals_streaming_and_mid_flight_cancel(model):
+    """Requests arrive over virtual time, tokens stream incrementally (at
+    block granularity), one stream is cancelled mid-flight, and the report
+    carries per-request SLO attainment — none of which the old
+    pre-submit-everything ``run_until_drained`` interface could express."""
+    cfg, params = model
+    # small decode blocks: tokens stream in bursts of <= 4, so the stream
+    # is observably incremental (with the default 64 the whole answer can
+    # land in one block)
+    eng = _engine(cfg, params, decode_block=4)
+    srv = Server(eng)
+    rng = np.random.default_rng(5)
+    h0 = srv.submit(rng.integers(0, cfg.vocab_size, size=24),
+                    SamplingParams(max_tokens=24))
+    h1 = srv.submit(rng.integers(0, cfg.vocab_size, size=10),
+                    SamplingParams(max_tokens=48), arrival=0.002)
+    h2 = srv.submit(rng.integers(0, cfg.vocab_size, size=16),
+                    SamplingParams(max_tokens=12), arrival=4.0,
+                    deadline=30.0)
+
+    streamed = []
+    it = h0.tokens()
+    for tok in it:
+        streamed.append(tok)
+        if len(streamed) == 5:
+            break
+    # h0 still live; h1 has been admitted behind it on the same clock
+    assert not h0.done
+    assert h1.state in (RequestState.QUEUED, RequestState.DECODING)
+    assert h1.cancel()            # mid-flight cancellation
+    streamed.extend(it)           # drain the rest of h0's stream
+    assert streamed == h0.request.tokens and len(streamed) == 24
+
+    rep = srv.run()
+    assert h2.state == RequestState.FINISHED   # arrived at t=4.0, served
+    assert rep.completed == 2 and rep.cancelled == 1
+    assert rep.idle_energy_j > 0.0             # waited for h2's arrival
+    rows = {r.rid: r for r in rep.requests}
+    assert rows[h2.rid].ttft >= 0.0            # never served before arrival
+    assert rows[h2.rid].deadline_ok is True
+    assert rows[h0.rid].deadline_ok is None    # no deadline given
+    assert rows[h1.rid].state == RequestState.CANCELLED
+    for r in (h0, h2):
+        assert rows[r.rid].ttft_ok in (True, False)
+        assert rows[r.rid].tbt_ok in (True, False)
+    _pool_at_baseline(eng)
+
+
+def test_drain_events_block_granularity_and_ordering(model):
+    """The observability surface for external consumers: tokens arrive as
+    one TokenEvent per stream per decode block (never per token), event
+    counts reconstruct the full output, FINISHED comes strictly after the
+    stream's final tokens, and a cancel emits a CANCELLED StateEvent."""
+    from repro.core import StateEvent, TokenEvent
+    cfg, params = model
+    eng = _engine(cfg, params)
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=10, output_len=9))
+    eng.submit(Request(rid=1, arrival=0.0, prompt_len=6, output_len=30))
+    events = []
+    for _ in range(3):      # single steps: rid 1 must still be decoding
+        eng.step(1)
+        events.extend(eng.drain_events())
+    assert eng.drain_events() == []         # drained on read
+    assert eng.cancel(1)
+    events.extend(eng.drain_events())
+    while eng.has_work():
+        eng.step()          # horizon-sized blocks from here on
+        events.extend(eng.drain_events())
+
+    tok = [e for e in events if isinstance(e, TokenEvent) and e.rid == 0]
+    # events reconstruct the output exactly, in strictly fewer events than
+    # tokens (block granularity: the tail arrives as multi-token blocks)
+    assert sum(e.n for e in tok) == 9 and len(tok) < 9
+    assert [t for e in tok for t in e.tokens] == eng.requests[0].tokens
+    fin = [i for i, e in enumerate(events)
+           if isinstance(e, StateEvent) and e.rid == 0
+           and e.state is RequestState.FINISHED]
+    last_tok = max(i for i, e in enumerate(events)
+                   if isinstance(e, TokenEvent) and e.rid == 0)
+    assert len(fin) == 1 and fin[0] > last_tok
+    assert any(isinstance(e, StateEvent) and e.rid == 1
+               and e.state is RequestState.CANCELLED for e in events)
+    states = [e.state for e in events
+              if isinstance(e, StateEvent) and e.rid == 0]
+    assert states[0] is RequestState.DECODING
+    assert states[-1] is RequestState.FINISHED
+
+
+def test_engine_serves_out_of_order_arrivals_without_stalling(model):
+    """The engine backend is FIFO by submission order; a later-submitted
+    request with an *earlier* arrival must not deadlock the idle jump
+    (regression: _advance_idle once targeted min(arrivals) while _admit
+    gates on the head, tripping the stall detector)."""
+    cfg, params = model
+    srv = Server(_engine(cfg, params))
+    rng = np.random.default_rng(6)
+    h0 = srv.submit(rng.integers(0, cfg.vocab_size, size=8),
+                    SamplingParams(max_tokens=4), arrival=10.0)
+    h1 = srv.submit(rng.integers(0, cfg.vocab_size, size=8),
+                    SamplingParams(max_tokens=4), arrival=5.0)
+    rep = srv.run()
+    assert rep.completed == 2 and rep.idle_energy_j > 0
+    rows = {r.rid: r for r in rep.requests}
+    for h in (h0, h1):      # served at/after its own arrival, never before
+        assert rows[h.rid].ttft >= 0.0
+
+
+# -- config / params validation ------------------------------------------------
+
+def test_engine_config_rejects_impossible_combinations():
+    with pytest.raises(ValueError, match="divisible by"):
+        EngineConfig(max_len=100, paged=True, page_size=16)
+    with pytest.raises(ValueError, match="scratch"):
+        EngineConfig(max_len=128, paged=True, page_size=16, num_pages=1)
+    # undersized pools (< one page per slot) stay legal: pool pressure is
+    # handled by preemption + recompute-on-resume, not rejection
+    EngineConfig(max_batch=8, max_len=128, paged=True, page_size=16,
+                 num_pages=4)
+    with pytest.raises(ValueError, match="min_bucket"):
+        EngineConfig(max_len=16, min_bucket=16)
+    with pytest.raises(ValueError, match="slot_native"):
+        EngineConfig(paged=True, slot_native=False)
+    with pytest.raises(ValueError, match="temperature"):
+        EngineConfig(greedy=False, temperature=0.0)
+    with pytest.raises(ValueError, match="max_batch"):
+        EngineConfig(max_batch=0)
+    with pytest.raises(ValueError, match="decode_block"):
+        EngineConfig(decode_block=0)
+
+
+def test_engine_rejects_min_bucket_above_attention_buffer(model):
+    cfg = _cfg(name="ta-local-mb", block_pattern=("local", "full"),
+               window=16)
+    params = init_params(KEY, cfg)
+    with pytest.raises(ValueError, match="attention buffer"):
+        ServingEngine(cfg, params=params,
+                      ecfg=EngineConfig(max_len=MAXLEN, min_bucket=32))
+
+
+def test_sampling_params_validation(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="max_tokens"):
+        SamplingParams(max_tokens=0)
+    srv = Server(_engine(cfg, params))     # greedy engine (temp 0)
+    with pytest.raises(ValueError, match="temperature"):
+        srv.submit(np.arange(4), SamplingParams(max_tokens=4,
+                                                temperature=0.7))
+    # matching / inherited temperatures are accepted
+    srv.submit(np.arange(4) % cfg.vocab_size,
+               SamplingParams(max_tokens=4, temperature=0.0))
+    srv.submit(np.arange(4) % cfg.vocab_size, SamplingParams(max_tokens=4))
+    rep = srv.run()
+    assert rep.completed == 2

@@ -62,7 +62,8 @@ def _reference_tokens(params, cfg, prompt, output_len):
 def _ecfg(**kw):
     kw.setdefault("cache_dtype", "float32")
     kw.setdefault("governor", "defaultnv")
-    return EngineConfig(max_batch=4, max_len=MAXLEN, paged=True, **kw)
+    kw.setdefault("max_batch", 4)
+    return EngineConfig(max_len=MAXLEN, paged=True, **kw)
 
 
 def _engine(cfg, params, **kw):
@@ -110,7 +111,7 @@ def test_handoff_mid_decode_is_token_exact():
     for r, p in zip(reqs, prompts):
         A.submit(r, p)
     for _ in range(4):
-        A.step()
+        A.step(1)
     slot = next(s for s, st in A.active.items() if st.req.rid == 0)
     assert B.import_stream(A.export_stream(slot))
     A.run_until_drained()
@@ -242,13 +243,15 @@ def test_cluster_slo_metrics_report_per_class():
     assert 0.0 <= st["ttft_pass"] <= 1.0 and 0.0 <= st["tbt_pass"] <= 1.0
     assert "SM" in st["p90_ttft_s"]          # all mini-trace prompts short
     assert all(r.cls == "SM" for r in reqs)
-    # adapter to the paper's Metrics row (sim/replay parity)
-    from repro.sim import metrics_from_cluster
-    m = metrics_from_cluster(st)
-    assert m.n_requests == len(reqs)
-    assert m.total_energy_j == pytest.approx(st["energy_j"])
-    assert m.p99_tbt >= m.p95_tbt >= 0.0
-    assert m.throughput_tok_s > 0
+    # the typed report is the source of truth; the legacy stats() dict is
+    # derived from it, so the two views must agree field-for-field
+    rep = cl.report()
+    assert rep.backend == "cluster" and rep.n_requests == len(reqs)
+    assert rep.total_energy_j == pytest.approx(st["energy_j"])
+    assert rep.p99_tbt_s >= rep.p95_tbt_s >= 0.0
+    assert rep.throughput_tok_s > 0
+    assert len(rep.requests) == len(reqs)
+    assert all(rr.ttft_ok in (True, False) for rr in rep.requests)
 
 
 def test_dispatcher_prefers_shortest_expected_busy_time():

@@ -135,7 +135,7 @@ def test_chunked_prefill_hybrid_recurrent_state_survives_interleaving(variant):
     eng = _engine(cfg, params)
     r_short = Request(rid=0, arrival=0.0, prompt_len=9, output_len=12)
     eng.submit(r_short, p_short)
-    eng.step()                       # short stream decodes alone first
+    eng.step(1)                       # short stream decodes alone first
     r_long = Request(rid=1, arrival=0.0, prompt_len=37, output_len=8)
     eng.submit(r_long, p_long)       # chunks interleave with short's decode
     eng.run_until_drained()
@@ -197,7 +197,7 @@ def test_paged_capacity_exceeds_dense_envelope():
             for i in range(4)]
     for r, p in zip(reqs, prompts):
         eng.submit(r, p)
-    eng.step()
+    eng.step(1)
     s = eng.stats()
     pool_tokens = s["pages_total"] * ps
     dense_streams_at_equal_memory = pool_tokens // MAXLEN

@@ -71,7 +71,7 @@ def test_slot_path_matches_reference_mixed_positions(variant):
     eng = _engine(cfg, params)
     eng.submit(r0, p0)
     for _ in range(5):        # r0 decodes alone; r1 joins at a later position
-        eng.step()
+        eng.step(1)
     eng.submit(r1, p1)
     eng.run_until_drained()
 
@@ -94,7 +94,7 @@ def test_windowed_prompt_falls_back_to_reference_admission():
     eng = _engine(cfg, params, chunked_prefill=False)
     assert eng.buckets[-1] == 16
     eng.submit(r0, p0)
-    eng.step()
+    eng.step(1)
     eng.submit(r1, p1)
     eng.run_until_drained()
     assert r0.tokens == _reference_tokens(params, cfg, p0, r0.output_len)
@@ -150,7 +150,7 @@ def test_stats_counts_finished_not_started():
     eng = _engine(cfg, params)
     for i in range(3):
         eng.submit(Request(rid=i, arrival=0.0, prompt_len=8, output_len=20))
-    eng.step()                       # everyone admitted, nobody finished
+    eng.step(1)                       # everyone admitted, nobody finished
     s = eng.stats()
     assert s["completed"] == 0
     assert s["active"] == 3
