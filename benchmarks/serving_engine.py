@@ -12,6 +12,10 @@ Metrics per (governor, batch):
   eager prefill + fresh per-request cache + host-side full-batch splice.
 * ``serve``   — sustained serving tokens/s with continuous batching churn
   (finite outputs, streams join/leave): the end-to-end engine number.
+* ``serve ... mixed_sampling`` — the same churn with heterogeneous
+  per-request sampling (greedy / temperature / top-k / top-p rows sharing
+  each batch through the per-slot sampling lanes): overhead vs the
+  all-greedy serve number, and the CI smoke that the mixed path drains.
 
 Paged scenarios (``--paged``):
 
@@ -179,6 +183,37 @@ def bench_paged_capacity(cfg, params, *, governor, nreq, out_len):
     return peak, dense_eq, rep.decode_tokens / dt
 
 
+def bench_mixed_sampling(cfg, params, *, batch, governor, nreq, out_len):
+    """Sustained serving of a heterogeneous sampling mix (greedy /
+    temperature / top-k / top-p rows sharing each batch) through the
+    ``serving.api`` front door — the scenario the engine-global-temperature
+    design rejected outright.  Returns (tok/s, greedy-fraction-served)."""
+    from repro.core import SamplingParams
+    from repro.serving import Server
+    eng = _engine(cfg, params, batch=batch, governor=governor,
+                  slot_native=True)
+    srv = Server(eng)
+    rng = np.random.default_rng(0)
+    mixes = [SamplingParams(max_tokens=out_len),
+             SamplingParams(max_tokens=out_len, temperature=0.9, seed=1),
+             SamplingParams(max_tokens=out_len, temperature=0.7, top_k=40,
+                            seed=2),
+             SamplingParams(max_tokens=out_len, temperature=1.1, top_p=0.9,
+                            seed=3)]
+    hs = []
+    for i in range(nreq):
+        hs.append(srv.submit(
+            rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 100))),
+            mixes[i % len(mixes)]))
+    t0 = time.perf_counter()
+    rep = srv.run()
+    jax.block_until_ready(eng._tok)
+    dt = time.perf_counter() - t0
+    assert rep.completed == nreq, "mixed-sampling smoke must drain"
+    greedy = sum(1 for i in range(nreq) if i % len(mixes) == 0)
+    return nreq * out_len / dt, greedy / nreq
+
+
 def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
     """Disaggregated 1 prefill + 1 decode cluster (GreenLLM per-phase DVFS)
     vs an equal-replica-count colocated max-frequency baseline on the same
@@ -262,6 +297,11 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                      f"{legacy:.0f}tok/s"))
         rows.append((f"engine_serve_b{b}_{gov}_slot", 1e6 / slot,
                      f"{slot:.0f}tok/s;speedup={slot / legacy:.1f}x"))
+        mixed, gfrac = warm2(bench_mixed_sampling, cfg, params, batch=b,
+                             governor=gov, nreq=nreq, out_len=32)
+        rows.append((f"engine_serve_b{b}_{gov}_mixed_sampling", 1e6 / mixed,
+                     f"{mixed:.0f}tok/s;vs_greedy={mixed / slot:.2f}x;"
+                     f"greedy_frac={gfrac:.2f}"))
         if paged:
             rows.extend(_paged_rows(cfg, params, gov=gov, b=b, steps=steps,
                                     nreq=nreq, n_admit=n_admit, warm2=warm2,

@@ -34,13 +34,23 @@ class RequestState(str, enum.Enum):
 class SamplingParams:
     """Per-request sampling surface of ``serving.api.Server.submit``.
 
-    ``temperature=None`` inherits the backend's configured sampling mode.
-    The real-execution engines fuse sampling into jitted kernels with the
-    temperature static, so a non-None temperature must match the backend's
-    (``Server.submit`` validates and raises instead of silently resampling).
+    Sampling is a *per-slot vectorized* property of the real-execution
+    engines' jitted decode path: requests with different temperatures,
+    top-k and top-p settings share one batch (the per-row lanes live in
+    device vectors, never as static jit arguments).  ``temperature=None``
+    inherits the backend's configured default
+    (``EngineConfig.greedy``/``temperature``); ``temperature=0`` is greedy
+    argmax.  ``top_k=0`` and ``top_p=1.0`` disable the respective filter.
+    ``seed`` pins the request's PRNG lane — a seeded sampled stream draws
+    the same tokens across runs, migrations and preempt/recompute resumes
+    (see ``serving.engine``: draw ``i`` uses ``fold_in(lane, position_i)``,
+    so the lane itself never advances).
     """
     max_tokens: int = 64           # output length cap (the request's budget)
     temperature: Optional[float] = None   # None -> backend default; 0 -> greedy
+    top_k: int = 0                 # keep the k highest logits (0: disabled)
+    top_p: float = 1.0             # nucleus mass to keep (1.0: disabled)
+    seed: Optional[int] = None     # PRNG lane seed (None: derived from rid)
 
     def __post_init__(self):
         if self.max_tokens < 1:
@@ -48,6 +58,11 @@ class SamplingParams:
         if self.temperature is not None and self.temperature < 0.0:
             raise ValueError(
                 f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
 
 
 @dataclasses.dataclass
@@ -69,6 +84,14 @@ class Request:
     # from __eq__: ndarray comparison would make Request equality raise.
     prompt: Optional[object] = dataclasses.field(default=None, compare=False)
     tokens: List[int] = dataclasses.field(default_factory=list, compare=False)
+    # per-request sampling config (None: backend default) and the request's
+    # PRNG *base* lane (np.ndarray uint32, set once at first admission and
+    # never advanced — draw i folds the token position into it), which must
+    # survive preemption/recompute and ride migrations.
+    sampling: Optional[SamplingParams] = dataclasses.field(
+        default=None, compare=False)
+    rng_lane: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def done(self) -> bool:

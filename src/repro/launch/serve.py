@@ -7,6 +7,10 @@ trace, and print the shared typed ``ServingReport``.
   PYTHONPATH=src python -m repro.launch.serve --governor defaultnv --paged
   PYTHONPATH=src python -m repro.launch.serve --cluster --trace azure_code8
   PYTHONPATH=src python -m repro.launch.serve --no-chunked --requests 8
+  # heterogeneous batches: every second request samples at --temperature
+  # (with optional --top-k / --top-p / --seed), the rest stay greedy
+  PYTHONPATH=src python -m repro.launch.serve --mixed-sampling \
+      --temperature 0.8 --top-k 40
 """
 import argparse
 
@@ -26,6 +30,18 @@ def build_backend(args, full, smoke):
         return ServingCluster(smoke, n_prefill=1, n_decode=1,
                               plant_cfg=full, ecfg=ecfg)
     return ServingEngine(smoke, plant_cfg=full, ecfg=ecfg)
+
+
+def sampling_for(args, i: int, max_tokens: int) -> SamplingParams:
+    """Per-request sampling: greedy by default; ``--temperature`` samples
+    every request, and ``--mixed-sampling`` restores greedy on the even
+    ones (a multi-tenant-style heterogeneous batch)."""
+    if args.temperature <= 0.0 or (args.mixed_sampling and i % 2 == 0):
+        return SamplingParams(max_tokens=max_tokens)
+    return SamplingParams(max_tokens=max_tokens,
+                          temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p,
+                          seed=None if args.seed < 0 else args.seed + i)
 
 
 def workload(args, vocab):
@@ -63,6 +79,19 @@ def main(argv=None):
     ap.add_argument("--cluster", action="store_true",
                     help="disaggregated 1-prefill + 1-decode cluster with "
                          "paged-KV handoff instead of one colocated engine")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for submitted requests "
+                         "(0: greedy; per-request, not engine-global)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k filter (0: disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus mass (1.0: disabled)")
+    ap.add_argument("--seed", type=int, default=-1,
+                    help="base sampling seed; request i uses seed+i "
+                         "(-1: unseeded lanes)")
+    ap.add_argument("--mixed-sampling", action="store_true",
+                    help="alternate greedy and sampled requests in one "
+                         "batch (multi-tenant mix; needs --temperature)")
     ap.add_argument("--trace", default="synthetic",
                     help="synthetic | chat_5qps | azure_code8 | azure_conv5 "
                          "| ... (data.traces names; arrivals replayed on "
@@ -76,7 +105,7 @@ def main(argv=None):
     server = Server(build_backend(args, full, smoke))
     n = 0
     for arrival, prompt, max_tokens in workload(args, smoke.vocab_size):
-        server.submit(prompt, SamplingParams(max_tokens=max_tokens),
+        server.submit(prompt, sampling_for(args, n, max_tokens),
                       arrival=arrival)
         n += 1
     rep = server.run()

@@ -2,12 +2,14 @@ from .config import ModelConfig, FULL_ATTN, LOCAL_ATTN, SSM, RGLRU
 from .transformer import (
     ShardCtx, NOSHARD, init_params, param_specs, init_cache,
     forward_train, loss_fn, prefill, prefill_into_slot,
-    prefill_chunk_into_slot, decode_step, sample_tokens, stages_of,
+    prefill_chunk_into_slot, decode_step, sample_tokens,
+    sample_tokens_batched, stages_of,
 )
 
 __all__ = [
     "ModelConfig", "FULL_ATTN", "LOCAL_ATTN", "SSM", "RGLRU",
     "ShardCtx", "NOSHARD", "init_params", "param_specs", "init_cache",
     "forward_train", "loss_fn", "prefill", "prefill_into_slot",
-    "prefill_chunk_into_slot", "decode_step", "sample_tokens", "stages_of",
+    "prefill_chunk_into_slot", "decode_step", "sample_tokens",
+    "sample_tokens_batched", "stages_of",
 ]

@@ -699,13 +699,67 @@ def sample_tokens(logits, temperature: float = 0.0, key=None):
 
     ``temperature <= 0`` (or no key) is greedy argmax; otherwise categorical
     sampling at the given temperature.  Kept inside the jitted serving step so
-    the steady-state decode loop never ships logits to the host.
+    the steady-state decode loop never ships logits to the host.  The scalar
+    (batch-global) legacy surface — the serving engines sample per slot via
+    ``sample_tokens_batched``.
     """
     if temperature > 0.0 and key is not None:
         return jax.random.categorical(
             key, logits.astype(jnp.float32) / temperature, axis=-1
         ).astype(jnp.int32)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens_batched(logits, temps, top_k, top_p, keys):
+    """Per-row vectorized sampling: (B, vocab) logits -> (B,) int32 tokens.
+
+    Each batch row carries its own sampling lane, so heterogeneous requests
+    (greedy code completion next to creative-writing nucleus sampling) share
+    one jitted decode step with no static sampling arguments:
+
+    * ``temps`` (B,) float: ``0`` rows are greedy argmax — bit-identical to
+      ``jnp.argmax`` — all other rows sample at their own temperature.
+    * ``top_k`` (B,) int: keep only the k highest logits per row (``<= 0``
+      or ``>= vocab`` disables the filter for that row).
+    * ``top_p`` (B,) float: nucleus filtering — keep the smallest prefix of
+      the (top-k-filtered, temperature-scaled) distribution whose
+      cumulative probability reaches ``top_p`` (``>= 1.0`` disables; the
+      disabled filters leave the logits untouched, so ``top_k=vocab,
+      top_p=1.0`` reduces *exactly* to plain temperature sampling).
+    * ``keys`` (B, 2) uint32: one PRNG key per row, consumed whole for this
+      draw — callers derive one subkey per draw (the serving engine folds
+      the token's sequence position into the stream's base lane), keeping
+      rows independent: row i's draw never reads row j's key or logits.
+
+    Fully on-device (one sort per draw, no host syncs), safe under
+    ``lax.scan``.
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    temps = jnp.asarray(temps, jnp.float32)
+    safe_t = jnp.where(temps > 0.0, temps, 1.0)
+    scaled = lg / safe_t[:, None]
+    # rank rows once (descending); both filters are masks in sorted space
+    order = jnp.argsort(scaled, axis=-1)[:, ::-1]
+    s = jnp.take_along_axis(scaled, order, axis=-1)
+    ranks = jnp.arange(V, dtype=jnp.int32)[None, :]
+    k = jnp.asarray(top_k, jnp.int32)
+    k_eff = jnp.where((k <= 0) | (k >= V), V, k)
+    keep = ranks < k_eff[:, None]
+    # nucleus mass over the top-k survivors; cum_prev is the mass *before*
+    # each token, so rank 0 is always kept (the filter can never mask the
+    # entire row) and exactly the smallest covering prefix survives
+    probs = jax.nn.softmax(jnp.where(keep, s, -jnp.inf), axis=-1)
+    cum_prev = jnp.cumsum(probs, axis=-1) - probs
+    p = jnp.asarray(top_p, jnp.float32)
+    keep &= (cum_prev < p[:, None]) | (p[:, None] >= 1.0)
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep, inv, axis=-1)
+    filtered = jnp.where(keep, scaled, -jnp.inf)
+    draw = jax.vmap(
+        lambda kk, row: jax.random.categorical(kk, row))(keys, filtered)
+    return jnp.where(temps > 0.0, draw.astype(jnp.int32), greedy_tok)
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos,

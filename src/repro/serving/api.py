@@ -128,12 +128,25 @@ class RequestHandle:
 
 
 class Server:
-    """The serving front door: submit → stream → cancel over any backend."""
+    """The serving front door: submit → stream → cancel over any backend.
 
-    def __init__(self, backend: Backend):
+    ``on_event`` (optional) is the push-side observability hook: every
+    buffered ``TokenEvent`` / ``StateEvent`` the backend produces is handed
+    to the callback, in order, each time the driver loop drains — i.e. at
+    the backend's natural cadence (decode blocks for the real engines),
+    never per token.  When no callback is installed the Server tells the
+    backend to skip event buffering entirely (``backend.events_on``), so
+    nobody pays for an observability surface nobody reads; handles keep
+    streaming through their request token lists either way.
+    """
+
+    def __init__(self, backend: Backend, on_event=None):
         self.backend = backend
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
+        self._on_event = on_event
+        if hasattr(backend, "events_on"):
+            backend.events_on = on_event is not None
 
     # -- intake ----------------------------------------------------------------
     def submit(self, prompt, params: Optional[SamplingParams] = None, *,
@@ -146,12 +159,13 @@ class Server:
         simulator).  ``arrival`` is the request's arrival time on the
         backend's virtual clock — backends never start work before it.
         ``deadline`` (absolute, optional) is carried into the per-request
-        report rows.  Sampling temperature is engine-global (static in the
-        jitted kernels), so a non-None ``params.temperature`` must match
-        the backend's configured sampling mode.
+        report rows.  Sampling is fully per-request: ``params`` carries
+        temperature / top-k / top-p / seed and rides the ``Request`` into
+        the backend, whose jitted decode path keeps one sampling lane per
+        batch slot — requests with different sampling configs share a
+        batch (``temperature=None`` inherits the backend default).
         """
         params = params if params is not None else SamplingParams()
-        self._check_sampling(params)
         if isinstance(prompt, (int, np.integer)):
             prompt_len, prompt_tokens = int(prompt), None
         else:
@@ -163,37 +177,32 @@ class Server:
             raise ValueError(f"duplicate rid {rid}")
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid=rid, arrival=arrival, prompt_len=prompt_len,
-                      output_len=params.max_tokens, deadline=deadline)
+                      output_len=params.max_tokens, deadline=deadline,
+                      sampling=params)
         self.backend.submit(req, prompt_tokens)
         handle = RequestHandle(self, req)
         self._handles[rid] = handle
         return handle
 
-    def _check_sampling(self, params: SamplingParams) -> None:
-        ecfg = getattr(self.backend, "ecfg", None)
-        if params.temperature is None or ecfg is None:
-            return      # inherit backend default / simulator (time-only)
-        backend_temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
-        if abs(params.temperature - backend_temp) > 1e-9:
-            raise ValueError(
-                f"SamplingParams.temperature={params.temperature} does not "
-                f"match the backend's configured temperature {backend_temp} "
-                "(sampling is fused into jitted kernels with a static "
-                "temperature; configure it via EngineConfig)")
-
     # -- driving ----------------------------------------------------------------
     def _pump(self) -> bool:
         """Advance the backend one unit of work.  False when the backend is
         drained.  Handles observe progress directly through their request
-        objects (token list + state), so the buffered stream events only
-        need draining — kept for external ``drain_events`` consumers, and
-        cleared here so nothing accumulates."""
+        objects (token list + state); the buffered stream events are
+        delivered to the ``on_event`` callback when one is installed and
+        discarded otherwise (with no callback the backend skips buffering
+        entirely — see ``__init__``)."""
         if not self.backend.has_work():
-            self.backend.drain_events()
+            self._deliver(self.backend.drain_events())
             return False
         self.backend.step()
-        self.backend.drain_events()
+        self._deliver(self.backend.drain_events())
         return True
+
+    def _deliver(self, events) -> None:
+        if self._on_event is not None:
+            for ev in events:
+                self._on_event(ev)
 
     def run(self, max_rounds: int = 1_000_000) -> ServingReport:
         """The one driver loop: serve until the backend drains, then return

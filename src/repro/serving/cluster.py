@@ -258,6 +258,19 @@ class ServingCluster:
         self._stalled_rounds = 0
         self._events: List = []      # cluster-level events (future cancels)
 
+    @property
+    def events_on(self) -> bool:
+        """Event buffering switch (Backend observability surface): setting
+        it False tells every replica engine to skip buffering too — the
+        ``serving.api.Server`` clears it unless an ``on_event`` callback is
+        installed."""
+        return all(r.engine.events_on for r in self.replicas)
+
+    @events_on.setter
+    def events_on(self, value: bool) -> None:
+        for r in self.replicas:
+            r.engine.events_on = bool(value)
+
     # -- intake ----------------------------------------------------------------
     def submit(self, req: Request,
                prompt_tokens: Optional[np.ndarray] = None) -> None:
@@ -288,7 +301,7 @@ class ServingCluster:
         for t, seq, req, ptoks in self._future:
             if req.rid == rid and not req.state.terminal:
                 req.state = RequestState.CANCELLED
-                self._events.append(StateEvent(
+                self._emit(StateEvent(
                     rid, max((r.vtime for r in self.replicas), default=0.0),
                     RequestState.CANCELLED))
                 return True      # lazily skipped at injection
@@ -299,10 +312,14 @@ class ServingCluster:
                 if ho.req.rid == rid:
                     r.import_q.remove(ho)
                     ho.req.state = RequestState.CANCELLED
-                    self._events.append(StateEvent(
+                    self._emit(StateEvent(
                         rid, r.vtime, RequestState.CANCELLED))
                     return True
         return False
+
+    def _emit(self, ev) -> None:
+        if self.events_on:
+            self._events.append(ev)
 
     def drain_events(self) -> List:
         """Backend protocol: merge every replica's buffered stream events

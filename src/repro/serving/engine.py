@@ -17,11 +17,17 @@ Data-plane design (the hot path):
   attends to *its own* context (not the batch-wide ``max(pos)``), inactive
   rows hold position, and the donated caches update in place instead of being
   copied twice per token.
-* **On-device sampling** — greedy/temperature sampling is fused into the
-  jitted step; the sampled token feeds back as a device array, so the
-  steady-state loop (``run_until_drained``) dispatches blocks of steps with
-  **no per-token host transfer**: the per-slot token ids are drained once per
-  block, sized to the next stream join/leave event.
+* **On-device per-slot sampling** — sampling is a per-slot vectorized
+  property of the jitted step: each batch row carries its own temperature /
+  top-k / top-p lane plus a PRNG *base* key in device vectors
+  (``sample_tokens_batched``), so heterogeneous requests (greedy code
+  completion next to nucleus-sampled creative writing) share one batch with
+  no static sampling arguments and **no per-token host transfer**: the
+  per-slot token ids are drained once per block, sized to the next stream
+  join/leave event.  Draw subkeys fold the token's sequence position into
+  the row's base lane — the lane itself never advances, so a stream's i-th
+  draw is a pure function of ``(lane, position)`` and seeded streams replay
+  identical tokens across runs, migrations, and recompute-on-resume.
 * **Paged KV cache** (``EngineConfig.paged=True``) — full-length attention
   buffers become a shared pool of fixed-size pages (``serving.pager``);
   streams hold page chains that grow at decode-block boundaries, so capacity
@@ -68,12 +74,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DualLoopController, MaxFreqController, Request,
-                        RequestState, ServingReport, SLOConfig, StateEvent,
-                        TokenEvent, build_report, make_router)
+                        RequestState, SamplingParams, ServingReport,
+                        SLOConfig, StateEvent, TokenEvent, build_report,
+                        make_router)
 from repro.core.telemetry import OccupancyMeter
 from repro.models import (ModelConfig, init_cache, init_params, prefill,
                           prefill_into_slot, prefill_chunk_into_slot,
-                          decode_step, sample_tokens)
+                          decode_step, sample_tokens_batched)
 from repro.models.config import FULL_ATTN, LOCAL_ATTN
 from repro.models.kvcache import (attn_buffer_len, is_paged,
                                   paged_chain_extract, paged_chain_insert,
@@ -127,64 +134,83 @@ def _unslice_caches(caches, sliced, ctx: int, max_len: int):
     return out
 
 
+def _row_subkeys(keys, positions):
+    """One draw subkey per batch row: fold each token's sequence position
+    into the row's PRNG *base* lane.  Lanes never advance — draw i is a pure
+    function of (lane, position i) — which is exactly what makes seeded
+    streams replay identical tokens across migration and recompute-on-resume
+    (the lane and the position both travel with the stream)."""
+    return jax.vmap(jax.random.fold_in)(
+        keys, jnp.asarray(positions, jnp.int32))
+
+
+def _sample_rows(sampled, logits, pos_next, keys, temps, topk, topp):
+    """Shared sampling tail of the decode/prefill kernels: per-row
+    temperature/top-k/top-p lanes when ``sampled`` (a host-known static:
+    does any live row sample?), plain argmax otherwise — all-greedy blocks
+    never pay for the sampler's sort."""
+    if sampled:
+        return sample_tokens_batched(logits, temps, topk, topp,
+                                     _row_subkeys(keys, pos_next))
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
                    donate_argnums=(7,))
-def _decode_block_kernel(cfg, temp, ctx, k, max_len,
-                         params, tok, caches, pos, active, key):
+def _decode_block_kernel(cfg, ctx, k, max_len, sampled,
+                         params, tok, caches, pos, active, keys, temps,
+                         topk, topp):
     """k fused decode steps (lax.scan) over caches sliced to ``ctx`` positions.
 
-    One compile per (cfg, ctx_bucket, k_block).  While every active position
-    stays < ctx, the sliced cache behaves exactly like a max_len==ctx cache
-    (slot == position, nothing masked away), so the block is equivalent to k
-    single full-cache steps; the donated full caches are updated in place via
-    a slice-in/slice-out pair amortized over the k steps.
+    One compile per (cfg, ctx_bucket, k_block, sampled).  While every active
+    position stays < ctx, the sliced cache behaves exactly like a
+    max_len==ctx cache (slot == position, nothing masked away), so the block
+    is equivalent to k single full-cache steps; the donated full caches are
+    updated in place via a slice-in/slice-out pair amortized over the k
+    steps.  The sampled token at row r lands at position ``pos[r] + 1``, so
+    its subkey is ``fold_in(keys[r], pos[r] + 1)`` — no key state threads
+    through the scan.
     """
     sliced = _slice_caches(caches, ctx, max_len)
 
     def body(carry, _):
-        tok, sl, pos, key = carry
-        sub = None
-        if temp > 0.0:
-            key, sub = jax.random.split(key)
+        tok, sl, pos = carry
         logits, sl = decode_step(params, cfg, tok[:, None], sl, pos,
                                  active=active)
-        nxt = sample_tokens(logits, temp, sub)
+        nxt = _sample_rows(sampled, logits, pos + 1, keys, temps, topk, topp)
         tok = jnp.where(active, nxt, tok)
         pos = pos + active.astype(jnp.int32)
-        return (tok, sl, pos, key), tok
+        return (tok, sl, pos), tok
 
-    (tok, sliced, pos, key), toks = jax.lax.scan(
-        body, (tok, sliced, pos, key), None, length=k)
+    (tok, sliced, pos), toks = jax.lax.scan(
+        body, (tok, sliced, pos), None, length=k)
     caches = _unslice_caches(caches, sliced, ctx, max_len)
-    return tok, caches, pos, key, toks
+    return tok, caches, pos, toks
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(5,))
-def _paged_decode_block_kernel(cfg, temp, k, params, tok, caches, pt, pos,
-                               active, key):
+def _paged_decode_block_kernel(cfg, k, sampled, params, tok, caches, pt, pos,
+                               active, keys, temps, topk, topp):
     """k fused decode steps against paged K/V pools.
 
     Context bucketing rides on the *shape* of ``pt`` (the page table sliced to
     the pages covering the current ctx bucket): one compile per (cfg,
-    n_ctx_pages, k_block).  The caller guarantees every active chain covers
-    ``pos + k`` before dispatch, so the in-scan writes never leave the table
-    slice; retired rows' table entries point at the scratch page.
+    n_ctx_pages, k_block, sampled).  The caller guarantees every active chain
+    covers ``pos + k`` before dispatch, so the in-scan writes never leave the
+    table slice; retired rows' table entries point at the scratch page.
     """
     def body(carry, _):
-        tok, cs, pos, key = carry
-        sub = None
-        if temp > 0.0:
-            key, sub = jax.random.split(key)
+        tok, cs, pos = carry
         logits, cs = decode_step(params, cfg, tok[:, None], cs, pos,
                                  page_table=pt, active=active)
-        nxt = sample_tokens(logits, temp, sub)
+        nxt = _sample_rows(sampled, logits, pos + 1, keys, temps, topk, topp)
         tok = jnp.where(active, nxt, tok)
         pos = pos + active.astype(jnp.int32)
-        return (tok, cs, pos, key), tok
+        return (tok, cs, pos), tok
 
-    (tok, caches, pos, key), toks = jax.lax.scan(
-        body, (tok, caches, pos, key), None, length=k)
-    return tok, caches, pos, key, toks
+    (tok, caches, pos), toks = jax.lax.scan(
+        body, (tok, caches, pos), None, length=k)
+    return tok, caches, pos, toks
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -192,52 +218,68 @@ def _decode_legacy_kernel(cfg, params, tok, caches, pos):
     return decode_step(params, cfg, tok, caches, pos)
 
 
+def _slot_row(v, slot):
+    """(1, ...) slice of per-slot sampling state at a traced slot index."""
+    return jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(5,))
-def _prefill_kernel(cfg, temp, params, toks, length, caches, slot, pt_row,
-                    tok, pos, key):
-    """Bucketed slot prefill + first-token sampling (one compile per bucket
-    size, carried by the static shape of ``toks``).  ``pt_row`` is the
-    stream's (1, n_pages) page-table row for paged caches, or None."""
-    sub = None
-    if temp > 0.0:
-        key, sub = jax.random.split(key)
+def _prefill_kernel(cfg, sampled, params, toks, length, caches, slot, pt_row,
+                    tok, pos, keys, temps, topk, topp):
+    """Bucketed slot prefill + first-token sampling (one compile per
+    (bucket size, sampled), the former carried by the static shape of
+    ``toks``).  ``pt_row`` is the stream's (1, n_pages) page-table row for
+    paged caches, or None.  The first token lands at position ``length``,
+    so its draw subkey is ``fold_in(keys[slot], length)``."""
     logits, caches, _ = prefill_into_slot(params, cfg, toks, length, caches,
                                           slot, page_table=pt_row)
-    ptok = sample_tokens(logits, temp, sub)[0]
+    L = jnp.asarray(length, jnp.int32)
+    ptok = _sample_rows(sampled, logits, L[None], _slot_row(keys, slot),
+                        _slot_row(temps, slot), _slot_row(topk, slot),
+                        _slot_row(topp, slot))[0]
     tok = tok.at[slot].set(ptok)
     pos = pos.at[slot].set(length)
-    return tok, caches, pos, key
+    return tok, caches, pos
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(6,))
-def _chunk_prefill_kernel(cfg, temp, params, toks, start, length, caches,
-                          slot, pt_row, tok, pos, key):
+def _chunk_prefill_kernel(cfg, sampled, params, toks, start, length, caches,
+                          slot, pt_row, tok, pos, keys, temps, topk, topp):
     """One chunk of a chunked prefill + (provisional) next-token sampling.
 
-    Compile count is |chunk buckets| x |ctx buckets| (the latter via the
-    static shape of ``pt_row`` for paged caches; dense rows are read at their
-    full static buffer length).  Every chunk samples into ``tok[slot]`` —
-    cheap, and only the final chunk's sample survives to seed decoding —
-    and advances ``pos[slot]`` to ``start + length`` so occupancy tracking
-    sees partially-prefilled streams.
+    Compile count is |chunk buckets| x |ctx buckets| x sampled (the ctx
+    buckets via the static shape of ``pt_row`` for paged caches; dense rows
+    are read at their full static buffer length).  Every chunk samples into
+    ``tok[slot]`` — cheap, and only the final chunk's sample survives to
+    seed decoding — and advances ``pos[slot]`` to ``start + length`` so
+    occupancy tracking sees partially-prefilled streams.  The final chunk's
+    draw position ``start + length`` equals the total prompt length, i.e.
+    exactly ``_prefill_kernel``'s subkey for the same prompt; intermediate
+    chunks' provisional draws are discarded and touch no lane state, so a
+    recompute-on-resume replay (which discards even the final draw in favor
+    of ``resume_tok``) cannot perturb the stream's draw sequence.
     """
-    sub = None
-    if temp > 0.0:
-        key, sub = jax.random.split(key)
     logits, caches = prefill_chunk_into_slot(params, cfg, toks, start, length,
                                              caches, slot, page_table=pt_row)
-    ptok = sample_tokens(logits, temp, sub)[0]
+    end = jnp.asarray(start, jnp.int32) + jnp.asarray(length, jnp.int32)
+    ptok = _sample_rows(sampled, logits, end[None], _slot_row(keys, slot),
+                        _slot_row(temps, slot), _slot_row(topk, slot),
+                        _slot_row(topp, slot))[0]
     tok = tok.at[slot].set(ptok)
     pos = pos.at[slot].set(start + length)
-    return tok, caches, pos, key
+    return tok, caches, pos
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8
     max_len: int = 256
-    greedy: bool = True             # False -> temperature sampling
-    temperature: float = 1.0        # used only when greedy=False
+    # DEPRECATED as engine-global sampling switches: sampling is per-request
+    # (core.SamplingParams carries temperature/top_k/top_p/seed per slot).
+    # These two remain only as the *defaults* for requests that leave
+    # SamplingParams.temperature at None; remove after one release.
+    greedy: bool = True             # default mode: False -> temperature
+    temperature: float = 1.0        # default temp when greedy=False
     governor: str = "greenllm"      # greenllm | defaultnv
     use_wall_clock: bool = False    # account measured latency per decode block
     slot_native: bool = True        # False -> legacy data plane (benchmarks)
@@ -314,11 +356,13 @@ class StreamHandoff:
     ``("pages", extracted_chain_dict | None)`` for paged attention pools
     (only the live chain's pages — O(context) data, never a full-length
     buffer) or ``("row", row_dict)`` for bounded dense buffers (sliding-
-    window rings) and recurrent SSM/RG-LRU states.  Together with ``pos``
-    and ``last_token`` this is the *complete* decodable state of the stream:
-    import followed by decode is token-for-token identical to never having
-    migrated (greedy sampling; temperature sampling draws from the adopting
-    engine's key stream).
+    window rings) and recurrent SSM/RG-LRU states.  Together with ``pos``,
+    ``last_token``, the sampling params and the PRNG lane this is the
+    *complete* decodable state of the stream: import followed by decode is
+    token-for-token identical to never having migrated — including sampled
+    streams, because ``rng_lane`` (the never-advancing base key; draw i
+    folds in token position i) travels with the stream and the adopter
+    continues the same draw sequence.
     """
     req: Request
     pos: int
@@ -328,6 +372,8 @@ class StreamHandoff:
     export_time: float              # exporter's vtime at extraction
     page_size: int = 0              # 0 when the exporter is unpaged
     cfg_name: str = ""              # guard against cross-model migration
+    sampling: Optional[SamplingParams] = None   # per-request sampling config
+    rng_lane: Optional[object] = None  # (2,) uint32 base lane (np.ndarray)
 
 
 class _Stream:
@@ -428,14 +474,29 @@ class ServingEngine:
         #                      exports are counted by the cluster's Replica
         self.requests: List[Request] = []  # everything this engine has seen
         self._events: List = []     # buffered stream events (drain_events)
+        # False -> skip event buffering entirely (serving.api.Server clears
+        # this unless an on_event callback is installed)
+        self.events_on = True
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
         self._pos = jnp.zeros((B,), jnp.int32)
         self._active_host = np.zeros(B, bool)
         self._active = jnp.asarray(self._active_host)
-        self._key = jax.random.PRNGKey(seed + 1)
-        self._temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
+        # per-slot sampling lanes: temperature / top-k / top-p vectors plus
+        # each row's PRNG *base* key.  Draw subkeys fold the token position
+        # into the base lane (see _row_subkeys), so lanes never advance —
+        # a stream's i-th draw is a pure function of (lane, position), which
+        # is what makes migration and recompute-on-resume replay identical
+        # draws.  Rows are written at slot assignment (admission / chunked
+        # start / import), read only inside the jitted kernels.
+        self._temps = jnp.zeros((B,), jnp.float32)
+        self._topk = jnp.zeros((B,), jnp.int32)
+        self._topp = jnp.ones((B,), jnp.float32)
+        self._keys = jnp.zeros((B, 2), jnp.uint32)
+        self._sampled_host = np.zeros(B, bool)  # host mirror of temps > 0
+        self._base_key = jax.random.PRNGKey(seed + 1)  # unseeded-lane source
+        self._default_temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
 
         # prefill buckets: powers of two, capped by the smallest attention
         # buffer (window / long-context ring) — longer prompts take the
@@ -492,6 +553,14 @@ class ServingEngine:
 
     # -- request intake --------------------------------------------------------
     def submit(self, req: Request, prompt_tokens: Optional[np.ndarray] = None):
+        if not self.ecfg.slot_native and self._resolve_sampling(req)[0] > 0.0:
+            # the legacy data plane decodes host-side argmax only; silently
+            # dropping a request's sampling params would be worse than the
+            # old engine-global temperature mismatch error
+            raise ValueError(
+                "per-request sampling (temperature > 0) requires the "
+                "slot-native data plane; the legacy slot_native=False "
+                "baseline decodes greedily")
         if not req.cls:      # a cluster dispatcher may have classified already
             req.cls = self.router.class_names[
                 self.router.classify(req.prompt_len)]
@@ -503,6 +572,54 @@ class ServingEngine:
         req.state = RequestState.QUEUED
         self.pending.append(req)
         self.requests.append(req)
+
+    # -- per-slot sampling lanes ------------------------------------------------
+    def _emit(self, ev) -> None:
+        """Buffer a stream event for ``drain_events`` consumers — skipped
+        entirely when nobody listens (``events_on`` False)."""
+        if self.events_on:
+            self._events.append(ev)
+
+    def _resolve_sampling(self, req: Request):
+        """(temperature, top_k, top_p) for a request: explicit
+        ``SamplingParams`` fields override the engine-wide defaults
+        (``EngineConfig.greedy`` / ``temperature``, kept as deprecation
+        shims for requests that leave ``temperature`` at None)."""
+        sp = req.sampling
+        if sp is None:
+            return self._default_temp, 0, 1.0
+        temp = self._default_temp if sp.temperature is None \
+            else float(sp.temperature)
+        return temp, int(sp.top_k), float(sp.top_p)
+
+    def _lane_for(self, req: Request) -> np.ndarray:
+        """The request's PRNG base lane, created on *first* admission
+        (seeded requests: ``PRNGKey(seed)``; unseeded: the engine key folded
+        with the rid) and pinned on the request so preemption/recompute and
+        migration reuse the same draw stream instead of resampling."""
+        if req.rng_lane is None:
+            sp = req.sampling
+            if sp is not None and sp.seed is not None:
+                lane = jax.random.PRNGKey(sp.seed)
+            else:
+                lane = jax.random.fold_in(self._base_key, req.rid)
+            req.rng_lane = np.asarray(lane, np.uint32)
+        return req.rng_lane
+
+    def _set_slot_sampling(self, slot: int, req: Request):
+        """Write a stream's sampling lane into row ``slot`` of the device
+        vectors (admission-time host work, amortized like the prompt copy —
+        the decode loop itself never touches these from the host).  Returns
+        the resolved (temperature, top_k, top_p) for callers that also
+        sample host-side."""
+        temp, top_k, top_p = self._resolve_sampling(req)
+        self._temps = self._temps.at[slot].set(temp)
+        self._topk = self._topk.at[slot].set(top_k)
+        self._topp = self._topp.at[slot].set(top_p)
+        self._keys = self._keys.at[slot].set(
+            jnp.asarray(self._lane_for(req), jnp.uint32))
+        self._sampled_host[slot] = temp > 0.0
+        return temp, top_k, top_p
 
     def _account_prefill_tokens(self, n_tokens: int, first: bool,
                                 req: Request):
@@ -529,10 +646,9 @@ class ServingEngine:
         if not resumed:
             req.tokens.append(tok)
             req.tokens_emitted = 1
-            self._events.append(TokenEvent(req.rid, self.vtime, (tok,), 1))
+            self._emit(TokenEvent(req.rid, self.vtime, (tok,), 1))
         req.state = RequestState.DECODING
-        self._events.append(StateEvent(req.rid, self.vtime,
-                                       RequestState.DECODING))
+        self._emit(StateEvent(req.rid, self.vtime, RequestState.DECODING))
         self.active[slot] = st
         self._active_host[slot] = True
         self._active = jnp.asarray(self._active_host)
@@ -556,11 +672,13 @@ class ServingEngine:
             ok = self.pager.ensure(slot, L)      # gated by _admit
             assert ok, "admission gate let an unallocatable prompt through"
             pt_row = self._pt_rows(slot, bucket)
-        self._tok, self.caches, self._pos, self._key = _prefill_kernel(
-            self.cfg, self._temp,
+        self._set_slot_sampling(slot, req)
+        self._tok, self.caches, self._pos = _prefill_kernel(
+            self.cfg, bool(self._sampled_host[slot]),
             self.params, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
             self.caches, jnp.asarray(slot, jnp.int32), pt_row,
-            self._tok, self._pos, self._key)
+            self._tok, self._pos, self._keys, self._temps, self._topk,
+            self._topp)
         self._account_prefill(req)
         # one tiny host read per admission (the first sampled token id)
         self._start_stream(req, slot, int(self._tok[slot]), L)
@@ -578,10 +696,13 @@ class ServingEngine:
         self.caches = jax.tree.map(
             lambda full, one: full.at[:, slot:slot + 1].set(one)
             if full.ndim >= 2 else full, self.caches, caches)
-        sub = None
-        if self._temp > 0.0:
-            self._key, sub = jax.random.split(self._key)
-        tok = int(sample_tokens(logits, self._temp, sub)[0])
+        temp, top_k, top_p = self._set_slot_sampling(slot, req)
+        sub = jax.random.fold_in(
+            jnp.asarray(self._lane_for(req), jnp.uint32), len(req.prompt))
+        tok = int(sample_tokens_batched(
+            logits, jnp.asarray([temp], jnp.float32),
+            jnp.asarray([top_k], jnp.int32),
+            jnp.asarray([top_p], jnp.float32), sub[None])[0])
         self._tok = self._tok.at[slot].set(tok)
         self._pos = self._pos.at[slot].set(len(req.prompt))
         self._account_prefill(req)
@@ -616,12 +737,12 @@ class ServingEngine:
         """Admit via chunked prefill: the stream owns ``slot`` now but joins
         the decode batch only after its last chunk (``_advance_chunks``)."""
         self._order += 1
+        self._set_slot_sampling(slot, req)
         self.prefilling[slot] = _ChunkState(
             req, slot, np.asarray(ctx_toks, np.int32),
             resume_tok=req.tokens[-1] if resume else None, order=self._order)
         req.state = RequestState.PREFILLING
-        self._events.append(StateEvent(req.rid, self.vtime,
-                                       RequestState.PREFILLING))
+        self._emit(StateEvent(req.rid, self.vtime, RequestState.PREFILLING))
 
     def _advance_chunks(self) -> bool:
         """Process one chunk for every mid-prefill stream (called once per
@@ -645,13 +766,15 @@ class ServingEngine:
             pt_row = None
             if self.pager is not None:
                 pt_row = self._pt_rows(slot, cs.start + bucket)
-            self._tok, self.caches, self._pos, self._key = \
+            self._tok, self.caches, self._pos = \
                 _chunk_prefill_kernel(
-                    self.cfg, self._temp, self.params, jnp.asarray(padded),
+                    self.cfg, bool(self._sampled_host[slot]), self.params,
+                    jnp.asarray(padded),
                     jnp.asarray(cs.start, jnp.int32),
                     jnp.asarray(len(chunk), jnp.int32),
                     self.caches, jnp.asarray(slot, jnp.int32), pt_row,
-                    self._tok, self._pos, self._key)
+                    self._tok, self._pos, self._keys, self._temps,
+                    self._topk, self._topp)
             # resumed streams keep their original prefill_start/first_token
             self._account_prefill_tokens(
                 len(chunk), cs.start == 0 and cs.resume_tok is None, cs.req)
@@ -702,8 +825,7 @@ class ServingEngine:
         self.pending.insert(0, req)
         self._preempted += 1
         req.state = RequestState.QUEUED
-        self._events.append(StateEvent(req.rid, self.vtime,
-                                       RequestState.QUEUED))
+        self._emit(StateEvent(req.rid, self.vtime, RequestState.QUEUED))
         return True
 
     # -- cancellation ----------------------------------------------------------
@@ -738,14 +860,14 @@ class ServingEngine:
         if self.pager is not None:
             self.pager.free_chain(slot)
         self._active_host[slot] = False
+        self._sampled_host[slot] = False
         self._active = jnp.asarray(self._active_host)
         self.free_slots.append(slot)
 
     def _mark_cancelled(self, req: Request) -> bool:
         req.state = RequestState.CANCELLED
         self._cancelled += 1
-        self._events.append(StateEvent(req.rid, self.vtime,
-                                       RequestState.CANCELLED))
+        self._emit(StateEvent(req.rid, self.vtime, RequestState.CANCELLED))
         return True
 
     # -- replica-to-replica migration (disaggregated serving) ------------------
@@ -764,6 +886,7 @@ class ServingEngine:
         """
         st = self.active.pop(slot)
         self._active_host[slot] = False
+        self._sampled_host[slot] = False
         self._active = jnp.asarray(self._active_host)
         self.free_slots.append(slot)
         chain = list(self.pager.chains.get(slot, [])) \
@@ -780,11 +903,23 @@ class ServingEngine:
             blocks.append(tuple(sblocks))
         if self.pager is not None:
             self.pager.export_chain(slot)
+        # snapshot the *resolved* sampling config: a request inheriting this
+        # engine's default temperature must keep sampling the same way on an
+        # adopter whose defaults differ (the handoff is the stream's
+        # complete decodable state, EngineConfig defaults included)
+        sp = st.req.sampling
+        if sp is None or sp.temperature is None:
+            temp, top_k, top_p = self._resolve_sampling(st.req)
+            sp = SamplingParams(
+                max_tokens=sp.max_tokens if sp else st.req.output_len,
+                temperature=temp, top_k=top_k, top_p=top_p,
+                seed=sp.seed if sp else None)
         return StreamHandoff(
             req=st.req, pos=st.pos, last_token=st.last_token,
             n_pages=len(chain), blocks=blocks, export_time=self.vtime,
             page_size=self.ecfg.page_size if self.pager is not None else 0,
-            cfg_name=self.cfg.name)
+            cfg_name=self.cfg.name, sampling=sp,
+            rng_lane=self._lane_for(st.req))
 
     def import_stream(self, ho: StreamHandoff) -> bool:
         """Adopt a migrated stream: allocate a slot + an equal-length page
@@ -821,6 +956,16 @@ class ServingEngine:
         self.caches = caches
         self._tok = self._tok.at[slot].set(ho.last_token)
         self._pos = self._pos.at[slot].set(ho.pos)
+        # the RNG lane and the exporter-resolved sampling config travel with
+        # the stream: the adopter continues the exporter's draw sequence and
+        # sampling mode instead of re-resolving against its own defaults
+        # (draw i is fold_in(lane, position i), so this is all the state
+        # needed)
+        if ho.rng_lane is not None:
+            ho.req.rng_lane = np.asarray(ho.rng_lane, np.uint32)
+        if ho.sampling is not None:
+            ho.req.sampling = ho.sampling
+        self._set_slot_sampling(slot, ho.req)
         self._imported += 1
         self.requests.append(ho.req)
         self._start_stream(ho.req, slot, ho.last_token, ho.pos, resumed=True)
@@ -857,6 +1002,7 @@ class ServingEngine:
             self.free_slots.append(slot)
             del self.active[slot]
             self._active_host[slot] = False
+            self._sampled_host[slot] = False
             if self.pager is not None:
                 self.pager.free_chain(slot)   # whole chain back to the pool
         if slots:
@@ -908,6 +1054,13 @@ class ServingEngine:
             max_pos = max(max_pos,
                           max(cs.start for cs in self.prefilling.values()))
         wall = self.ecfg.use_wall_clock
+        # host-known static: does any *decoding* row sample?  All-greedy
+        # blocks compile (and run) without the sampler's per-step sort, and
+        # a sampled stream that is still mid-chunked-prefill (inactive, its
+        # draws masked anyway) doesn't force the sampled kernel variant.
+        # Computed from stream metadata at block granularity — no device
+        # read.
+        sampled = bool(self._sampled_host[self._active_host].any())
         toks_dev = []
         durs: List[Optional[float]] = []   # per-step; None -> plant model
         left = k
@@ -922,17 +1075,19 @@ class ServingEngine:
             if self.pager is not None:
                 n_ctx = min(ctx // self.ecfg.page_size, self._max_pages)
                 pt = self.pager.table_device()[:, :n_ctx]
-                (self._tok, self.caches, self._pos, self._key, tk) = \
+                (self._tok, self.caches, self._pos, tk) = \
                     _paged_decode_block_kernel(
-                        self.cfg, self._temp, kb,
+                        self.cfg, kb, sampled,
                         self.params, self._tok, self.caches, pt, self._pos,
-                        self._active, self._key)
+                        self._active, self._keys, self._temps, self._topk,
+                        self._topp)
             else:
-                (self._tok, self.caches, self._pos, self._key, tk) = \
+                (self._tok, self.caches, self._pos, tk) = \
                     _decode_block_kernel(
-                        self.cfg, self._temp, ctx, kb, self.ecfg.max_len,
+                        self.cfg, ctx, kb, self.ecfg.max_len, sampled,
                         self.params, self._tok, self.caches, self._pos,
-                        self._active, self._key)
+                        self._active, self._keys, self._temps, self._topk,
+                        self._topp)
             toks_dev.append(tk)        # (kb, B) device, drained at block end
             if wall:
                 # wall-clock mode syncs per chunk (still amortized over kb
@@ -968,14 +1123,13 @@ class ServingEngine:
                     done.append(slot)
         for slot, st in snapshot:       # one TokenEvent per stream per block
             if block_toks[slot]:
-                self._events.append(TokenEvent(
+                self._emit(TokenEvent(
                     st.req.rid, self.vtime, tuple(block_toks[slot]),
                     len(block_toks[slot])))
         by_slot = dict(snapshot)        # FINISHED strictly after the tokens
         for slot in done:
-            self._events.append(StateEvent(by_slot[slot].req.rid,
-                                           self.vtime,
-                                           RequestState.FINISHED))
+            self._emit(StateEvent(by_slot[slot].req.rid, self.vtime,
+                                  RequestState.FINISHED))
         self._retire(done)
         if self.pager is not None:
             occ = self.pager.occupancy()["occupancy"]
@@ -1010,11 +1164,11 @@ class ServingEngine:
             st.pos += 1
             st.req.tokens_emitted += 1
             self._tbt.setdefault(st.req.rid, []).append(dur)
-            self._events.append(TokenEvent(st.req.rid, self.vtime,
-                                           (st.last_token,), 1))
+            self._emit(TokenEvent(st.req.rid, self.vtime,
+                                  (st.last_token,), 1))
             if self._finish_check(st):
-                self._events.append(StateEvent(st.req.rid, self.vtime,
-                                               RequestState.FINISHED))
+                self._emit(StateEvent(st.req.rid, self.vtime,
+                                      RequestState.FINISHED))
                 done.append(slot)
         self._retire(done)
         return batch

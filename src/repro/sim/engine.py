@@ -206,6 +206,9 @@ class ServingSimulator:
         self._seq = 0
         self._last_time = 0.0
         self._events: List = []
+        # False -> skip event buffering (serving.api.Server clears this
+        # unless an on_event callback is installed)
+        self.events_on = True
 
     # -- prefill routing -----------------------------------------------------------
     def _prefill_worker_for(self, cls_idx: int, rid: int) -> PrefillWorker:
@@ -251,9 +254,13 @@ class ServingSimulator:
             for s in list(d.streams):
                 if s.req is req:
                     d.streams.remove(s)
-        self._events.append(StateEvent(rid, self._last_time,
-                                       RequestState.CANCELLED))
+        self._emit(StateEvent(rid, self._last_time,
+                              RequestState.CANCELLED))
         return True
+
+    def _emit(self, ev) -> None:
+        if self.events_on:
+            self._events.append(ev)
 
     def drain_events(self) -> List:
         ev, self._events = self._events, []
@@ -308,8 +315,7 @@ class ServingSimulator:
         w.energy.record_active(now, dur, power)
         req.prefill_start = now
         req.state = RequestState.PREFILLING
-        self._events.append(StateEvent(req.rid, now,
-                                       RequestState.PREFILLING))
+        self._emit(StateEvent(req.rid, now, RequestState.PREFILLING))
         w.busy_until = now + dur
         self._push(now + dur, "prefill_done", (w, req))
 
@@ -344,8 +350,7 @@ class ServingSimulator:
                          req: Request) -> None:
         if not req.state.terminal:      # cancelled mid-prefill: drop stream
             req.state = RequestState.DECODING
-            self._events.append(StateEvent(req.rid, now,
-                                           RequestState.DECODING))
+            self._emit(StateEvent(req.rid, now, RequestState.DECODING))
             dw = min(self.decode, key=lambda d: d.load)
             dw.pending.append(req)
             self._schedule_decode_step(dw, now)
@@ -361,12 +366,12 @@ class ServingSimulator:
             if s.req.first_token < 0:
                 s.req.first_token = now
             self.tbt_records.setdefault(s.req.rid, []).append(dur)
-            self._events.append(TokenEvent(s.req.rid, now, (), 1))
+            self._emit(TokenEvent(s.req.rid, now, (), 1))
             if s.req.tokens_emitted >= s.req.output_len:
                 s.req.finish = now
                 s.req.state = RequestState.FINISHED
-                self._events.append(StateEvent(s.req.rid, now,
-                                               RequestState.FINISHED))
+                self._emit(StateEvent(s.req.rid, now,
+                                      RequestState.FINISHED))
                 done.append(s)
         for s in done:
             w.streams.remove(s)

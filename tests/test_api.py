@@ -436,13 +436,85 @@ def test_sampling_params_validation(model):
     cfg, params = model
     with pytest.raises(ValueError, match="max_tokens"):
         SamplingParams(max_tokens=0)
-    srv = Server(_engine(cfg, params))     # greedy engine (temp 0)
     with pytest.raises(ValueError, match="temperature"):
-        srv.submit(np.arange(4), SamplingParams(max_tokens=4,
-                                                temperature=0.7))
-    # matching / inherited temperatures are accepted
+        SamplingParams(temperature=-0.5)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    # sampling is per-request now: a greedy-default engine accepts any
+    # temperature (the old engine-global temperature-mismatch ValueError is
+    # gone) and serves the mixed batch through one submit surface
+    srv = Server(_engine(cfg, params))     # greedy-default engine
+    srv.submit(np.arange(4) % cfg.vocab_size,
+               SamplingParams(max_tokens=4, temperature=0.7, seed=1))
     srv.submit(np.arange(4) % cfg.vocab_size,
                SamplingParams(max_tokens=4, temperature=0.0))
     srv.submit(np.arange(4) % cfg.vocab_size, SamplingParams(max_tokens=4))
     rep = srv.run()
+    assert rep.completed == 3
+    # the legacy data plane decodes greedily host-side: a sampled request
+    # must be rejected loudly, never silently argmaxed
+    legacy = Server(ServingEngine(
+        cfg, params=params, ecfg=EngineConfig(max_batch=2, max_len=MAXLEN,
+                                              governor="defaultnv",
+                                              slot_native=False)))
+    with pytest.raises(ValueError, match="slot-native"):
+        legacy.submit(np.arange(4) % cfg.vocab_size,
+                      SamplingParams(max_tokens=4, temperature=0.7))
+
+
+# -- the on_event observability hook -------------------------------------------
+
+def test_on_event_callback_receives_the_stream(model):
+    """``Server(backend, on_event=...)`` pushes every buffered TokenEvent /
+    StateEvent through the front door, in order, at block granularity —
+    the gap that used to force observers to drive the backend directly."""
+    from repro.core import StateEvent, TokenEvent
+    cfg, params = model
+    events = []
+    eng = _engine(cfg, params, decode_block=4)
+    srv = Server(eng, on_event=events.append)
+    assert eng.events_on is True
+    rng = np.random.default_rng(8)
+    h0 = srv.submit(rng.integers(0, cfg.vocab_size, size=10),
+                    SamplingParams(max_tokens=9))
+    h1 = srv.submit(rng.integers(0, cfg.vocab_size, size=6),
+                    SamplingParams(max_tokens=5, temperature=0.8, seed=3))
+    rep = srv.run()
     assert rep.completed == 2
+    for h in (h0, h1):
+        tok = [e for e in events
+               if isinstance(e, TokenEvent) and e.rid == h.rid]
+        # block granularity: fewer events than tokens, reconstructing the
+        # output exactly
+        assert [t for e in tok for t in e.tokens] == h.request.tokens
+        assert len(tok) < len(h.request.tokens)
+        states = [e.state for e in events
+                  if isinstance(e, StateEvent) and e.rid == h.rid]
+        assert states[-1] is RequestState.FINISHED
+    assert not eng._events               # everything was delivered
+
+
+def test_no_listener_skips_event_buffering(model):
+    """Without an on_event callback the Server turns backend buffering off:
+    nothing accumulates even while tokens stream through the handles."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    srv = Server(eng)
+    assert eng.events_on is False
+    h = srv.submit(np.arange(8) % cfg.vocab_size,
+                   SamplingParams(max_tokens=6))
+    for _ in range(3):
+        eng.step(1)
+        assert eng._events == []         # buffering skipped at the source
+    rep = srv.run()
+    assert rep.completed == 1 and h.request.tokens_emitted == 6
+    # a backend driven directly (no Server) still buffers by default
+    eng2 = _engine(cfg, params)
+    assert eng2.events_on is True
+    eng2.submit(Request(rid=0, arrival=0.0, prompt_len=8, output_len=4))
+    eng2.step(1)
+    assert eng2.drain_events()

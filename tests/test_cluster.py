@@ -162,15 +162,147 @@ def test_adopt_chain_matches_export_and_conserves_pages():
     assert a.pages_used == 3
 
 
+def test_seeded_sampled_handoff_mid_decode_is_draw_exact():
+    """A *sampled* stream (fixed seed) handed off mid-decode continues its
+    own draw sequence on the adopter: the RNG lane rides the StreamHandoff
+    and draw i is fold_in(lane, position i), so the migrated run is
+    token-for-token identical to the never-migrated colocated run even
+    though the adopting engine was built with a different seed."""
+    from repro.core import SamplingParams
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, size=21)
+    sp = SamplingParams(max_tokens=14, temperature=0.8, top_k=20, seed=42)
+
+    ref = Request(rid=0, arrival=0.0, prompt_len=21, output_len=14,
+                  sampling=sp)
+    colo = _engine(cfg, params)
+    colo.submit(ref, prompt)
+    colo.run_until_drained()
+
+    req = Request(rid=0, arrival=0.0, prompt_len=21, output_len=14,
+                  sampling=sp)
+    A = _engine(cfg, params)
+    B = ServingEngine(cfg, params=params, seed=99, ecfg=_ecfg())
+    A.submit(req, prompt)
+    for _ in range(4):
+        A.step(1)                       # a few draws happen on A
+    assert req.tokens_emitted > 1
+    ho = A.export_stream(next(iter(A.active)))
+    assert ho.rng_lane is not None and ho.sampling is sp
+    assert B.import_stream(ho)
+    B.run_until_drained()
+    assert req.tokens == ref.tokens
+
+
+def test_unseeded_sampled_handoff_keeps_the_exporters_lane():
+    """Unseeded sampled streams derive their lane from the *exporting*
+    engine's key; the adopter must continue that lane (not mint its own),
+    so migrated == never-migrated holds without a user-pinned seed."""
+    from repro.core import SamplingParams
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(0, cfg.vocab_size, size=12)
+    sp = SamplingParams(max_tokens=10, temperature=1.0)
+
+    ref = Request(rid=3, arrival=0.0, prompt_len=12, output_len=10,
+                  sampling=sp)
+    colo = _engine(cfg, params)          # seed 0
+    colo.submit(ref, prompt)
+    colo.run_until_drained()
+
+    req = Request(rid=3, arrival=0.0, prompt_len=12, output_len=10,
+                  sampling=sp)
+    A = _engine(cfg, params)             # same seed 0 -> same derived lane
+    B = ServingEngine(cfg, params=params, seed=77, ecfg=_ecfg())
+    A.submit(req, prompt)
+    for _ in range(3):
+        A.step(1)
+    assert B.import_stream(A.export_stream(next(iter(A.active))))
+    B.run_until_drained()
+    assert req.tokens == ref.tokens
+
+
+def test_handoff_snapshots_exporter_resolved_defaults():
+    """A stream that *inherits* its sampling mode from the exporter's
+    EngineConfig defaults (temperature=None) must keep that mode on an
+    adopter with different defaults: export snapshots the resolved config
+    into the handoff instead of letting the adopter re-resolve None."""
+    from repro.core import SamplingParams
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, cfg.vocab_size, size=14)
+    sp = SamplingParams(max_tokens=10, seed=21)   # temperature inherited
+
+    ref = Request(rid=0, arrival=0.0, prompt_len=14, output_len=10,
+                  sampling=sp)
+    colo = _engine(cfg, params, greedy=False, temperature=0.8)
+    colo.submit(ref, prompt)
+    colo.run_until_drained()
+
+    req = Request(rid=0, arrival=0.0, prompt_len=14, output_len=10,
+                  sampling=sp)
+    A = _engine(cfg, params, greedy=False, temperature=0.8)
+    B = ServingEngine(cfg, params=params, seed=55, ecfg=_ecfg())  # greedy
+    A.submit(req, prompt)
+    for _ in range(3):
+        A.step(1)
+    ho = A.export_stream(next(iter(A.active)))
+    assert ho.sampling.temperature == 0.8         # resolved, not None
+    assert B.import_stream(ho)
+    B.run_until_drained()
+    assert req.tokens == ref.tokens
+
+
+def test_preempt_recompute_resume_replays_identical_draws():
+    """Preemption + recompute-on-resume replays the prompt and the emitted
+    tokens through chunked prefill without consuming draws (provisional
+    chunk samples touch no lane state), so a seeded sampled stream resumes
+    its draw sequence exactly where it left off."""
+    from repro.core import SamplingParams
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, size=18)
+    sp = SamplingParams(max_tokens=16, temperature=0.9, top_p=0.9, seed=13)
+
+    ref = Request(rid=0, arrival=0.0, prompt_len=18, output_len=16,
+                  sampling=sp)
+    smooth = _engine(cfg, params)
+    smooth.submit(ref, prompt)
+    smooth.run_until_drained()
+
+    req = Request(rid=0, arrival=0.0, prompt_len=18, output_len=16,
+                  sampling=sp)
+    eng = _engine(cfg, params)
+    eng.submit(req, prompt)
+    for _ in range(4):
+        eng.step(1)
+    emitted_before = list(req.tokens)
+    assert eng._preempt_for_pages()      # youngest (only) stream evicted
+    assert req.state.name == "QUEUED" and eng._preempted == 1
+    eng.run_until_drained()
+    assert req.tokens[:len(emitted_before)] == emitted_before
+    assert req.tokens == ref.tokens
+
+
 # -- cluster-level -------------------------------------------------------------
 
-def _mini_trace(cfg, n=6, seed=3):
+def _mini_trace(cfg, n=6, seed=3, mixed_sampling=False):
+    from repro.core import SamplingParams
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab_size,
                             size=int(rng.integers(6, 40))) for _ in range(n)]
+    # every third request samples (seeded): the disaggregated pipeline must
+    # carry heterogeneous sampling lanes through dispatch + handoff
+    sps = [SamplingParams(temperature=0.8, top_k=16, seed=50 + i)
+           if mixed_sampling and i % 3 == 1 else None for i in range(n)]
     reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=len(p),
-                    output_len=int(rng.integers(4, 12)))
-            for i, p in enumerate(prompts)]
+                    output_len=int(rng.integers(4, 12)), sampling=sp)
+            for i, (p, sp) in enumerate(zip(prompts, sps))]
     return reqs, prompts
 
 
@@ -179,12 +311,14 @@ def test_cluster_matches_colocated_engine_tokens(governor):
     """The full disaggregated pipeline (dispatch -> prefill replica ->
     paged-KV handoff -> decode replica) emits exactly the tokens of a single
     colocated engine, under both governors (DVFS changes virtual time and
-    energy, never greedy token values)."""
+    energy, never token values — greedy *or* seeded-sampled rows, whose RNG
+    lanes ride the handoff)."""
     cfg = _cfg("full")
     params = init_params(KEY, cfg)
-    reqs, prompts = _mini_trace(cfg)
+    reqs, prompts = _mini_trace(cfg, mixed_sampling=True)
     ref = [Request(rid=r.rid, arrival=0.0, prompt_len=r.prompt_len,
-                   output_len=r.output_len) for r in reqs]
+                   output_len=r.output_len, sampling=r.sampling)
+           for r in reqs]
     eng = _engine(cfg, params)
     for r, p in zip(ref, prompts):
         eng.submit(r, p)

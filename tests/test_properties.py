@@ -14,8 +14,112 @@ from repro.core import (A100_SXM4_40G, CubicPowerModel, DualLoopController,
 from repro.models.kvcache import ring_slot_positions
 from repro.models.moe import capacity, _slots
 from repro.models.config import ModelConfig
+from repro.models.transformer import sample_tokens_batched
 
 HW = A100_SXM4_40G
+
+
+# -- batched per-row sampler ------------------------------------------------------------
+
+def _sampler_case(draw_ints, B=4, V=24):
+    """Deterministic logits + per-row lanes from a hypothesis-drawn seed."""
+    rng = np.random.default_rng(draw_ints)
+    logits = jnp.asarray(rng.normal(0, 3, size=(B, V)), jnp.float32)
+    temps = jnp.asarray(rng.choice([0.0, 0.25, 0.7, 1.3], size=B),
+                        jnp.float32)
+    topk = jnp.asarray(rng.integers(0, V + 2, size=B), jnp.int32)
+    topp = jnp.asarray(rng.uniform(0.05, 1.0, size=B), jnp.float32)
+    keys = jax.vmap(jax.random.fold_in)(
+        jnp.broadcast_to(jax.random.PRNGKey(draw_ints), (B, 2)),
+        jnp.arange(B))
+    return logits, temps, topk, topp, keys
+
+
+def _keep_mask(logits, temp, top_k, top_p):
+    """NumPy oracle for the admissible-token set of one row."""
+    V = logits.shape[-1]
+    scaled = np.asarray(logits, np.float64) / (temp if temp > 0 else 1.0)
+    order = np.argsort(-scaled, kind="stable")
+    keep = np.zeros(V, bool)
+    k = V if top_k <= 0 or top_k >= V else top_k
+    kth = np.sort(scaled)[::-1][k - 1]
+    keep[scaled >= kth] = True           # ties at the cutoff stay admissible
+    probs = np.exp(scaled - scaled.max())
+    probs = np.where(keep, probs, 0.0)
+    probs /= probs.sum()
+    cum = 0.0
+    nucleus = np.zeros(V, bool)
+    for j in order:
+        if not keep[j]:
+            continue
+        # small tolerance: the device filter cumsums in float32, so a token
+        # sitting exactly on the nucleus boundary may differ in the last ulp
+        if cum < top_p + 1e-4 or top_p >= 1.0:
+            nucleus[j] = True
+        cum += probs[j]
+    return keep & (nucleus if top_p < 1.0 else keep)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sampler_never_admits_a_masked_logit(seed):
+    """Every sampled token lies inside its row's top-k ∩ top-p keep set
+    (tie-tolerant oracle: equal logits at the k-th cutoff are admissible)."""
+    logits, temps, topk, topp, keys = _sampler_case(seed)
+    toks = np.asarray(sample_tokens_batched(logits, temps, topk, topp, keys))
+    for r in range(logits.shape[0]):
+        if float(temps[r]) == 0.0:
+            continue                     # greedy rows checked separately
+        keep = _keep_mask(np.asarray(logits[r]), float(temps[r]),
+                          int(topk[r]), float(topp[r]))
+        assert keep[toks[r]], (r, toks[r], int(topk[r]), float(topp[r]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sampler_greedy_rows_bit_identical_to_argmax(seed):
+    logits, _, topk, topp, keys = _sampler_case(seed)
+    temps = jnp.zeros((logits.shape[0],), jnp.float32)
+    toks = sample_tokens_batched(logits, temps, topk, topp, keys)
+    assert (np.asarray(toks) ==
+            np.asarray(jnp.argmax(logits, axis=-1))).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), row=st.integers(0, 3))
+def test_sampler_rows_are_independent(seed, row):
+    """Perturbing row i's logits *and* sampling params never changes any
+    other row's token — the per-slot lanes share no state."""
+    logits, temps, topk, topp, keys = _sampler_case(seed)
+    base = np.asarray(sample_tokens_batched(logits, temps, topk, topp, keys))
+    logits2 = logits.at[row].set(-logits[row] + 1.7)
+    temps2 = temps.at[row].set(1.9)
+    topk2 = topk.at[row].set(3)
+    topp2 = topp.at[row].set(0.5)
+    pert = np.asarray(sample_tokens_batched(logits2, temps2, topk2, topp2,
+                                            keys))
+    others = [r for r in range(logits.shape[0]) if r != row]
+    assert (base[others] == pert[others]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sampler_disabled_filters_reduce_to_plain_temperature(seed):
+    """top_p=1.0 and top_k=vocab (or 0) leave the logits untouched, so the
+    draw is bit-identical to plain per-row temperature sampling."""
+    logits, temps, _, _, keys = _sampler_case(seed)
+    B, V = logits.shape
+    temps = jnp.where(temps > 0, temps, 0.7)      # all rows sample
+    ones = jnp.ones((B,), jnp.float32)
+    a = sample_tokens_batched(logits, temps, jnp.zeros((B,), jnp.int32),
+                              ones, keys)
+    b = sample_tokens_batched(logits, temps,
+                              jnp.full((B,), V, jnp.int32), ones, keys)
+    plain = jax.vmap(
+        lambda kk, row, t: jax.random.categorical(kk, row / t))(
+        keys, logits, temps).astype(jnp.int32)
+    assert (np.asarray(a) == np.asarray(plain)).all()
+    assert (np.asarray(b) == np.asarray(plain)).all()
 
 
 # -- ring buffer invariants ------------------------------------------------------------

@@ -205,6 +205,77 @@ def test_stats_slo_parity_with_sim_metrics():
     assert s["p99_tbt_ms"] >= s["p95_tbt_ms"] >= 0.0
 
 
+def test_mixed_sampling_batch_equivalence():
+    """A heterogeneous batch — greedy, plain temperature, and two different
+    top-k/top-p rows — runs through ``Server.submit`` with no per-request
+    rejection; every greedy row is token-for-token identical to the same
+    request served alone, and the seeded sampled rows are reproducible
+    across runs (the per-slot RNG lane is a pure function of seed and token
+    position, so batch composition cannot perturb the draws)."""
+    from repro.core import SamplingParams
+    from repro.serving import Server
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n)
+               for n in (19, 7, 12, 26)]
+    sps = [SamplingParams(max_tokens=12),                      # greedy
+           SamplingParams(max_tokens=12, temperature=0.9, seed=5),
+           SamplingParams(max_tokens=12, temperature=0.7, top_k=8, seed=6),
+           SamplingParams(max_tokens=12, temperature=1.1, top_p=0.85,
+                          seed=7)]
+
+    def run_mixed():
+        srv = Server(_engine(cfg, params, cache_dtype="float32"))
+        hs = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+        rep = srv.run()
+        assert rep.completed == len(hs)
+        return [h.request.tokens for h in hs]
+
+    first = run_mixed()
+    assert first == run_mixed()          # seeded rows reproducible
+    for i in (0, 1, 2, 3):               # every row == its solo run
+        solo = Server(_engine(cfg, params, cache_dtype="float32"))
+        h = solo.submit(prompts[i], sps[i])
+        solo.run()
+        assert h.request.tokens == first[i], f"row {i} perturbed by batch"
+    assert first[0] == _reference_tokens(params, cfg, prompts[0], 12)
+    # the sampled rows actually sample: distinct draws across the lanes
+    assert len({tuple(t) for t in first}) == len(first)
+
+
+def test_mixed_sampling_joins_mid_decode():
+    """A sampled stream admitted while a greedy stream is mid-decode (and
+    vice versa) leaves the earlier stream's tokens untouched — the sampled
+    lane is per-slot, not a block-global mode switch."""
+    from repro.core import SamplingParams
+    from repro.serving import Server
+    cfg = _cfg("full")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(13)
+    p0 = rng.integers(0, cfg.vocab_size, size=17)
+    p1 = rng.integers(0, cfg.vocab_size, size=9)
+
+    eng = _engine(cfg, params, cache_dtype="float32")
+    srv = Server(eng)
+    h0 = srv.submit(p0, SamplingParams(max_tokens=14))          # greedy
+    for _ in range(5):
+        eng.step(1)                     # h0 decodes alone for a while
+    h1 = srv.submit(p1, SamplingParams(max_tokens=10,
+                                       temperature=0.8, seed=9))
+    srv.run()
+
+    solo = Server(_engine(cfg, params, cache_dtype="float32"))
+    s0 = solo.submit(p0, SamplingParams(max_tokens=14))
+    solo.run()
+    assert h0.request.tokens == s0.request.tokens
+    solo = Server(_engine(cfg, params, cache_dtype="float32"))
+    s1 = solo.submit(p1, SamplingParams(max_tokens=10,
+                                        temperature=0.8, seed=9))
+    solo.run()
+    assert h1.request.tokens == s1.request.tokens
+
+
 def test_wall_clock_mode_drains():
     """use_wall_clock=True accounts measured block latency (first-compile
     chunks billed to the plant model) and still drains."""
