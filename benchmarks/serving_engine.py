@@ -38,13 +38,17 @@ Cluster scenario (``--cluster``):
 
     PYTHONPATH=src python benchmarks/serving_engine.py [--quick] [--paged]
         [--cluster] [--arch qwen2-1.5b] [--batches 1,4,8]
-        [--governors greenllm,defaultnv]
+        [--governors greenllm,defaultnv] [--json out.json]
 
-Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
+Prints ``name,value,derived`` CSV rows like benchmarks/run.py.  ``--json``
+additionally writes the rows (plus the run configuration) as a JSON
+document — the format of the checked-in ``BENCH_*.json`` baselines that
+make the perf trajectory diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -369,15 +373,34 @@ def main():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batches", default="1,4,8")
     ap.add_argument("--governors", default="greenllm,defaultnv")
+    ap.add_argument("--json", default="", metavar="OUT",
+                    help="also write rows + run config as a JSON document "
+                         "(the BENCH_*.json baseline format)")
     args = ap.parse_args()
     batches = tuple(int(x) for x in args.batches.split(","))
     # --governors "" runs only the standalone scenarios (e.g. --cluster)
     governors = tuple(g for g in args.governors.split(",") if g)
+    rows = bench_serving_engine(
+        quick=args.quick, arch=args.arch, batches=batches,
+        governors=governors, paged=args.paged, cluster=args.cluster)
     print("name,us_per_call,derived")
-    for name, us, derived in bench_serving_engine(
-            quick=args.quick, arch=args.arch, batches=batches,
-            governors=governors, paged=args.paged, cluster=args.cluster):
+    for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}", flush=True)
+    if args.json:
+        doc = {
+            "benchmark": "serving_engine",
+            "config": {"quick": args.quick, "arch": args.arch,
+                       "batches": list(batches),
+                       "governors": list(governors),
+                       "paged": args.paged, "cluster": args.cluster},
+            "backend": jax.default_backend(),
+            "rows": [{"name": n, "us_per_call": round(us, 1),
+                      "derived": d} for n, us, d in rows],
+        }
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

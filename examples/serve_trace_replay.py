@@ -8,10 +8,18 @@ front door (submit → stream → cancel) and reported as the shared typed
 
     PYTHONPATH=src python examples/serve_trace_replay.py [--trace chat_5qps]
         [--arch qwen3-14b] [--duration 120] [--cluster]
+        [--kill-replica decode0] [--kill-frac 0.4] [--handoff-failures 3]
 
 ``--cluster`` adds a disaggregated 1-prefill + 1-decode replica cluster
 (paged-KV handoff, per-phase DVFS) replaying an azure_code burst against a
 2x-colocated max-frequency baseline at equal replica count.
+
+``--kill-replica`` / ``--handoff-failures`` inject deterministic faults
+into that cluster run (``serving.faults``): the named replica is killed
+partway through (``--kill-frac`` of the baseline makespan) and the first N
+handoff imports fail transiently.  The run must still drain completely —
+killed streams are recomputed on survivors, failed imports retry with
+capped backoff — which is the crash-recovery smoke CI exercises.
 """
 import argparse
 
@@ -20,7 +28,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import SamplingParams
 from repro.data import get_trace
-from repro.serving import (EngineConfig, Server, ServingCluster,
+from repro.serving import (EngineConfig, FaultPlan, HandoffFailure,
+                           ReplicaKill, Server, ServingCluster,
                            ServingEngine)
 from repro.sim import ReplayConfig, replay
 
@@ -40,26 +49,47 @@ def replay_burst(server, trace, vocab, *, max_len=192, out_cap=48,
     return server.run()
 
 
-def run_cluster(cfg, smoke, trace, *, max_len=192):
+def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
+                kill_frac=0.4, handoff_failures=0):
     """Disaggregated greenllm cluster vs 2x-colocated defaultNV on the same
-    azure_code-style burst of real JAX inference."""
+    azure_code-style burst of real JAX inference — optionally with injected
+    faults (replica kill, transient handoff-import failures), which the
+    cluster must recover from without losing a single request."""
     from repro.models import init_params
     import jax
     params = init_params(jax.random.PRNGKey(0), smoke)
 
-    def build(governor, **kw):
-        return Server(ServingCluster(
-            smoke, params=params, plant_cfg=cfg,
+    def build(governor, faults=None, **kw):
+        cl = ServingCluster(
+            smoke, params=params, plant_cfg=cfg, faults=faults,
             ecfg=EngineConfig(max_batch=8, max_len=max_len,
-                              governor=governor), **kw))
+                              governor=governor), **kw)
+        return cl, Server(cl)
 
-    base = replay_burst(build("defaultnv", n_prefill=0, n_decode=0,
-                              n_colocated=2), trace, smoke.vocab_size,
-                        max_len=max_len)
-    rep = replay_burst(build("greenllm", n_prefill=1, n_decode=1),
-                       trace, smoke.vocab_size, max_len=max_len)
+    _, bsrv = build("defaultnv", n_prefill=0, n_decode=0, n_colocated=2)
+    base = replay_burst(bsrv, trace, smoke.vocab_size, max_len=max_len)
+
+    events = []
+    if kill_replica:
+        # the baseline makespan is the fault horizon: same order of
+        # magnitude as the disaggregated run's own clock
+        events.append(ReplicaKill(at=kill_frac * base.duration_s,
+                                  replica=kill_replica))
+    if handoff_failures > 0:
+        events.append(HandoffFailure(at=0.0, count=handoff_failures))
+    plan = FaultPlan(events) if events else None
+
+    cl, srv = build("greenllm", faults=plan, n_prefill=1, n_decode=1)
+    rep = replay_burst(srv, trace, smoke.vocab_size, max_len=max_len)
     assert rep.completed == base.completed == len(trace), \
         "cluster must drain the burst completely (zero stalls)"
+    if plan is not None:
+        print(f"faults: kills={[(n, round(t, 3)) for n, t, _ in cl.kills]}  "
+              f"import_retries={cl.import_retries}  "
+              f"fired={[k for k, _, _ in plan.log]}")
+        assert not kill_replica or cl.kills, "scheduled kill never fired"
+        assert cl.import_retries >= handoff_failures, \
+            "injected import failures must surface as retries"
 
     print(f"{'replica':12s} {'role':10s} {'E_pre J':>9s} {'E_dec J':>9s} "
           f"{'E_idle J':>9s} {'tok pre/dec':>12s} {'handoffs':>9s}")
@@ -79,8 +109,15 @@ def run_cluster(cfg, smoke, trace, *, max_len=192):
     print(f"energy: disaggregated={rep.total_energy_j / 1e3:.2f}kJ  "
           f"colocated@fmax={base.total_energy_j / 1e3:.2f}kJ  "
           f"saving={save:.1f}%")
-    assert rep.total_energy_j <= base.total_energy_j, \
-        "per-phase DVFS must not cost energy vs the max-freq baseline"
+    if plan is None:
+        assert rep.total_energy_j <= base.total_energy_j, \
+            "per-phase DVFS must not cost energy vs the max-freq baseline"
+    else:
+        # with a kill the survivors recompute lost streams, so the energy
+        # win is not guaranteed — conservation across the kill is (dead
+        # replicas stop billing at their kill snapshot)
+        assert abs(sum(r.energy_j for r in rep.replicas)
+                   - rep.total_energy_j) < 1e-6 * max(rep.total_energy_j, 1)
 
 
 def main():
@@ -91,6 +128,14 @@ def main():
     ap.add_argument("--cluster", action="store_true",
                     help="add the disaggregated prefill/decode cluster "
                          "replay vs the colocated max-frequency baseline")
+    ap.add_argument("--kill-replica", default="",
+                    help="with --cluster: kill this replica (e.g. decode0) "
+                         "partway through and recover on survivors")
+    ap.add_argument("--kill-frac", type=float, default=0.4,
+                    help="kill time as a fraction of the baseline makespan")
+    ap.add_argument("--handoff-failures", type=int, default=0,
+                    help="with --cluster: fail the first N handoff imports "
+                         "(retried with capped exponential backoff)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -161,7 +206,10 @@ def main():
     if args.cluster:
         print("\n=== disaggregated cluster: 1 prefill + 1 decode replica, "
               "paged-KV handoff, per-phase DVFS ===")
-        run_cluster(cfg, smoke, code_trace[:16])
+        run_cluster(cfg, smoke, code_trace[:16],
+                    kill_replica=args.kill_replica,
+                    kill_frac=args.kill_frac,
+                    handoff_failures=args.handoff_failures)
 
 
 if __name__ == "__main__":

@@ -70,7 +70,10 @@ class RequestReport:
     ttft_ok: Optional[bool]        # None when no first token was produced
     p95_tbt: float                 # 0 when the stream recorded no TBTs
     tbt_ok: Optional[bool]         # None when no TBTs were recorded
-    deadline_ok: Optional[bool]    # None without a deadline, or unfinished
+    # None without a deadline or while unscorable (cancelled / in flight);
+    # False for SHED rows — shedding *is* the deadline miss, recorded at
+    # admission instead of discovered at finish
+    deadline_ok: Optional[bool]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +94,12 @@ class ReplicaReport:
     preempted: int
     page_occupancy_peak: float
     freq_mhz: float
+    # fault tolerance: a killed replica reports alive=False with its clock
+    # frozen at killed_at — its energy stops accumulating at the kill, so
+    # energy-per-request under a kill trace compares directly to a healthy
+    # run (recompute work is billed on whichever survivor runs it)
+    alive: bool = True
+    killed_at: float = -1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +114,8 @@ class ServingReport:
     n_requests: int
     completed: int
     cancelled: int
+    failed: int                    # given up by the system (watchdog / crash)
+    shed: int                      # dropped by deadline-aware admission
     preempted: int
     migrated: int                  # cross-replica handoffs (0 off-cluster)
     prefill_energy_j: float
@@ -136,6 +147,7 @@ class ServingReport:
         lines = [
             f"backend={self.backend}  requests={self.n_requests}  "
             f"completed={self.completed}  cancelled={self.cancelled}  "
+            f"failed={self.failed}  shed={self.shed}  "
             f"preempted={self.preempted}  migrated={self.migrated}",
             f"duration={self.duration_s:.2f}s  "
             f"throughput={self.throughput_tok_s:.0f} tok/s",
@@ -181,9 +193,11 @@ def build_report(*, backend: str, requests: List[Request],
             if r.first_token >= 0 else None,
             p95_tbt=p95,
             tbt_ok=(p95 <= slo.tbt_target) if tbts else None,
-            # scorable only once finished; cancelled / in-flight rows are
-            # None, not misses
-            deadline_ok=(r.finish <= r.deadline)
+            # scorable once finished — or shed: a SHED request *is* a
+            # deadline miss, recorded at admission.  Cancelled / in-flight
+            # rows are None, not misses.
+            deadline_ok=False if r.state is RequestState.SHED
+            else (r.finish <= r.deadline)
             if r.deadline >= 0 and r.finish >= 0 else None))
     return ServingReport(
         backend=backend,
@@ -191,6 +205,9 @@ def build_report(*, backend: str, requests: List[Request],
         completed=sum(1 for r in requests if r.finish >= 0),
         cancelled=sum(1 for r in requests
                       if r.state is RequestState.CANCELLED),
+        failed=sum(1 for r in requests
+                   if r.state is RequestState.FAILED),
+        shed=sum(1 for r in requests if r.state is RequestState.SHED),
         preempted=preempted, migrated=migrated,
         prefill_energy_j=prefill_energy_j,
         decode_energy_j=decode_energy_j,

@@ -18,16 +18,28 @@ class RequestState(str, enum.Enum):
     CANCELLED (terminal).  One-shot (non-chunked) prefills jump straight
     from QUEUED to DECODING — PREFILLING marks the *observable* mid-chunk
     window, not an accounting phase.
+
+    Two failure terminals complete the lifecycle: FAILED marks a request
+    the system gave up on (``Backend.fail`` — the ``Server.run`` watchdog
+    uses it for streams past their wall budget or stuck backends), SHED a
+    request dropped by deadline-aware admission (its absolute ``deadline``
+    had already passed when it reached the head of the queue — serving it
+    could only burn energy on a guaranteed SLO miss).  Both are clean
+    releases: slot, page chain and recurrent row state are freed exactly
+    like a cancel, and tokens already emitted stay readable.
     """
     QUEUED = "queued"
     PREFILLING = "prefilling"
     DECODING = "decoding"
     FINISHED = "finished"
     CANCELLED = "cancelled"
+    FAILED = "failed"          # watchdog / backend gave up (terminal)
+    SHED = "shed"              # dropped by deadline-aware admission (terminal)
 
     @property
     def terminal(self) -> bool:
-        return self in (RequestState.FINISHED, RequestState.CANCELLED)
+        return self in (RequestState.FINISHED, RequestState.CANCELLED,
+                        RequestState.FAILED, RequestState.SHED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,9 +50,9 @@ class SamplingParams:
     engines' jitted decode path: requests with different temperatures,
     top-k and top-p settings share one batch (the per-row lanes live in
     device vectors, never as static jit arguments).  ``temperature=None``
-    inherits the backend's configured default
-    (``EngineConfig.greedy``/``temperature``); ``temperature=0`` is greedy
-    argmax.  ``top_k=0`` and ``top_p=1.0`` disable the respective filter.
+    means greedy argmax, exactly like ``temperature=0`` (there is no
+    engine-global default to inherit — sampling is per-request only).
+    ``top_k=0`` and ``top_p=1.0`` disable the respective filter.
     ``seed`` pins the request's PRNG lane — a seeded sampled stream draws
     the same tokens across runs, migrations and preempt/recompute resumes
     (see ``serving.engine``: draw ``i`` uses ``fold_in(lane, position_i)``,
@@ -79,6 +91,12 @@ class Request:
     cls: str = ""              # routing class ("SM" | "L")
     state: RequestState = RequestState.QUEUED
     deadline: float = -1.0     # optional absolute finish deadline (< 0: none)
+    # crash-recovery re-dispatch gate: admission never starts before
+    # max(arrival, not_before).  A request requeued off a dead replica sets
+    # this to the kill time so a lagging survivor cannot recompute the work
+    # "before" the failure happened (arrival itself is untouched — TTFT keeps
+    # its original basis).
+    not_before: float = 0.0
     # real-execution engine state: tokenized prompt (np.ndarray int32) and
     # the emitted output token ids, filled in by ServingEngine.  Excluded
     # from __eq__: ndarray comparison would make Request equality raise.

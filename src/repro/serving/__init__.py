@@ -2,4 +2,6 @@ from .engine import ServingEngine, EngineConfig, StreamHandoff
 from .pager import PageAllocator, SCRATCH_PAGE
 from .cluster import (ServingCluster, ClusterDispatcher, Replica,
                       PrefillPhaseController)
-from .api import Backend, RequestHandle, Server
+from .api import Backend, RequestHandle, Server, WatchdogConfig
+from .faults import (FaultPlan, HandoffFailure, PagePressureSpike,
+                     ReplicaKill)

@@ -21,13 +21,19 @@ Design constraints inherited from the engine (ROADMAP invariants):
   discrete event — and handles read that list through a cursor.
   ``handle.tokens()`` therefore yields in bursts of block size.
 * **One driver loop** — ``Server.run`` / ``Server._pump`` is the only place
-  that steps a backend; the three divergent ``run_until_drained`` loops are
-  legacy shims kept for one release.
+  that steps a backend (the legacy ``run_until_drained`` shims are gone).
 * **Typed results** — every backend's ``report()`` returns the same
   ``ServingReport``; there are no string-keyed stats dicts to adapt.
+* **Graceful failure** — an optional ``WatchdogConfig`` makes ``run`` fail
+  (``Backend.fail`` -> ``RequestState.FAILED``) streams that exceed a
+  per-request wall budget on the backend's virtual clock, and detect a
+  stuck backend (claims work, makes no progress) instead of spinning
+  forever — requests are released cleanly, tokens already produced stay
+  readable, and the typed report still comes back.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterator, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -44,8 +50,11 @@ class Backend(Protocol):
     decode block / an admission round / one discrete event); ``has_work``
     is False exactly when the backend is drained; ``drain_events`` hands
     out buffered stream events (cleared on read); ``cancel`` releases a
-    request anywhere short of completion; ``report`` builds the shared
-    typed report over everything served so far.
+    request anywhere short of completion; ``fail`` does the same with the
+    FAILED terminal state (the system giving up, not the caller); ``now``
+    is the backend's virtual-clock reading (what watchdog budgets compare
+    against); ``report`` builds the shared typed report over everything
+    served so far.
     """
 
     def submit(self, req: Request,
@@ -59,7 +68,28 @@ class Backend(Protocol):
 
     def cancel(self, rid: int) -> bool: ...
 
+    def fail(self, rid: int) -> bool: ...
+
+    @property
+    def now(self) -> float: ...
+
     def report(self) -> ServingReport: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """``Server.run`` failure policy (off unless passed to ``Server``).
+
+    ``request_budget_s`` is a per-request wall budget on the *backend's
+    virtual clock*: a request still non-terminal ``budget`` seconds after
+    its arrival is failed cleanly (slot/pages released, FAILED state, the
+    report still scores it).  ``stall_rounds`` guards against a stuck
+    backend: if the backend claims ``has_work()`` but neither its clock
+    nor any stream's token count moves for that many consecutive pump
+    rounds, every in-flight request is failed and the run stops instead of
+    spinning forever (0 disables the stall guard)."""
+    request_budget_s: float = float("inf")
+    stall_rounds: int = 0
 
 
 class RequestHandle:
@@ -67,10 +97,11 @@ class RequestHandle:
 
     ``tokens()`` streams token ids incrementally (bursts of decode-block
     size — see module docstring); ``result()`` blocks until the request is
-    terminal and returns its ``Request``; ``cancel()`` releases it
-    mid-queue, mid-chunked-prefill or mid-decode.  The discrete-event
-    simulator emits token *counts* only, so its handles stream nothing but
-    still resolve ``result()`` / ``state``.
+    terminal — FINISHED, CANCELLED, FAILED (watchdog / backend gave up) or
+    SHED (deadline-aware admission dropped it) — and returns its
+    ``Request``; ``cancel()`` releases it mid-queue, mid-chunked-prefill or
+    mid-decode.  The discrete-event simulator emits token *counts* only, so
+    its handles stream nothing but still resolve ``result()`` / ``state``.
     """
 
     def __init__(self, server: "Server", req: Request):
@@ -140,11 +171,16 @@ class Server:
     streaming through their request token lists either way.
     """
 
-    def __init__(self, backend: Backend, on_event=None):
+    def __init__(self, backend: Backend, on_event=None,
+                 watchdog: Optional[WatchdogConfig] = None):
         self.backend = backend
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._on_event = on_event
+        self._watchdog = watchdog
+        self._stalled = 0           # consecutive no-progress pump rounds
+        self._last_sig = None       # (now, total tokens) progress signature
+        self.stuck = False          # set when the stall guard tripped
         if hasattr(backend, "events_on"):
             backend.events_on = on_event is not None
 
@@ -163,7 +199,7 @@ class Server:
         temperature / top-k / top-p / seed and rides the ``Request`` into
         the backend, whose jitted decode path keeps one sampling lane per
         batch slot — requests with different sampling configs share a
-        batch (``temperature=None`` inherits the backend default).
+        batch (``temperature=None`` means greedy argmax, like 0).
         """
         params = params if params is not None else SamplingParams()
         if isinstance(prompt, (int, np.integer)):
@@ -192,11 +228,42 @@ class Server:
         delivered to the ``on_event`` callback when one is installed and
         discarded otherwise (with no callback the backend skips buffering
         entirely — see ``__init__``)."""
-        if not self.backend.has_work():
+        if self.stuck or not self.backend.has_work():
             self._deliver(self.backend.drain_events())
             return False
         self.backend.step()
         self._deliver(self.backend.drain_events())
+        if self._watchdog is not None and not self._watch():
+            self._deliver(self.backend.drain_events())
+            return False
+        return True
+
+    def _watch(self) -> bool:
+        """Apply the watchdog policy after a pump round.  Returns False
+        exactly when the stall guard declares the backend stuck (the driver
+        loop stops; everything in flight has been failed cleanly)."""
+        wd = self._watchdog
+        now = self.backend.now
+        if wd.request_budget_s != float("inf"):
+            for h in self._handles.values():
+                r = h.request
+                if not r.state.terminal and now - r.arrival \
+                        > wd.request_budget_s:
+                    self.backend.fail(r.rid)
+        if wd.stall_rounds > 0:
+            sig = (now, sum(h.request.tokens_emitted
+                            for h in self._handles.values()))
+            if sig == self._last_sig and self.backend.has_work():
+                self._stalled += 1
+                if self._stalled >= wd.stall_rounds:
+                    for h in self._handles.values():
+                        if not h.request.state.terminal:
+                            self.backend.fail(h.request.rid)
+                    self.stuck = True
+                    return False
+            else:
+                self._stalled = 0
+                self._last_sig = sig
         return True
 
     def _deliver(self, events) -> None:

@@ -64,6 +64,7 @@ from repro.sim import PlantModel
 from repro.sim.profiling import (profile_decode_table, profile_power,
                                  profile_prefill_latency)
 from .engine import EngineConfig, ServingEngine, StreamHandoff
+from .faults import FaultPlan
 
 ROLES = ("prefill", "decode", "colocated")
 
@@ -71,6 +72,25 @@ ROLES = ("prefill", "decode", "colocated")
 # the first decode step, and protect against arrival burstiness
 DEADLINE_SAFETY = 0.72
 FIRST_TOKEN_RESERVE = 0.060  # s
+
+# capped exponential backoff for failed StreamHandoff imports (virtual
+# seconds): 1st retry after BASE, doubling to at most CAP.  The decode
+# replica advances its clock (billing idle) to the earliest retry when it
+# has nothing else to do, so a backed-off import can never stall the run.
+HANDOFF_RETRY_BASE = 0.004
+HANDOFF_RETRY_CAP = 0.128
+
+
+class _PendingImport:
+    """A queued ``StreamHandoff`` plus its retry state: ``next_try`` starts
+    at the export timestamp (a stream may not start decoding before it was
+    exported) and backs off exponentially on failed import attempts."""
+    __slots__ = ("ho", "attempts", "next_try")
+
+    def __init__(self, ho: StreamHandoff):
+        self.ho = ho
+        self.attempts = 0
+        self.next_try = ho.export_time
 
 
 class PrefillPhaseController(MaxFreqController):
@@ -125,10 +145,14 @@ class Replica:
         self.role = role
         self.engine = engine
         self.classes = classes          # prefill classes served (() = all)
-        self.import_q: List[StreamHandoff] = []
+        self.import_q: List[_PendingImport] = []
         self.idle_j = 0.0               # idle energy billed for clock jumps
         self.exported = 0
         self.imported = 0
+        # fault tolerance: a dead replica is never stepped or dispatched to
+        # again; its clock and energy freeze at the kill
+        self.alive = True
+        self.killed_at = -1.0
 
     @property
     def vtime(self) -> float:
@@ -183,7 +207,8 @@ class ServingCluster:
                  ecfg: Optional[EngineConfig] = None,
                  hw: HardwareProfile = A100_SXM4_40G,
                  plant_cfg: ModelConfig = None,
-                 slo: Optional[SLOConfig] = None, seed: int = 0):
+                 slo: Optional[SLOConfig] = None, seed: int = 0,
+                 faults: Optional[FaultPlan] = None):
         assert n_prefill + n_decode + n_colocated > 0
         assert (n_prefill > 0) == (n_decode > 0), \
             "disaggregated roles come in pairs (prefill output needs a " \
@@ -257,6 +282,12 @@ class ServingCluster:
         self._seq = 0
         self._stalled_rounds = 0
         self._events: List = []      # cluster-level events (future cancels)
+        # fault tolerance: the (optional) injection plan, the kill log
+        # (name, killed_at, energy_j_at_kill — asserted frozen by tests),
+        # and the failed-import retry counter
+        self.faults = faults
+        self.kills: List[Tuple[str, float, float]] = []
+        self.import_retries = 0
 
     @property
     def events_on(self) -> bool:
@@ -283,8 +314,15 @@ class ServingCluster:
         self.requests.append(req)
 
     def _inject_arrivals(self, now: float) -> None:
-        cands = [r for r in self.replicas
-                 if r.role in ("prefill", "colocated")]
+        cands = [r for r in self.replicas if r.alive
+                 and r.role in ("prefill", "colocated")]
+        if not cands:
+            if self._future:
+                raise RuntimeError(
+                    "no live replica can admit requests (every prefill/"
+                    "colocated replica is dead) — nothing can recover the "
+                    f"{len(self._future)} queued request(s)")
+            return
         while self._future and self._future[0][0] <= now:
             _, _, req, ptoks = heapq.heappop(self._future)
             if req.state.terminal:      # cancelled before arrival
@@ -292,28 +330,40 @@ class ServingCluster:
             r = self.dispatcher.pick_prefill(req, cands, self.optimizer)
             r.engine.submit(req, ptoks)
 
+    @property
+    def now(self) -> float:
+        """Backend protocol: the cluster's clock reading — the max over
+        replica clocks (dead replicas stay frozen at their kill time)."""
+        return max((r.vtime for r in self.replicas), default=0.0)
+
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it lives in the cluster: not yet
         arrived (future heap), queued / mid-prefill / mid-decode on a
         replica, or in flight between replicas (import queue — the exported
         page payload is host data and is simply dropped; the source replica
         already released the chain)."""
+        return self._terminate(rid, RequestState.CANCELLED)
+
+    def fail(self, rid: int) -> bool:
+        """Give up on a request (``Backend.fail`` — the ``Server.run``
+        watchdog's lever): same clean release as ``cancel`` with the FAILED
+        terminal state."""
+        return self._terminate(rid, RequestState.FAILED)
+
+    def _terminate(self, rid: int, state: RequestState) -> bool:
         for t, seq, req, ptoks in self._future:
             if req.rid == rid and not req.state.terminal:
-                req.state = RequestState.CANCELLED
-                self._emit(StateEvent(
-                    rid, max((r.vtime for r in self.replicas), default=0.0),
-                    RequestState.CANCELLED))
+                req.state = state
+                self._emit(StateEvent(rid, self.now, state))
                 return True      # lazily skipped at injection
         for r in self.replicas:
-            if r.engine.cancel(rid):
+            if r.engine._terminate(rid, state):
                 return True
-            for ho in list(r.import_q):
-                if ho.req.rid == rid:
-                    r.import_q.remove(ho)
-                    ho.req.state = RequestState.CANCELLED
-                    self._emit(StateEvent(
-                        rid, r.vtime, RequestState.CANCELLED))
+            for pi in list(r.import_q):
+                if pi.ho.req.rid == rid:
+                    r.import_q.remove(pi)
+                    pi.ho.req.state = state
+                    self._emit(StateEvent(rid, r.vtime, state))
                     return True
         return False
 
@@ -350,23 +400,39 @@ class ServingCluster:
         e.controller.history.append((e.vtime, f, 0.0))
 
     def _migrate(self, src: Replica, ho: StreamHandoff) -> None:
-        dec = [r for r in self.replicas if r.role == "decode"]
+        dec = [r for r in self.replicas if r.alive and r.role == "decode"]
+        assert dec, "no live decode replica (role rebalancing should have " \
+                    "converted the prefill replicas to colocated)"
         dst = self.dispatcher.pick_decode(dec)
-        dst.import_q.append(ho)
+        dst.import_q.append(_PendingImport(ho))
         src.exported += 1
 
     def _drain_imports(self, r: Replica) -> bool:
-        """Adopt queued handoffs whose export time has passed on this
-        replica's clock; capacity-refused imports stay queued (all-or-
-        nothing) and retry after streams retire."""
+        """Adopt queued handoffs whose retry time has passed on this
+        replica's clock.  A refused import — capacity (all-or-nothing slot/
+        page allocation) or an injected transient failure — stays queued
+        and retries with capped exponential backoff (``HANDOFF_RETRY_BASE``
+        doubling to ``HANDOFF_RETRY_CAP``); the stream is never dropped."""
         moved, rest = False, []
-        for ho in r.import_q:
-            if ho.export_time <= r.vtime + 1e-12 \
-                    and r.engine.import_stream(ho):
+        for pi in r.import_q:
+            ho = pi.ho
+            if ho.req.state.terminal:     # cancelled/failed while in flight
+                continue
+            if pi.next_try > r.vtime + 1e-12:
+                rest.append(pi)
+                continue
+            injected = self.faults is not None and \
+                self.faults.fail_import(r.name, ho.req.rid, r.vtime)
+            if not injected and r.engine.import_stream(ho):
                 r.imported += 1
                 moved = True
             else:
-                rest.append(ho)
+                pi.attempts += 1
+                self.import_retries += 1
+                pi.next_try = r.vtime + min(
+                    HANDOFF_RETRY_BASE * (2.0 ** (pi.attempts - 1)),
+                    HANDOFF_RETRY_CAP)
+                rest.append(pi)
         r.import_q = rest
         return moved
 
@@ -381,11 +447,13 @@ class ServingCluster:
         """
         e = r.engine
         if e.pending and not e.prefilling and not e.active:
-            r.advance_to(min(q.arrival for q in e.pending))
-        held = [q for q in e.pending if q.arrival > e.vtime + 1e-12]
+            r.advance_to(min(max(q.arrival, q.not_before)
+                             for q in e.pending))
+        held = [q for q in e.pending
+                if max(q.arrival, q.not_before) > e.vtime + 1e-12]
         if held:
             e.pending = [q for q in e.pending
-                         if q.arrival <= e.vtime + 1e-12]
+                         if max(q.arrival, q.not_before) <= e.vtime + 1e-12]
         e._admit()
         if held:
             e.pending.extend(held)    # injection order == arrival order
@@ -402,7 +470,10 @@ class ServingCluster:
         e = r.engine
         if not e.active and not e.prefilling and not e.pending \
                 and r.import_q:
-            r.advance_to(min(ho.export_time for ho in r.import_q))
+            # nothing but parked imports: jump (billing idle) to the
+            # earliest adoptable instant — export time or backoff expiry
+            r.advance_to(min(max(pi.ho.export_time, pi.next_try)
+                             for pi in r.import_q))
         self._drain_imports(r)
         e._admit()              # re-admits locally-preempted streams only
         e._advance_chunks()     # (recompute-on-resume; no raw prompts here)
@@ -416,23 +487,115 @@ class ServingCluster:
         if e.active:
             e._decode_block(max(1, e._horizon()))
 
+    # -- fault tolerance --------------------------------------------------------
+    def _replica(self, name: str) -> Optional[Replica]:
+        return next((r for r in self.replicas if r.name == name), None)
+
+    def kill_replica(self, name: str) -> bool:
+        """Crash ``name``: freeze its clock and energy at the kill and
+        requeue every stream it held — queued, mid-chunked-prefill,
+        mid-decode, or parked in its import queue — at the dispatcher for
+        recompute-from-prompt on a survivor.
+
+        Recovery is token-exact for seeded sampled streams: the request
+        keeps its emitted ``tokens`` and pinned ``rng_lane``, so the
+        survivor replays ``prompt + tokens[:-1]`` through chunked prefill
+        (the engine's preemption-resume path) and continues drawing at
+        ``fold_in(lane, position)`` — bit-identical to a run that never
+        crashed.  The ``not_before`` gate stops a lagging survivor from
+        recomputing the work "before" the failure happened; first-token
+        timestamps of already-started streams are preserved (recompute is
+        not a new TTFT).  Returns False if the replica is unknown or
+        already dead."""
+        r = self._replica(name)
+        if r is None or not r.alive:
+            return False
+        e = r.engine
+        r.alive = False
+        r.killed_at = e.vtime
+        self.kills.append((r.name, r.killed_at, e.energy_j + r.idle_j))
+        victims = ([(q, r.killed_at) for q in e.pending]
+                   + [(cs.req, r.killed_at) for cs in e.prefilling.values()]
+                   + [(st.req, r.killed_at) for st in e.active.values()]
+                   # a handoff parked here may have been exported on a clock
+                   # ahead of ours: its recompute may not predate the export
+                   + [(pi.ho.req, max(r.killed_at, pi.ho.export_time))
+                      for pi in r.import_q])
+        e.pending.clear()
+        e.prefilling.clear()
+        e.active.clear()
+        r.import_q = []
+        for req, t in victims:
+            if req.state.terminal:
+                continue
+            self._requeue(req, t)
+        self._rebalance_roles()
+        return True
+
+    def _requeue(self, req: Request, t: float) -> None:
+        """Push a recovered request back through the dispatcher, gated to
+        start no earlier than ``t`` on any survivor's clock."""
+        req.not_before = max(req.not_before, t)
+        req.state = RequestState.QUEUED
+        self._emit(StateEvent(req.rid, t, RequestState.QUEUED))
+        heapq.heappush(self._future, (max(req.arrival, req.not_before),
+                                      self._seq, req, req.prompt))
+        self._seq += 1
+
+    def _rebalance_roles(self) -> None:
+        """Graceful degradation: if a kill leaves one phase with no live
+        replica, the surviving other-phase replicas become colocated (they
+        can run both phases, just without the per-phase specialization) —
+        the cluster degrades instead of deadlocking on a missing phase."""
+        live = [r for r in self.replicas if r.alive]
+        if not live:
+            return
+        has_intake = any(r.role in ("prefill", "colocated") for r in live)
+        has_decode = any(r.role in ("decode", "colocated") for r in live)
+        if not has_decode:
+            for r in live:
+                if r.role == "prefill":
+                    r.role = "colocated"
+        if not has_intake:
+            for r in live:
+                if r.role == "decode":
+                    r.role = "colocated"
+
+    def _apply_faults(self, now: float) -> None:
+        if self.faults is None:
+            return
+        for ev in self.faults.due_kills(now):
+            self.kill_replica(ev.replica)
+        for ev, edge in self.faults.pressure_changes(now):
+            r = self._replica(ev.replica)
+            if r is None or not r.alive or r.engine.pager is None:
+                continue
+            if edge == "on":
+                r.engine.pager.reserve(ev.pages)
+            else:
+                r.engine.pager.release_reserved()
+
     def has_work(self) -> bool:
-        """Backend protocol: future arrivals or any replica with work."""
-        return bool(self._future) or any(r.has_work() for r in self.replicas)
+        """Backend protocol: future arrivals or any live replica with
+        work (a dead replica's leftovers were requeued at the kill)."""
+        return bool(self._future) or any(r.has_work() for r in self.replicas
+                                         if r.alive)
 
     # -- main loop --------------------------------------------------------------
     def step(self) -> bool:
-        """Advance the laggard replica by one unit of work (an admission
-        round, a chunk round, or one decode block).  Returns False when the
-        cluster is drained."""
-        workers = [r for r in self.replicas if r.has_work()]
+        """Advance the laggard live replica by one unit of work (an
+        admission round, a chunk round, or one decode block), applying any
+        fault-plan events due at the cluster clock first.  Returns False
+        when the cluster is drained."""
+        workers = [r for r in self.replicas if r.alive and r.has_work()]
         now = min((r.vtime for r in workers), default=None)
         if now is None:
             if not self._future:
                 return False
             now = self._future[0][0]
+        self._apply_faults(now)
         self._inject_arrivals(now)
-        workers = [r for r in self.replicas if r.has_work()]
+        workers = [r for r in self.replicas if r.alive and r.has_work()]
         if not workers:
             return bool(self._future)
         r = min(workers, key=lambda x: x.vtime)
@@ -462,24 +625,6 @@ class ServingCluster:
                 sum(len(r.engine.pending) + len(r.engine.prefilling)
                     + len(r.engine.active) for r in self.replicas))
 
-    def run_until_drained(self, max_rounds: int = 1_000_000) -> Dict:
-        """Legacy batch driver, kept for one release as a thin shim over
-        the Backend protocol (``serving.api.Server`` is the front door).
-        Returns the legacy ``stats()`` dict."""
-        rounds = 0
-        while self.step():
-            # no consumer in the batch interface: drop each replica's
-            # buffered events through its public drain (skipping the
-            # cluster-level time-sorted merge, which would be wasted work)
-            for r in self.replicas:
-                r.engine.drain_events()
-            self._events.clear()
-            rounds += 1
-            if rounds >= max_rounds:
-                raise RuntimeError("cluster did not drain within "
-                                   f"{max_rounds} rounds")
-        return self.stats()
-
     # -- metrics ----------------------------------------------------------------
     def report(self) -> ServingReport:
         """Backend protocol: cluster roll-up as the shared typed report —
@@ -492,7 +637,12 @@ class ServingCluster:
         rows: List[ReplicaReport] = []
         for r in self.replicas:
             e = r.engine
-            idle = r.idle_j + (makespan - r.vtime) * e.plant.idle_power
+            # a live replica is billed idle power up to the shared makespan;
+            # a dead one stops accumulating *anything* at the kill — that is
+            # what keeps total energy comparable between a kill trace and a
+            # healthy run (recompute is billed where it runs)
+            idle = r.idle_j + ((makespan - r.vtime) * e.plant.idle_power
+                               if r.alive else 0.0)
             rows.append(ReplicaReport(
                 name=r.name, role=r.role, vtime_s=r.vtime,
                 prefill_energy_j=e.prefill_energy_j,
@@ -504,7 +654,8 @@ class ServingCluster:
                 exported=r.exported, imported=r.imported,
                 preempted=e._preempted,
                 page_occupancy_peak=e.page_occupancy_peak(),
-                freq_mhz=e.controller.freq))
+                freq_mhz=e.controller.freq,
+                alive=r.alive, killed_at=r.killed_at))
         tbt: Dict[int, List[float]] = {}
         for r in self.replicas:
             for rid, v in r.engine._tbt.items():
@@ -531,6 +682,8 @@ class ServingCluster:
         return {
             "replicas": [dataclasses.asdict(w) for w in rep.replicas],
             "completed": rep.completed,
+            "failed": rep.failed,
+            "shed": rep.shed,
             "n_requests": rep.n_requests,
             "makespan_s": rep.duration_s,
             "handoffs": rep.migrated,

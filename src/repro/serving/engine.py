@@ -274,12 +274,6 @@ def _chunk_prefill_kernel(cfg, sampled, params, toks, start, length, caches,
 class EngineConfig:
     max_batch: int = 8
     max_len: int = 256
-    # DEPRECATED as engine-global sampling switches: sampling is per-request
-    # (core.SamplingParams carries temperature/top_k/top_p/seed per slot).
-    # These two remain only as the *defaults* for requests that leave
-    # SamplingParams.temperature at None; remove after one release.
-    greedy: bool = True             # default mode: False -> temperature
-    temperature: float = 1.0        # default temp when greedy=False
     governor: str = "greenllm"      # greenllm | defaultnv
     use_wall_clock: bool = False    # account measured latency per decode block
     slot_native: bool = True        # False -> legacy data plane (benchmarks)
@@ -296,6 +290,11 @@ class EngineConfig:
     # fallback; forced True when paged)
     chunked_prefill: bool = True
     cache_dtype: str = "bfloat16"   # K/V buffer dtype (f32 for exactness tests)
+    # deadline-aware admission (graceful degradation under overload): a
+    # request whose absolute deadline has already passed when it reaches the
+    # queue head is SHED instead of served — burning prefill+decode energy
+    # on a guaranteed SLO miss only delays every request behind it
+    shed_past_deadline: bool = True
     # SLO targets for stats() pass-rate reporting (parity with
     # sim.replay.Metrics); virtual-time accounting itself is unaffected
     slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
@@ -318,10 +317,6 @@ class EngineConfig:
                 f"min_bucket={self.min_bucket} exceeds the prefill bucket "
                 f"cap max_len//2={self.max_len // 2} (prompts are truncated "
                 f"to max_len//2, so no bucket could ever be used)")
-        if not self.greedy and self.temperature <= 0.0:
-            raise ValueError(
-                "greedy=False requires temperature > 0 "
-                f"(got {self.temperature})")
         if self.paged:
             if not self.slot_native:
                 raise ValueError(
@@ -470,6 +465,8 @@ class ServingEngine:
         self._completed = 0
         self._preempted = 0
         self._cancelled = 0
+        self._failed = 0     # given up via fail() (watchdog / crash cleanup)
+        self._shed = 0       # dropped by deadline-aware admission
         self._imported = 0   # adopted handoffs (report().migrated);
         #                      exports are counted by the cluster's Replica
         self.requests: List[Request] = []  # everything this engine has seen
@@ -496,7 +493,6 @@ class ServingEngine:
         self._keys = jnp.zeros((B, 2), jnp.uint32)
         self._sampled_host = np.zeros(B, bool)  # host mirror of temps > 0
         self._base_key = jax.random.PRNGKey(seed + 1)  # unseeded-lane source
-        self._default_temp = 0.0 if ecfg.greedy else float(ecfg.temperature)
 
         # prefill buckets: powers of two, capped by the smallest attention
         # buffer (window / long-context ring) — longer prompts take the
@@ -581,16 +577,15 @@ class ServingEngine:
             self._events.append(ev)
 
     def _resolve_sampling(self, req: Request):
-        """(temperature, top_k, top_p) for a request: explicit
-        ``SamplingParams`` fields override the engine-wide defaults
-        (``EngineConfig.greedy`` / ``temperature``, kept as deprecation
-        shims for requests that leave ``temperature`` at None)."""
+        """(temperature, top_k, top_p) for a request.  Sampling is purely
+        per-request: ``temperature=None`` means greedy argmax, same as 0
+        (the old ``EngineConfig.greedy``/``temperature`` engine-wide
+        defaults are gone)."""
         sp = req.sampling
-        if sp is None:
-            return self._default_temp, 0, 1.0
-        temp = self._default_temp if sp.temperature is None \
-            else float(sp.temperature)
-        return temp, int(sp.top_k), float(sp.top_p)
+        if sp is None or sp.temperature is None:
+            return 0.0, (int(sp.top_k) if sp else 0), \
+                (float(sp.top_p) if sp else 1.0)
+        return float(sp.temperature), int(sp.top_k), float(sp.top_p)
 
     def _lane_for(self, req: Request) -> np.ndarray:
         """The request's PRNG base lane, created on *first* admission
@@ -711,9 +706,19 @@ class ServingEngine:
     def _admit(self):
         while self.pending and self.free_slots:
             req = self.pending[0]
-            if req.arrival > self.vtime + 1e-12:
-                break        # FIFO head not arrived yet (online traffic);
-                #              the driver jumps the clock when fully idle
+            if max(req.arrival, req.not_before) > self.vtime + 1e-12:
+                break        # FIFO head not arrived yet (online traffic /
+                #              crash-recovery gate); the driver jumps the
+                #              clock when fully idle
+            if self.ecfg.shed_past_deadline and req.deadline >= 0 \
+                    and self.vtime > req.deadline + 1e-12:
+                # deadline already blown before any work started: shed
+                # instead of burning prefill+decode on a guaranteed miss
+                # (load shedding under overload — the queue behind the head
+                # is exactly what the energy would be stolen from)
+                self.pending.pop(0)
+                self._mark_shed(req)
+                continue
             resume = bool(req.tokens)        # preempted stream: recompute
             ctx_toks = req.prompt if not resume else np.concatenate(
                 [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
@@ -828,7 +833,7 @@ class ServingEngine:
         self._emit(StateEvent(req.rid, self.vtime, RequestState.QUEUED))
         return True
 
-    # -- cancellation ----------------------------------------------------------
+    # -- cancellation / failure ------------------------------------------------
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it currently lives — queued,
         mid-chunked-prefill, or mid-decode — freeing its slot and page chain
@@ -838,20 +843,30 @@ class ServingEngine:
         streams are untouched.  Returns False for unknown or already-terminal
         requests; operates at block granularity like every host-side
         decision (no mid-block aborts, no new host syncs)."""
+        return self._terminate(rid, RequestState.CANCELLED)
+
+    def fail(self, rid: int) -> bool:
+        """Give up on a request (``Backend.fail``): same clean release as
+        ``cancel`` but the terminal state is FAILED — the system's verdict
+        (watchdog wall-budget breach, stuck backend, crash cleanup), not the
+        caller's.  Tokens already emitted stay readable."""
+        return self._terminate(rid, RequestState.FAILED)
+
+    def _terminate(self, rid: int, state: RequestState) -> bool:
         for i, req in enumerate(self.pending):
             if req.rid == rid:
                 self.pending.pop(i)
-                return self._mark_cancelled(req)
+                return self._mark_terminal(req, state)
         for slot, cs in list(self.prefilling.items()):
             if cs.req.rid == rid:
                 del self.prefilling[slot]
                 self._release_slot(slot)
-                return self._mark_cancelled(cs.req)
+                return self._mark_terminal(cs.req, state)
         for slot, st in list(self.active.items()):
             if st.req.rid == rid:
                 del self.active[slot]
                 self._release_slot(slot)
-                return self._mark_cancelled(st.req)
+                return self._mark_terminal(st.req, state)
         return False
 
     def _release_slot(self, slot: int) -> None:
@@ -864,11 +879,19 @@ class ServingEngine:
         self._active = jnp.asarray(self._active_host)
         self.free_slots.append(slot)
 
-    def _mark_cancelled(self, req: Request) -> bool:
-        req.state = RequestState.CANCELLED
-        self._cancelled += 1
-        self._emit(StateEvent(req.rid, self.vtime, RequestState.CANCELLED))
+    def _mark_terminal(self, req: Request, state: RequestState) -> bool:
+        req.state = state
+        if state is RequestState.CANCELLED:
+            self._cancelled += 1
+        elif state is RequestState.FAILED:
+            self._failed += 1
+        self._emit(StateEvent(req.rid, self.vtime, state))
         return True
+
+    def _mark_shed(self, req: Request) -> None:
+        req.state = RequestState.SHED
+        self._shed += 1
+        self._emit(StateEvent(req.rid, self.vtime, RequestState.SHED))
 
     # -- replica-to-replica migration (disaggregated serving) ------------------
     def export_stream(self, slot: int) -> StreamHandoff:
@@ -903,10 +926,9 @@ class ServingEngine:
             blocks.append(tuple(sblocks))
         if self.pager is not None:
             self.pager.export_chain(slot)
-        # snapshot the *resolved* sampling config: a request inheriting this
-        # engine's default temperature must keep sampling the same way on an
-        # adopter whose defaults differ (the handoff is the stream's
-        # complete decodable state, EngineConfig defaults included)
+        # snapshot the *resolved* sampling config (None temperature becomes
+        # an explicit 0.0): the handoff is the stream's complete decodable
+        # state, so the adopter never re-resolves anything
         sp = st.req.sampling
         if sp is None or sp.temperature is None:
             temp, top_k, top_p = self._resolve_sampling(st.req)
@@ -1194,7 +1216,8 @@ class ServingEngine:
         deadlock the driver."""
         if not self.pending:
             return False
-        nxt = self.pending[0].arrival
+        head = self.pending[0]
+        nxt = max(head.arrival, head.not_before)
         if nxt <= self.vtime + 1e-12:
             return False
         self.idle_energy_j += (nxt - self.vtime) * self.plant.idle_power
@@ -1241,18 +1264,11 @@ class ServingEngine:
                       for st in self.active.values())
         return max(1, min(rem_out, rem_len, self.ecfg.decode_block))
 
-    def run_until_drained(self, max_steps: int = 10_000) -> Dict:
-        """Legacy batch driver, kept for one release as a thin shim over
-        the Backend protocol (``serving.api.Server`` is the front door:
-        it streams tokens and supports arrivals/cancellation mid-run).
-        Returns the legacy ``stats()`` dict."""
-        steps = 0
-        while self.has_work() and steps < max_steps:
-            # pass the remaining budget so max_steps stays an exact bound
-            # (step() clamps it to the horizon)
-            steps += max(self.step(max_steps - steps), 1)
-            self._events.clear()     # no consumer in the batch interface
-        return self.stats()
+    @property
+    def now(self) -> float:
+        """Backend protocol: the engine's current virtual time (the clock
+        the ``Server.run`` watchdog compares request wall-budgets against)."""
+        return self.vtime
 
     def page_occupancy_peak(self) -> float:
         """Peak page-pool occupancy over the run (0 when unpaged)."""
@@ -1297,6 +1313,8 @@ class ServingEngine:
         s = {
             "completed": self._completed,
             "cancelled": self._cancelled,
+            "failed": self._failed,
+            "shed": self._shed,
             "pending": len(self.pending),
             "active": len(self.active),
             "prefilling": len(self.prefilling),

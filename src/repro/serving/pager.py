@@ -58,6 +58,7 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
         self._free_set = set(self._free)
         self.chains: Dict[int, List[int]] = {}
+        self._reserved: List[int] = []   # withheld by reserve() (fault inj.)
         self.peak_used = 0               # run peak, monotone (telemetry)
         self.table = np.full((max_streams, max_pages_per_stream),
                              SCRATCH_PAGE, np.int32)
@@ -78,6 +79,39 @@ class PageAllocator:
 
     def can_admit(self, n_tokens: int) -> bool:
         return self.pages_for(n_tokens) <= len(self._free)
+
+    # -- pressure injection (serving.faults) ----------------------------------
+    def reserve(self, n_pages: int) -> int:
+        """Withhold up to ``n_pages`` free pages from the pool (a simulated
+        external pressure spike: co-tenant allocation, fragmentation burst).
+        Returns the number actually withheld — never more than the free
+        list holds, so live chains are untouched.  Reserved pages count as
+        used (``pages_used`` is derived from the free list), preserving the
+        ``pages_used + pages_free == num_pages - 1`` invariant; the engine
+        responds with its normal pressure ladder (shrink blocks, preempt
+        youngest, gate admission)."""
+        take = min(max(n_pages, 0), len(self._free))
+        for _ in range(take):
+            page = self._free.pop()
+            self._free_set.discard(page)
+            self._reserved.append(page)
+        if take:
+            self.peak_used = max(self.peak_used, self.pages_used)
+        return take
+
+    def release_reserved(self) -> int:
+        """Return every reserved page to the free list (pressure spike
+        over).  Returns the number released."""
+        n = len(self._reserved)
+        while self._reserved:
+            page = self._reserved.pop()
+            self._free.append(page)
+            self._free_set.add(page)
+        return n
+
+    @property
+    def pages_reserved(self) -> int:
+        return len(self._reserved)
 
     # -- alloc / grow / free --------------------------------------------------
     def ensure(self, slot: int, n_tokens: int) -> bool:

@@ -232,11 +232,25 @@ class ServingSimulator:
     def has_work(self) -> bool:
         return bool(self._evq)
 
+    @property
+    def now(self) -> float:
+        """Backend protocol: the simulator clock (latest processed event)."""
+        return self._last_time
+
     def cancel(self, rid: int) -> bool:
         """Cancel a request anywhere short of completion: drop it from
         prefill queues / decode pending / live decode batches.  A prefill
         already in flight runs to completion (its energy is spent) but the
         stream is dropped at ``prefill_done``."""
+        return self._terminate(rid, RequestState.CANCELLED)
+
+    def fail(self, rid: int) -> bool:
+        """Give up on a request (``Backend.fail``): same release as
+        ``cancel`` with the FAILED terminal state — simulator parity with
+        the real-execution backends."""
+        return self._terminate(rid, RequestState.FAILED)
+
+    def _terminate(self, rid: int, state: RequestState) -> bool:
         for req in self.requests:
             if req.rid == rid:
                 break
@@ -244,7 +258,7 @@ class ServingSimulator:
             return False
         if req.state.terminal:
             return False
-        req.state = RequestState.CANCELLED
+        req.state = state
         for w in self.prefill:
             if req in w.queue:
                 w.queue.remove(req)
@@ -254,8 +268,7 @@ class ServingSimulator:
             for s in list(d.streams):
                 if s.req is req:
                     d.streams.remove(s)
-        self._emit(StateEvent(rid, self._last_time,
-                              RequestState.CANCELLED))
+        self._emit(StateEvent(rid, self._last_time, state))
         return True
 
     def _emit(self, ev) -> None:
@@ -307,7 +320,20 @@ class ServingSimulator:
         if w.busy_until > now or not w.queue:
             return
         w.queue.sort(key=lambda r: r.arrival)
-        req = w.queue.pop(0)
+        # deadline-aware admission (parity with ServingEngine): a request
+        # whose absolute deadline already passed when it reaches the head
+        # of the prefill queue is SHED, not served
+        req = None
+        while w.queue:
+            cand = w.queue.pop(0)
+            if cand.deadline >= 0 and now > cand.deadline:
+                cand.state = RequestState.SHED
+                self._emit(StateEvent(cand.rid, now, RequestState.SHED))
+                continue
+            req = cand
+            break
+        if req is None:
+            return
         w.freq = w.choose_freq(now, req)
         w.freq_history.append((now, w.freq))
         dur = w.plant.prefill_latency(req.prompt_len, w.freq)

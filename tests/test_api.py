@@ -415,8 +415,6 @@ def test_engine_config_rejects_impossible_combinations():
         EngineConfig(max_len=16, min_bucket=16)
     with pytest.raises(ValueError, match="slot_native"):
         EngineConfig(paged=True, slot_native=False)
-    with pytest.raises(ValueError, match="temperature"):
-        EngineConfig(greedy=False, temperature=0.0)
     with pytest.raises(ValueError, match="max_batch"):
         EngineConfig(max_batch=0)
     with pytest.raises(ValueError, match="decode_block"):

@@ -20,7 +20,8 @@ from repro.core import (A100_SXM4_40G, DualLoopController, Request,
                         TPSFreqTable)
 from repro.models import init_params, init_cache, prefill, decode_step
 from repro.models.config import ModelConfig
-from repro.serving import EngineConfig, ServingCluster, ServingEngine
+from repro.serving import (EngineConfig, Server, ServingCluster,
+                           ServingEngine)
 from repro.serving.cluster import ClusterDispatcher
 
 KEY = jax.random.PRNGKey(0)
@@ -94,7 +95,7 @@ def test_handoff_after_prefill_is_token_exact(variant):
     if A.pager is not None:
         assert A.pager.pages_used == 0
     assert B.import_stream(ho)
-    B.run_until_drained()
+    Server(B).run()
     assert req.tokens == _reference_tokens(params, cfg, prompt, 10)
 
 
@@ -114,8 +115,8 @@ def test_handoff_mid_decode_is_token_exact():
         A.step(1)
     slot = next(s for s, st in A.active.items() if st.req.rid == 0)
     assert B.import_stream(A.export_stream(slot))
-    A.run_until_drained()
-    B.run_until_drained()
+    Server(A).run()
+    Server(B).run()
     for r, p in zip(reqs, prompts):
         assert r.tokens == _reference_tokens(params, cfg, p, 12)
 
@@ -141,7 +142,7 @@ def test_import_is_all_or_nothing():
     assert not B.active and len(B.free_slots) == B.ecfg.max_batch
     C = _engine(cfg, params)                      # ample pool: same handoff
     assert C.import_stream(ho)
-    C.run_until_drained()
+    Server(C).run()
     assert req.tokens == _reference_tokens(params, cfg, prompt, 4)
 
 
@@ -179,7 +180,7 @@ def test_seeded_sampled_handoff_mid_decode_is_draw_exact():
                   sampling=sp)
     colo = _engine(cfg, params)
     colo.submit(ref, prompt)
-    colo.run_until_drained()
+    Server(colo).run()
 
     req = Request(rid=0, arrival=0.0, prompt_len=21, output_len=14,
                   sampling=sp)
@@ -192,7 +193,7 @@ def test_seeded_sampled_handoff_mid_decode_is_draw_exact():
     ho = A.export_stream(next(iter(A.active)))
     assert ho.rng_lane is not None and ho.sampling is sp
     assert B.import_stream(ho)
-    B.run_until_drained()
+    Server(B).run()
     assert req.tokens == ref.tokens
 
 
@@ -211,7 +212,7 @@ def test_unseeded_sampled_handoff_keeps_the_exporters_lane():
                   sampling=sp)
     colo = _engine(cfg, params)          # seed 0
     colo.submit(ref, prompt)
-    colo.run_until_drained()
+    Server(colo).run()
 
     req = Request(rid=3, arrival=0.0, prompt_len=12, output_len=10,
                   sampling=sp)
@@ -221,39 +222,40 @@ def test_unseeded_sampled_handoff_keeps_the_exporters_lane():
     for _ in range(3):
         A.step(1)
     assert B.import_stream(A.export_stream(next(iter(A.active))))
-    B.run_until_drained()
+    Server(B).run()
     assert req.tokens == ref.tokens
 
 
 def test_handoff_snapshots_exporter_resolved_defaults():
-    """A stream that *inherits* its sampling mode from the exporter's
-    EngineConfig defaults (temperature=None) must keep that mode on an
-    adopter with different defaults: export snapshots the resolved config
-    into the handoff instead of letting the adopter re-resolve None."""
+    """Export snapshots the *resolved* sampling config into the handoff:
+    a request submitted with ``temperature=None`` (greedy, the universal
+    default — engine-global sampling shims are gone) must arrive on the
+    adopter as a concrete ``temperature=0.0``, never as ``None`` left for
+    the importer to interpret."""
     from repro.core import SamplingParams
     cfg = _cfg("full")
     params = init_params(KEY, cfg)
     rng = np.random.default_rng(29)
     prompt = rng.integers(0, cfg.vocab_size, size=14)
-    sp = SamplingParams(max_tokens=10, seed=21)   # temperature inherited
+    sp = SamplingParams(max_tokens=10, seed=21)   # temperature=None -> greedy
 
     ref = Request(rid=0, arrival=0.0, prompt_len=14, output_len=10,
                   sampling=sp)
-    colo = _engine(cfg, params, greedy=False, temperature=0.8)
+    colo = _engine(cfg, params)
     colo.submit(ref, prompt)
-    colo.run_until_drained()
+    Server(colo).run()
 
     req = Request(rid=0, arrival=0.0, prompt_len=14, output_len=10,
                   sampling=sp)
-    A = _engine(cfg, params, greedy=False, temperature=0.8)
-    B = ServingEngine(cfg, params=params, seed=55, ecfg=_ecfg())  # greedy
+    A = _engine(cfg, params)
+    B = ServingEngine(cfg, params=params, seed=55, ecfg=_ecfg())
     A.submit(req, prompt)
     for _ in range(3):
         A.step(1)
     ho = A.export_stream(next(iter(A.active)))
-    assert ho.sampling.temperature == 0.8         # resolved, not None
+    assert ho.sampling.temperature == 0.0         # resolved, not None
     assert B.import_stream(ho)
-    B.run_until_drained()
+    Server(B).run()
     assert req.tokens == ref.tokens
 
 
@@ -273,7 +275,7 @@ def test_preempt_recompute_resume_replays_identical_draws():
                   sampling=sp)
     smooth = _engine(cfg, params)
     smooth.submit(ref, prompt)
-    smooth.run_until_drained()
+    Server(smooth).run()
 
     req = Request(rid=0, arrival=0.0, prompt_len=18, output_len=16,
                   sampling=sp)
@@ -284,7 +286,7 @@ def test_preempt_recompute_resume_replays_identical_draws():
     emitted_before = list(req.tokens)
     assert eng._preempt_for_pages()      # youngest (only) stream evicted
     assert req.state.name == "QUEUED" and eng._preempted == 1
-    eng.run_until_drained()
+    Server(eng).run()
     assert req.tokens[:len(emitted_before)] == emitted_before
     assert req.tokens == ref.tokens
 
@@ -322,13 +324,14 @@ def test_cluster_matches_colocated_engine_tokens(governor):
     eng = _engine(cfg, params)
     for r, p in zip(ref, prompts):
         eng.submit(r, p)
-    eng.run_until_drained()
+    Server(eng).run()
 
     cl = ServingCluster(cfg, n_prefill=1, n_decode=1, params=params,
                         ecfg=_ecfg(governor=governor))
     for r, p in zip(reqs, prompts):
         cl.submit(r, p)
-    st = cl.run_until_drained()
+    Server(cl).run()
+    st = cl.stats()
     assert st["completed"] == len(reqs)
     for a, b in zip(ref, reqs):
         assert a.tokens == b.tokens
@@ -346,7 +349,8 @@ def test_cluster_role_constraints_and_energy_split():
                         ecfg=_ecfg(governor="greenllm"))
     for r, p in zip(reqs, prompts):
         cl.submit(r, p)
-    st = cl.run_until_drained()
+    Server(cl).run()
+    st = cl.stats()
     by_role = {row["role"]: row for row in st["replicas"]}
     assert by_role["prefill"]["decode_tokens"] == 0
     assert by_role["prefill"]["prefill_tokens"] > 0
@@ -373,7 +377,8 @@ def test_cluster_slo_metrics_report_per_class():
                         ecfg=_ecfg(governor="greenllm"))
     for r, p in zip(reqs, prompts):
         cl.submit(r, p)
-    st = cl.run_until_drained()
+    Server(cl).run()
+    st = cl.stats()
     assert 0.0 <= st["ttft_pass"] <= 1.0 and 0.0 <= st["tbt_pass"] <= 1.0
     assert "SM" in st["p90_ttft_s"]          # all mini-trace prompts short
     assert all(r.cls == "SM" for r in reqs)
@@ -418,14 +423,15 @@ def test_colocated_cluster_is_the_single_engine_baseline():
                         params=params, ecfg=_ecfg(governor="defaultnv"))
     for r, p in zip(reqs, prompts):
         cl.submit(r, p)
-    st = cl.run_until_drained()
+    Server(cl).run()
+    st = cl.stats()
     assert st["completed"] == len(reqs) and st["handoffs"] == 0
     ref = [Request(rid=r.rid, arrival=0.0, prompt_len=r.prompt_len,
                    output_len=r.output_len) for r in reqs]
     eng = _engine(cfg, params)
     for r, p in zip(ref, prompts):
         eng.submit(r, p)
-    eng.run_until_drained()
+    Server(eng).run()
     for a, b in zip(ref, reqs):
         assert a.tokens == b.tokens
 
@@ -451,7 +457,8 @@ def test_no_request_prefills_before_its_arrival():
                         plant_cfg=big_plant, ecfg=_ecfg(governor="greenllm"))
     for r, p in zip(reqs, prompts):
         cl.submit(r, p)
-    st = cl.run_until_drained()
+    Server(cl).run()
+    st = cl.stats()
     assert st["completed"] == len(reqs)
     for r in reqs:
         assert r.first_token >= r.arrival - 1e-9, (r.rid, r.ttft)
@@ -507,5 +514,5 @@ def test_engine_feeds_occupancy_to_controller():
     rng = np.random.default_rng(1)
     req = Request(rid=0, arrival=0.0, prompt_len=16, output_len=8)
     eng.submit(req, rng.integers(0, cfg.vocab_size, size=16))
-    eng.run_until_drained()
+    Server(eng).run()
     assert len(eng.controller.occ_meter) > 0

@@ -1,0 +1,385 @@
+"""Fault-tolerance tests: deterministic fault injection (``serving.faults``),
+crash recovery with token-exact replay, handoff-retry backoff, page-pressure
+spikes, deadline-aware load shedding, submit/cancel storms, and the
+``Server`` watchdog (per-request wall budgets + stuck-backend detection).
+
+The recovery guarantee under test is the strong one: killing a replica
+mid-decode and recomputing its streams from the prompt on survivors yields
+token sequences *bit-identical* to the uninterrupted run — greedy rows
+because f32 decode rows are batch-independent, seeded sampled rows because
+the per-stream RNG lane is pinned at first admission and every draw is
+``fold_in(lane, position)`` (pure in position, so replay never skews it).
+Equivalence runs therefore pin ``cache_dtype="float32"`` and
+``governor="defaultnv"`` like tests/test_cluster.py.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Request, RequestState, SamplingParams
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serving import (EngineConfig, FaultPlan, HandoffFailure,
+                           PagePressureSpike, ReplicaKill, Server,
+                           ServingCluster, ServingEngine, WatchdogConfig)
+
+KEY = jax.random.PRNGKey(0)
+MAXLEN = 96
+
+CFG = ModelConfig(name="tf-full", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+                  d_ff=128, vocab_size=128, dtype="float32", max_seq=512)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(KEY, CFG)
+
+
+def _ecfg(**kw):
+    kw.setdefault("cache_dtype", "float32")
+    kw.setdefault("governor", "defaultnv")
+    kw.setdefault("max_batch", 4)
+    return EngineConfig(max_len=MAXLEN, paged=True, **kw)
+
+
+def _cluster(params, faults=None, n_decode=2, **kw):
+    return ServingCluster(CFG, n_prefill=1, n_decode=n_decode, params=params,
+                          ecfg=_ecfg(**kw), faults=faults)
+
+
+def _mixed_requests(n=6, seed=1, max_tokens=10):
+    """Half greedy, half seeded-sampled — recovery must replay both."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, CFG.vocab_size,
+                            size=int(rng.integers(8, 24))) for _ in range(n)]
+    sps = [SamplingParams(max_tokens=max_tokens, temperature=0.7,
+                          seed=100 + i) if i % 2 else
+           SamplingParams(max_tokens=max_tokens) for i in range(n)]
+    return prompts, sps
+
+
+def _run_cluster(params, faults=None, n=6, n_decode=2):
+    cl = _cluster(params, faults=faults, n_decode=n_decode)
+    srv = Server(cl)
+    prompts, sps = _mixed_requests(n)
+    handles = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+    rep = srv.run()
+    return cl, rep, handles
+
+
+# -- the fault plan itself -----------------------------------------------------
+
+def test_faultplan_from_seed_is_deterministic():
+    kw = dict(horizon=2.0, replicas=["prefill0", "decode0", "decode1"],
+              n_kills=1, n_handoff_failures=2, n_pressure_spikes=1)
+    a = FaultPlan.from_seed(7, **kw)
+    b = FaultPlan.from_seed(7, **kw)
+    assert a.events == b.events
+    assert a.events != FaultPlan.from_seed(8, **kw).events
+    # kills never target the first replica: something must survive
+    kills = [e for e in a.events if isinstance(e, ReplicaKill)]
+    assert kills and all(k.replica != "prefill0" for k in kills)
+
+
+def test_faultplan_reset_replays_identically():
+    plan = FaultPlan([ReplicaKill(at=0.1, replica="d0"),
+                      HandoffFailure(at=0.0, until=1.0, count=2)])
+    assert [k.replica for k in plan.due_kills(0.5)] == ["d0"]
+    assert plan.due_kills(0.5) == []                 # fired once
+    assert plan.fail_import("d1", 0, 0.2) is True
+    assert plan.fail_import("d1", 1, 0.3) is True
+    assert plan.fail_import("d1", 2, 0.4) is False   # budget consumed
+    log_first = list(plan.log)
+    plan.reset()
+    assert plan.log == []
+    assert [k.replica for k in plan.due_kills(0.5)] == ["d0"]
+    assert plan.fail_import("d1", 0, 0.2) is True
+    assert len(plan.log) == 2 and plan.log == log_first[:2]
+
+
+def test_faultplan_rejects_unknown_events():
+    with pytest.raises(TypeError, match="unknown fault event"):
+        FaultPlan(["kill decode1 please"])
+
+
+# -- crash recovery: the acceptance-criteria test ------------------------------
+
+def test_replica_kill_mid_decode_recovers_token_exact(params):
+    """Kill one decode replica mid-run: every stream it held is requeued and
+    recomputed from the prompt on survivors, and all tokens — greedy and
+    seeded-sampled — are bit-identical to the no-fault run.  The dead
+    replica's energy is frozen at the kill and the cluster roll-up still
+    conserves energy."""
+    _, healthy, h0 = _run_cluster(params)
+    assert healthy.completed == len(h0)
+    toks0 = [h.request.tokens for h in h0]
+
+    kill_at = 0.4 * healthy.duration_s
+    plan = FaultPlan([ReplicaKill(at=kill_at, replica="decode1")])
+    cl, rep, h1 = _run_cluster(params, faults=plan)
+
+    assert cl.kills and cl.kills[0][0] == "decode1"
+    assert rep.completed == len(h1)               # nobody lost
+    assert [h.request.tokens for h in h1] == toks0   # bit-identical
+    # energy: the dead row is frozen at its kill-time snapshot, and the
+    # per-replica rows still sum to the cluster total
+    dead = next(r for r in rep.replicas if r.name == "decode1")
+    # the kill is applied at the first step whose clock reading passes `at`
+    assert dead.alive is False and dead.killed_at >= kill_at
+    assert dead.killed_at == pytest.approx(cl.kills[0][1])
+    assert dead.energy_j == pytest.approx(cl.kills[0][2])
+    assert sum(r.energy_j for r in rep.replicas) == \
+        pytest.approx(rep.total_energy_j)
+
+
+def test_seeded_plan_kill_recovers_token_exact(params):
+    """Same guarantee driven through ``FaultPlan.from_seed`` — the seeded
+    schedule is replayable, so the faulty run is exactly reproducible."""
+    _, healthy, h0 = _run_cluster(params)
+    toks0 = [h.request.tokens for h in h0]
+    names = ["prefill0", "decode0", "decode1"]
+    plan = FaultPlan.from_seed(3, horizon=healthy.duration_s,
+                               replicas=names, n_kills=1,
+                               n_handoff_failures=1, n_pressure_spikes=0)
+    _, rep, h1 = _run_cluster(params, faults=plan)
+    assert rep.completed == len(h1)
+    assert [h.request.tokens for h in h1] == toks0
+    # and replaying the identical plan gives the identical outcome
+    plan.reset()
+    _, rep2, h2 = _run_cluster(params, faults=plan)
+    assert [h.request.tokens for h in h2] == toks0
+    assert rep2.completed == rep.completed
+
+
+def test_kill_last_decode_replica_degrades_to_colocated(params):
+    """Killing the *only* decode replica must not strand prefilled streams:
+    the surviving prefill replica converts to colocated and finishes the
+    work (graceful degradation, not deadlock)."""
+    _, healthy, h0 = _run_cluster(params, n_decode=1)
+    toks0 = [h.request.tokens for h in h0]
+    kill_at = 0.3 * healthy.duration_s
+    plan = FaultPlan([ReplicaKill(at=kill_at, replica="decode0")])
+    cl, rep, h1 = _run_cluster(params, faults=plan, n_decode=1)
+    assert rep.completed == len(h1)
+    assert [h.request.tokens for h in h1] == toks0
+    assert cl._replica("prefill0").role == "colocated"
+
+
+# -- transient handoff failure: retry with backoff -----------------------------
+
+def test_handoff_import_failures_retry_and_complete(params):
+    """Injected import failures are retried with capped exponential backoff;
+    no stream is dropped and tokens stay exact."""
+    _, healthy, h0 = _run_cluster(params)
+    toks0 = [h.request.tokens for h in h0]
+    plan = FaultPlan([HandoffFailure(at=0.0, count=3)])
+    cl, rep, h1 = _run_cluster(params, faults=plan)
+    assert cl.import_retries >= 3                 # the injections were hit
+    assert ("import_fail" in {k for k, _, _ in plan.log})
+    assert rep.completed == len(h1) and rep.migrated == len(h1)
+    assert [h.request.tokens for h in h1] == toks0
+
+
+# -- page-pool pressure spike --------------------------------------------------
+
+def test_page_pressure_spike_is_released_and_pool_invariant_holds(params):
+    # fault times ride the virtual clock: scale them to the healthy makespan
+    _, healthy, _ = _run_cluster(params)
+    plan = FaultPlan([PagePressureSpike(at=0.1 * healthy.duration_s,
+                                        duration=0.4 * healthy.duration_s,
+                                        replica="decode0", pages=6)])
+    cl, rep, h1 = _run_cluster(params, faults=plan)
+    assert rep.completed == len(h1)
+    pg = cl._replica("decode0").engine.pager
+    assert pg.pages_reserved == 0                 # spike fully released
+    assert pg.pages_used == 0                     # chains freed at retire
+    assert pg.pages_used + pg.pages_free == pg.num_pages - 1
+    kinds = [k for k, _, _ in plan.log]
+    assert "pressure_on" in kinds and "pressure_off" in kinds
+
+
+# -- deadline-aware load shedding ----------------------------------------------
+
+def test_oversubscribed_storm_sheds_only_past_deadline(params):
+    """A 2x-oversubscribed arrival storm (everything lands in one block
+    window): requests whose deadline has passed by the time they reach the
+    head of the queue are SHED — and only those — while the run never
+    stalls and the cluster roll-up still conserves energy."""
+    cl = _cluster(params, n_decode=1)
+    srv = Server(cl)
+    rng = np.random.default_rng(5)
+    generous, tight = [], []
+    for i in range(16):                 # 2x the 4+4 slot capacity
+        p = rng.integers(0, CFG.vocab_size, size=10)
+        # generous deadlines first: they fill the slots, so the tight ones
+        # are all past-deadline by the time a slot frees up
+        if i < 8:
+            generous.append(srv.submit(p, SamplingParams(max_tokens=6),
+                                       deadline=1e9))
+        else:
+            # past before the first slot can possibly free up (the tiny test
+            # model's virtual clock advances ~microseconds per step)
+            tight.append(srv.submit(p, SamplingParams(max_tokens=6),
+                                    deadline=1e-7))
+    rep = srv.run()                     # completing at all == no stall
+    assert all(h.state is RequestState.FINISHED for h in generous)
+    assert all(h.state is RequestState.SHED for h in tight)
+    assert rep.completed == len(generous) and rep.shed == len(tight)
+    shed_rows = [r for r in rep.requests if r.state is RequestState.SHED]
+    assert len(shed_rows) == len(tight)
+    assert all(r.deadline_ok is False for r in shed_rows)
+    assert sum(r.energy_j for r in rep.replicas) == \
+        pytest.approx(rep.total_energy_j)
+
+
+def test_simulator_sheds_past_deadline_like_the_engine():
+    """Deadline-aware admission has simulator parity: the discrete-event
+    backend sheds past-deadline queue heads with the same terminal state."""
+    from repro.core import A100_SXM4_40G
+    from repro.sim import ReplayConfig, build_simulator
+    from repro.configs import get_config
+    sim = build_simulator(get_config("qwen2-1.5b"), A100_SXM4_40G,
+                          ReplayConfig(governor="defaultnv"))
+    srv = Server(sim)
+    keep = [srv.submit(512, SamplingParams(max_tokens=16), arrival=0.0,
+                       deadline=1e9) for _ in range(4)]
+    late = [srv.submit(512, SamplingParams(max_tokens=16), arrival=5.0,
+                       deadline=1.0) for _ in range(4)]
+    rep = srv.run()
+    assert all(h.state is RequestState.FINISHED for h in keep)
+    assert all(h.state is RequestState.SHED for h in late)
+    assert rep.shed == len(late)
+    assert all(r.deadline_ok is False for r in rep.requests
+               if r.state is RequestState.SHED)
+
+
+# -- storms: no stalls, no leaks -----------------------------------------------
+
+def _pool_at_baseline(eng):
+    assert eng.pager.pages_used == 0
+    assert sorted(eng.free_slots) == list(range(eng.ecfg.max_batch))
+    assert not eng.active and not eng.prefilling
+
+
+def test_arrival_storm_in_one_block_window_drains_clean(params):
+    """Hundreds of submits landing at the same arrival instant: the engine
+    admits in waves, never stalls, and retires every stream with the pool
+    back at baseline."""
+    eng = ServingEngine(CFG, params=params, ecfg=_ecfg())
+    srv = Server(eng)
+    rng = np.random.default_rng(7)
+    handles = [srv.submit(rng.integers(0, CFG.vocab_size, size=8),
+                          SamplingParams(max_tokens=4))
+               for _ in range(200)]
+    rep = srv.run()
+    assert rep.completed == len(handles)
+    assert all(h.state is RequestState.FINISHED for h in handles)
+    _pool_at_baseline(eng)
+
+
+def test_cancel_storm_leaks_nothing_and_survivors_are_exact(params):
+    """Hundreds of submits with a large interleaved cancel wave: no leaked
+    slots or page chains, and every surviving greedy stream emits exactly
+    the tokens of the storm-free run (f32 greedy rows are
+    batch-composition-independent)."""
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, CFG.vocab_size, size=10) for _ in range(120)]
+
+    def run(cancel):
+        eng = ServingEngine(CFG, params=params, ecfg=_ecfg())
+        srv = Server(eng)
+        hs = [srv.submit(p, SamplingParams(max_tokens=6)) for p in prompts]
+        if cancel:
+            for h in hs[::3]:
+                h.cancel()              # a third die in the queue
+            srv._pump()
+            for h in hs[1::3]:
+                h.cancel()              # a third die queued or in flight
+        srv.run()
+        return eng, hs
+
+    eng, hs = run(cancel=True)
+    _pool_at_baseline(eng)
+    st = eng.stats()
+    assert st["completed"] + st["cancelled"] == len(prompts)
+    assert st["cancelled"] >= len(prompts) // 3
+    survivors = [h.request.tokens for h in hs[2::3]
+                 if h.state is RequestState.FINISHED]
+    _, clean = run(cancel=False)
+    clean_toks = [h.request.tokens for h in clean[2::3]]
+    assert survivors == clean_toks[:len(survivors)]
+    assert len(survivors) == len(clean_toks)      # third wave untouched
+
+
+# -- the Server watchdog -------------------------------------------------------
+
+def test_watchdog_fails_requests_over_wall_budget(params):
+    """A request that exceeds its per-request wall budget (on the backend's
+    virtual clock) is failed cleanly mid-run: FAILED terminal state, slot
+    and pages released, tokens already produced stay readable, and the
+    report scores it."""
+    eng = ServingEngine(CFG, params=params,
+                        ecfg=_ecfg(max_batch=2, decode_block=4))
+    srv = Server(eng, watchdog=WatchdogConfig(request_budget_s=1e-3))
+    rng = np.random.default_rng(11)
+    h = srv.submit(rng.integers(0, CFG.vocab_size, size=8),
+                   SamplingParams(max_tokens=64))
+    rep = srv.run()
+    assert h.state is RequestState.FAILED
+    assert len(h.request.tokens) < 64             # it was cut short...
+    assert list(h.tokens()) == h.request.tokens   # ...but stays readable
+    assert rep.failed == 1 and rep.completed == 0
+    _pool_at_baseline(eng)
+
+
+def test_watchdog_budget_spares_requests_within_budget(params):
+    eng = ServingEngine(CFG, params=params, ecfg=_ecfg())
+    srv = Server(eng, watchdog=WatchdogConfig(request_budget_s=1e9))
+    h = srv.submit(np.arange(8), SamplingParams(max_tokens=6))
+    rep = srv.run()
+    assert h.state is RequestState.FINISHED and rep.failed == 0
+
+
+def test_watchdog_stops_a_stuck_backend():
+    """A backend that claims work but makes no progress (clock and token
+    counts frozen) is declared stuck after ``stall_rounds`` pump rounds:
+    in-flight requests are failed, the driver loop stops instead of
+    spinning forever."""
+
+    class Stuck:
+        def submit(self, req, prompt_tokens=None):
+            self.req = req
+
+        def has_work(self):
+            return True
+
+        def step(self):
+            pass
+
+        def drain_events(self):
+            return []
+
+        def cancel(self, rid):
+            return False
+
+        def fail(self, rid):
+            self.req.state = RequestState.FAILED
+            return True
+
+        @property
+        def now(self):
+            return 0.0
+
+        def report(self):
+            return None
+
+    srv = Server(Stuck(), watchdog=WatchdogConfig(stall_rounds=5))
+    h = srv.submit(4, SamplingParams(max_tokens=4))
+    rounds = 0
+    while srv._pump():
+        rounds += 1
+        assert rounds < 100, "stall guard never tripped"
+    assert srv.stuck is True
+    assert rounds == 5
+    assert h.state is RequestState.FAILED

@@ -19,7 +19,7 @@ import pytest
 from repro.core import Request
 from repro.models import init_params, init_cache, prefill, decode_step
 from repro.models.config import ModelConfig
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import EngineConfig, Server, ServingEngine
 from repro.serving.pager import PageAllocator, SCRATCH_PAGE
 import repro.serving.engine as engine_mod
 
@@ -67,7 +67,7 @@ def _serve(eng, prompts, out_lens):
         r = Request(rid=i, arrival=0.0, prompt_len=len(p), output_len=o)
         reqs.append(r)
         eng.submit(r, p)
-    eng.run_until_drained()
+    Server(eng).run()
     return [r.tokens for r in reqs]
 
 
@@ -138,7 +138,7 @@ def test_chunked_prefill_hybrid_recurrent_state_survives_interleaving(variant):
     eng.step(1)                       # short stream decodes alone first
     r_long = Request(rid=1, arrival=0.0, prompt_len=37, output_len=8)
     eng.submit(r_long, p_long)       # chunks interleave with short's decode
-    eng.run_until_drained()
+    Server(eng).run()
     assert r_long.tokens == _reference_tokens(params, cfg, p_long, 8)
     assert r_short.tokens == _reference_tokens(params, cfg, p_short, 12)
 
@@ -202,7 +202,7 @@ def test_paged_capacity_exceeds_dense_envelope():
     pool_tokens = s["pages_total"] * ps
     dense_streams_at_equal_memory = pool_tokens // MAXLEN
     assert s["active"] == 4 > dense_streams_at_equal_memory
-    eng.run_until_drained()
+    Server(eng).run()
     s = eng.stats()
     assert s["completed"] == 4 and s["preempted"] == 0
     assert s["pages_used"] == 0          # chains freed at retire

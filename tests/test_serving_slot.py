@@ -15,7 +15,7 @@ from repro.core import Request
 from repro.models import (init_params, init_cache, prefill, prefill_into_slot,
                           decode_step)
 from repro.models.config import ModelConfig
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import EngineConfig, Server, ServingEngine
 import repro.serving.engine as engine_mod
 
 KEY = jax.random.PRNGKey(0)
@@ -73,7 +73,7 @@ def test_slot_path_matches_reference_mixed_positions(variant):
     for _ in range(5):        # r0 decodes alone; r1 joins at a later position
         eng.step(1)
     eng.submit(r1, p1)
-    eng.run_until_drained()
+    Server(eng).run()
 
     assert r0.tokens == _reference_tokens(params, cfg, p0, r0.output_len)
     assert r1.tokens == _reference_tokens(params, cfg, p1, r1.output_len)
@@ -96,7 +96,7 @@ def test_windowed_prompt_falls_back_to_reference_admission():
     eng.submit(r0, p0)
     eng.step(1)
     eng.submit(r1, p1)
-    eng.run_until_drained()
+    Server(eng).run()
     assert r0.tokens == _reference_tokens(params, cfg, p0, r0.output_len)
     assert r1.tokens == _reference_tokens(params, cfg, p1, r1.output_len)
 
@@ -116,7 +116,7 @@ def test_admission_allocates_no_fresh_cache(monkeypatch):
     for i in range(6):
         eng.submit(Request(rid=i, arrival=0.0, prompt_len=12, output_len=6),
                    rng.integers(0, cfg.vocab_size, size=12))
-    eng.run_until_drained()
+    Server(eng).run()
     assert calls == []
 
 
@@ -155,7 +155,7 @@ def test_stats_counts_finished_not_started():
     assert s["completed"] == 0
     assert s["active"] == 3
     assert s["pending"] == 0
-    eng.run_until_drained()
+    Server(eng).run()
     s = eng.stats()
     assert s["completed"] == 3
     assert s["active"] == 0
@@ -175,7 +175,7 @@ def test_bucket_list_covers_truncation_cap(monkeypatch):
     monkeypatch.setattr(engine_mod, "init_cache",
                         lambda *a, **k: calls.append(a) or init_cache(*a, **k))
     eng.submit(Request(rid=0, arrival=0.0, prompt_len=90, output_len=4))
-    eng.run_until_drained()
+    Server(eng).run()
     assert calls == []          # 90 > 64 but <= 96: still slot admission
 
 
@@ -191,7 +191,8 @@ def test_stats_slo_parity_with_sim_metrics():
                     output_len=8) for i in range(5)]
     for r in reqs:
         eng.submit(r, rng.integers(0, cfg.vocab_size, size=r.prompt_len))
-    s = eng.run_until_drained()
+    Server(eng).run()
+    s = eng.stats()
     for key in ("ttft_pass", "tbt_pass", "p90_ttft_s", "p99_tbt_ms"):
         assert key in s
     assert 0.0 <= s["ttft_pass"] <= 1.0 and 0.0 <= s["tbt_pass"] <= 1.0
@@ -284,7 +285,8 @@ def test_wall_clock_mode_drains():
     eng = _engine(cfg, params, use_wall_clock=True)
     for i in range(3):
         eng.submit(Request(rid=i, arrival=0.0, prompt_len=10, output_len=12))
-    s = eng.run_until_drained()
+    Server(eng).run()
+    s = eng.stats()
     assert s["completed"] == 3
     assert s["vtime_s"] > 0 and s["p95_tbt_ms"] > 0
 
@@ -297,5 +299,6 @@ def test_legacy_engine_still_drains():
     eng = _engine(cfg, params, slot_native=False)
     for i in range(4):
         eng.submit(Request(rid=i, arrival=0.0, prompt_len=10, output_len=8))
-    s = eng.run_until_drained()
+    Server(eng).run()
+    s = eng.stats()
     assert s["completed"] == 4
