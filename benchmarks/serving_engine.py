@@ -218,6 +218,53 @@ def bench_mixed_sampling(cfg, params, *, batch, governor, nreq, out_len):
     return nreq * out_len / dt, greedy / nreq
 
 
+def bench_metrics_overhead(cfg, params, *, batch, governor, nreq, out_len):
+    """Serve the same burst with no observability sinks and with the full
+    PR-7 surface installed (MetricsRegistry + Tracer through ``Server``).
+
+    Hard-asserts the structural zero-overhead invariant first — identical
+    host-drain counts, virtual clock and token totals between the two runs
+    (observability must ride existing sync points, never add one) — then
+    measures wall-clock overhead as median-of-3 per mode and asserts it
+    stays under 2%.  Returns (plain tok/s, instrumented tok/s, registry).
+    """
+    from repro.core import MetricsRegistry, SamplingParams, Tracer
+    from repro.serving import Server
+
+    def run(with_sinks):
+        eng = _engine(cfg, params, batch=batch, governor=governor,
+                      slot_native=True)
+        reg = MetricsRegistry(snapshot_min_dt=0.0) if with_sinks else None
+        tr = Tracer() if with_sinks else None
+        srv = Server(eng, metrics=reg, tracer=tr)
+        rng = np.random.default_rng(0)
+        for _ in range(nreq):
+            srv.submit(rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(8, 100))),
+                       SamplingParams(max_tokens=out_len))
+        t0 = time.perf_counter()
+        rep = srv.run()
+        jax.block_until_ready(eng._tok)
+        return time.perf_counter() - t0, eng, reg, rep
+
+    run(False)                                 # compile warmup
+    _, e0, _, r0 = run(False)
+    _, e1, reg, r1 = run(True)
+    assert e1._host_drains == e0._host_drains, \
+        f"observability added host syncs: {e1._host_drains} vs " \
+        f"{e0._host_drains}"
+    assert abs(e1.vtime - e0.vtime) < 1e-9, "virtual clocks diverged"
+    assert (r1.decode_tokens, r1.completed) == \
+        (r0.decode_tokens, r0.completed), "served work diverged"
+    t_plain = min(run(False)[0] for _ in range(3))
+    t_inst = min(run(True)[0] for _ in range(3))
+    overhead = t_inst / t_plain - 1.0
+    assert overhead < 0.02, \
+        f"metrics/tracing overhead {overhead * 100:.2f}% exceeds 2%"
+    total = nreq * out_len
+    return total / t_plain, total / t_inst, reg
+
+
 def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
     """Disaggregated 1 prefill + 1 decode cluster (GreenLLM per-phase DVFS)
     vs an equal-replica-count colocated max-frequency baseline on the same
@@ -255,7 +302,8 @@ def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
 
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                          batches=(1, 4, 8), governors=("greenllm", "defaultnv"),
-                         paged: bool = False, cluster: bool = False):
+                         paged: bool = False, cluster: bool = False,
+                         extras: dict = None):
     from repro.configs import get_config
     from repro.models import init_params
 
@@ -310,6 +358,19 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
             rows.extend(_paged_rows(cfg, params, gov=gov, b=b, steps=steps,
                                     nreq=nreq, n_admit=n_admit, warm2=warm2,
                                     dense_decode=dense_decode[b]))
+    if governors:
+        # observability overhead: no-sink vs instrumented serve (host-drain
+        # and token equality hard-asserted; wall overhead must stay <2%)
+        b = max(batches)
+        plain, inst, reg = bench_metrics_overhead(
+            cfg, params, batch=b, governor=governors[0], nreq=nreq,
+            out_len=32)
+        rows.append((f"engine_serve_b{b}_{governors[0]}_metrics",
+                     1e6 / inst,
+                     f"{inst:.0f}tok/s;overhead="
+                     f"{(plain / inst - 1) * 100:.2f}%"))
+        if extras is not None:
+            extras["metrics_snapshot"] = reg.flat()
     if cluster:
         # 2-replica disaggregated mini-trace vs 2x-colocated max-freq
         tps, eratio, handoffs, preempted = bench_cluster(
@@ -380,9 +441,11 @@ def main():
     batches = tuple(int(x) for x in args.batches.split(","))
     # --governors "" runs only the standalone scenarios (e.g. --cluster)
     governors = tuple(g for g in args.governors.split(",") if g)
+    extras = {}
     rows = bench_serving_engine(
         quick=args.quick, arch=args.arch, batches=batches,
-        governors=governors, paged=args.paged, cluster=args.cluster)
+        governors=governors, paged=args.paged, cluster=args.cluster,
+        extras=extras)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -396,6 +459,10 @@ def main():
             "backend": jax.default_backend(),
             "rows": [{"name": n, "us_per_call": round(us, 1),
                       "derived": d} for n, us, d in rows],
+            # final registry state of the instrumented serve run: makes the
+            # baseline diffable on served work, not just wall time
+            **({"metrics_snapshot": extras["metrics_snapshot"]}
+               if "metrics_snapshot" in extras else {}),
         }
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=2)

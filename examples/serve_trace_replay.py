@@ -26,7 +26,8 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import SamplingParams
+from repro.core import (MetricsRegistry, SamplingParams, Tracer,
+                        read_timeline_jsonl)
 from repro.data import get_trace
 from repro.serving import (EngineConfig, FaultPlan, HandoffFailure,
                            ReplicaKill, Server, ServingCluster,
@@ -79,7 +80,10 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
         events.append(HandoffFailure(at=0.0, count=handoff_failures))
     plan = FaultPlan(events) if events else None
 
-    cl, srv = build("greenllm", faults=plan, n_prefill=1, n_decode=1)
+    reg = MetricsRegistry(snapshot_min_dt=0.002)
+    tr = Tracer()
+    cl, srv = build("greenllm", faults=plan, n_prefill=1, n_decode=1,
+                    metrics=reg, tracer=tr)
     rep = replay_burst(srv, trace, smoke.vocab_size, max_len=max_len)
     assert rep.completed == base.completed == len(trace), \
         "cluster must drain the burst completely (zero stalls)"
@@ -118,6 +122,55 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
         # replicas stop billing at their kill snapshot)
         assert abs(sum(r.energy_j for r in rep.replicas)
                    - rep.total_energy_j) < 1e-6 * max(rep.total_energy_j, 1)
+
+    # --- replayable observability timeline ---------------------------------
+    # every metric is queryable at any virtual-clock instant, and every
+    # frequency change across the timeline has a logged decision reason
+    import os
+    import tempfile
+    out = os.path.join(tempfile.gettempdir(),
+                       "cluster_metrics.timeline.jsonl")
+    n_snap = reg.write_timeline_jsonl(out)
+    assert read_timeline_jsonl(out) == reg.timeline, \
+        "timeline JSONL must round-trip exactly"
+    mid = rep.duration_s / 2
+    snap = reg.query(mid)
+
+    def at(prefix, replica):
+        return next((v for k, v in snap.items() if k.startswith(prefix)
+                     and f'replica="{replica}"' in k), float("nan"))
+
+    print(f"observability: {n_snap} snapshots -> {out}  "
+          f"({len(tr)} trace records)")
+    print(f"state @ t={mid:.3f}s (mid-run query):")
+    for row in rep.replicas:
+        e_mid = sum(v for k, v in snap.items()
+                    if k.startswith("greenllm_energy_joules_total")
+                    and f'replica="{row.name}"' in k)
+        f_mid = at("greenllm_frequency_mhz", row.name)
+        occ_mid = at("greenllm_page_occupancy", row.name)
+        p99_mid = at("greenllm_tbt_p99_seconds", row.name)
+        print(f"  {row.name:10s} f={f_mid:6.0f}MHz E={e_mid:8.1f}J "
+              f"occ={occ_mid * 100:5.1f}% p99_tbt={p99_mid * 1e3:.1f}ms")
+    audited = 0
+    for row in rep.replicas:
+        key = f'greenllm_frequency_mhz{{replica="{row.name}"}}'
+        series = reg.series(key)
+        phase = "prefill" if row.role == "prefill" else "decode"
+        for (t0, v0), (t1, v1) in zip(series, series[1:]):
+            if v1 == v0:
+                continue
+            d = tr.decision_at(t1, row.name, phase=phase)
+            assert d is not None, \
+                f"frequency change on {row.name} @ {t1:.4f}s has no " \
+                f"logged DVFS decision"
+            assert abs(d.freq_mhz - v1) < 1e-6, \
+                f"{row.name} @ {t1:.4f}s: gauge {v1} != decided " \
+                f"{d.freq_mhz} ({d.reason})"
+            audited += 1
+    reasons = sorted({d.reason for d in tr.decisions()})
+    print(f"DVFS audit: {audited} frequency changes, each with a logged "
+          f"reason; reasons seen: {reasons}")
 
 
 def main():

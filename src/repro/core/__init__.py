@@ -9,4 +9,7 @@ from .prefill_optimizer import PrefillOptimizer, deadline_from_queue
 from .decode_controller import (DualLoopController, DecodeControllerConfig,
                                 MaxFreqController, FixedFreqController)
 from .telemetry import TPSMeter, TBTMeter, OccupancyMeter, SlidingWindow
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      parse_prometheus, read_timeline_jsonl)
+from .tracing import DvfsDecision, Span, Tracer, read_jsonl as read_trace_jsonl
 from . import controller_jax

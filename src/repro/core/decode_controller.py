@@ -14,6 +14,14 @@ Band adaptation (every 6 s): if >80 % of fine adjustments saturated a band
 bound, shift the lookup entry one step in that direction (§3.3.3).
 
 All decisions happen outside the GPU/TPU execution path.
+
+Decision logging: installing ``on_decision`` (a ``core.tracing.Tracer.bind``
+callback, signature ``cb(t, phase, freq_mhz, reason, **inputs)``) makes
+every tick that moves — or deliberately holds — the clock auditable: the
+coarse loop logs band shifts and occupancy boosts, the fine loop logs every
+tick with its p95-TBT margin, band adaptation logs table shifts.  Reason
+codes are stable strings (see README "Observability").  ``on_decision is
+None`` (the default) skips every site — zero overhead when untraced.
 """
 from __future__ import annotations
 
@@ -68,6 +76,8 @@ class DualLoopController:
         self._next_adapt = cfg.adapt_period
         self._adjust_events: List[int] = []   # +1 hit band top, -1 hit bottom, 0 inside
         self.history: List[Tuple[float, float, float]] = []  # (t, freq, tps)
+        # DVFS decision log sink: cb(t, phase, freq_mhz, reason, **inputs)
+        self.on_decision = None
 
     # -- telemetry ingestion ----------------------------------------------------
     def record_tokens(self, t: float, n: int, tbt: float) -> None:
@@ -87,7 +97,7 @@ class DualLoopController:
                 self._coarse_tick(self._next_coarse)
                 self._next_coarse += self.cfg.coarse_period
             if self._next_adapt <= self._next_fine:
-                self._adapt_tick()
+                self._adapt_tick(self._next_adapt)
                 self._next_adapt += self.cfg.adapt_period
             self._fine_tick(self._next_fine)
             self._next_fine += self.cfg.fine_period
@@ -96,6 +106,9 @@ class DualLoopController:
     def _coarse_tick(self, t: float) -> None:
         tps = self.tps_meter.tps(t)
         bucket = self.table.bucket(tps)
+        prev_band, prev_freq = self.band, self.freq
+        adopted = None        # reason if the TPS bucket moved the band
+        boosted = None        # reason if memory pressure moved the band
         if bucket == self._bucket:
             self._pending_bucket = None
             self._pending_count = 0
@@ -106,23 +119,29 @@ class DualLoopController:
                 self.band = self.table.band(bucket, self.hw.f_min, self.hw.f_max)
                 self._pending_bucket = None
                 self._pending_count = 0
+                adopted = "tps_band_shift"
         else:
             self._pending_bucket = bucket
             self._pending_count = 1
         if self._bucket is None:  # first observation: adopt immediately
             self._bucket = bucket
             self.band = self.table.band(bucket, self.hw.f_min, self.hw.f_max)
+            adopted = "tps_band_init"
         # memory pressure: the band is the table's entry for the current
         # bucket plus a decaying boost — one f_step up per pressured coarse
         # tick, one down per calm tick — so decode drains streams before the
         # pool preempts, and the band returns to the profiled value once the
         # episode ends (no permanent ratchet, no table corruption).  The
         # fine loop still rules within the (possibly raised) band.
+        occ = float("nan")
         if len(self.occ_meter):
-            if self.occ_meter.mean(t) > self.cfg.occ_high:
+            occ = self.occ_meter.mean(t)  # nan if the window just drained
+            if occ > self.cfg.occ_high:
                 self._occ_boost += 1
+                boosted = "occ_pressure"
             elif self._occ_boost:
                 self._occ_boost -= 1
+                boosted = "occ_decay"
             if self._bucket is not None:
                 s, fm = self.hw.f_step, self.hw.f_max
                 lo, mid, hi = self.table.band(self._bucket, self.hw.f_min, fm)
@@ -136,10 +155,21 @@ class DualLoopController:
                 self.freq = float(np.clip(self.freq, self.band[0],
                                           self.band[2]))
         self.history.append((t, self.freq, tps))
+        if self.on_decision is not None and (
+                adopted or boosted or self.band != prev_band
+                or self.freq != prev_freq):
+            self.on_decision(
+                t, "decode", self.freq,
+                adopted or boosted or "band_reclip",
+                tps=tps, bucket=self._bucket, occ=occ,
+                occ_boost=self._occ_boost,
+                band_lo=self.band[0], band_hi=self.band[2])
 
     def _fine_tick(self, t: float) -> None:
         p95 = self.tbt_meter.p95(t)
-        if p95 <= 0.0:
+        # nan-safe: an empty window is "no data", not "fast" — hold the
+        # clock rather than reading nan as a zero-latency green light
+        if not p95 > 0.0:
             return
         margin = p95 / self.cfg.tbt_slo
         lo, mid, hi = self.band
@@ -147,15 +177,22 @@ class DualLoopController:
         if margin > self.cfg.up_margin:
             new = min(self.freq + step, hi)
             self._adjust_events.append(+1 if new == hi else 0)
+            reason = "tbt_pressure_sat" if new == hi else "tbt_pressure"
         elif margin < self.cfg.down_margin:
             new = max(self.freq - step, lo)
             self._adjust_events.append(-1 if new == lo else 0)
+            reason = "tbt_slack_sat" if new == lo else "tbt_slack"
         else:
             new = self.freq
+            reason = "tbt_hold"
         # keep the set point inside the (possibly re-centred) band
         self.freq = float(np.clip(new, lo, hi))
+        if self.on_decision is not None:
+            self.on_decision(t, "decode", self.freq, reason,
+                             p95_tbt=p95, margin=margin,
+                             band_lo=lo, band_hi=hi)
 
-    def _adapt_tick(self) -> None:
+    def _adapt_tick(self, t: float) -> None:
         ev = self._adjust_events
         self._adjust_events = []
         if not ev or self._bucket is None:
@@ -165,11 +202,17 @@ class DualLoopController:
         down = sum(1 for e in ev if e < 0)
         if up / n > self.cfg.adapt_bias:
             self.table.shift(self._bucket, +1, self.hw.f_min, self.hw.f_max)
+            reason = "band_adapt_up"
         elif down / n > self.cfg.adapt_bias:
             self.table.shift(self._bucket, -1, self.hw.f_min, self.hw.f_max)
+            reason = "band_adapt_down"
         else:
             return
         self.band = self.table.band(self._bucket, self.hw.f_min, self.hw.f_max)
+        if self.on_decision is not None:
+            self.on_decision(t, "decode", self.freq, reason,
+                             saturated_up=up, saturated_down=down, ticks=n,
+                             band_lo=self.band[0], band_hi=self.band[2])
 
 
 class MaxFreqController:
@@ -179,6 +222,7 @@ class MaxFreqController:
         self.hw = hw
         self.freq = hw.f_max
         self.history: List[Tuple[float, float, float]] = []
+        self.on_decision = None   # never fires: the clock never moves
 
     def record_tokens(self, t, n, tbt):
         pass
@@ -196,6 +240,7 @@ class FixedFreqController:
     def __init__(self, hw: HardwareProfile, freq: float):
         self.hw = hw
         self.freq = float(freq)
+        self.on_decision = None   # never fires: the clock never moves
 
     def record_tokens(self, t, n, tbt):
         pass

@@ -44,23 +44,35 @@ class PrefillOptimizer:
     def choose_frequency(self, lengths: Sequence[int], D: float,
                          ladder: Optional[np.ndarray] = None
                          ) -> Tuple[float, dict]:
-        """Solve Eq. 14 over the discrete ladder."""
+        """Solve Eq. 14 over the discrete ladder.
+
+        The info dict always carries a stable ``reason`` code —
+        ``empty_queue`` (idle floor), ``infeasible_fmax`` (no ladder point
+        meets D; protect the SLO at f_max), or ``optimal`` (Eq. 14 argmin)
+        — plus the queue state, so every prefill clock choice is auditable
+        in the DVFS decision log."""
         ladder = self.hw.ladder() if ladder is None else np.asarray(ladder)
         if len(lengths) == 0:
             return float(ladder[0]), {"feasible": True, "busy": 0.0,
-                                      "energy": self.p_idle * D}
+                                      "energy": self.p_idle * D,
+                                      "reason": "empty_queue",
+                                      "n_jobs": 0, "D": float(D)}
         T_ref = self.t_ref_total(lengths)
         busy = T_ref * (self.latency_model.f_ref / ladder)
         feasible = busy <= D
         if not feasible.any():
             f = float(ladder[-1])
             return f, {"feasible": False, "busy": float(busy[-1]),
-                       "energy": float(self.energy_total(T_ref, D, f))}
+                       "energy": float(self.energy_total(T_ref, D, f)),
+                       "reason": "infeasible_fmax",
+                       "n_jobs": len(lengths), "D": float(D)}
         E = self.energy_total(T_ref, D, ladder)
         E = np.where(feasible, E, np.inf)
         i = int(np.argmin(E))
         return float(ladder[i]), {"feasible": True, "busy": float(busy[i]),
-                                  "energy": float(E[i])}
+                                  "energy": float(E[i]),
+                                  "reason": "optimal",
+                                  "n_jobs": len(lengths), "D": float(D)}
 
 
 def deadline_from_queue(queue_lengths: Sequence[int], slo_ttft: float,

@@ -11,13 +11,18 @@ trace, and print the shared typed ``ServingReport``.
   # (with optional --top-k / --top-p / --seed), the rest stay greedy
   PYTHONPATH=src python -m repro.launch.serve --mixed-sampling \
       --temperature 0.8 --top-k 40
+  # observability: Prometheus snapshot + metrics timeline + request trace
+  PYTHONPATH=src python -m repro.launch.serve --cluster \
+      --metrics-out /tmp/metrics.prom --trace-out /tmp/trace.jsonl \
+      --dashboard 0.25
 """
 import argparse
+import sys
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import SamplingParams
+from repro.core import MetricsRegistry, SamplingParams, Tracer
 from repro.serving import EngineConfig, Server, ServingCluster, ServingEngine
 
 
@@ -62,6 +67,44 @@ def workload(args, vocab):
                    int(rng.integers(16, 64)))
 
 
+class Dashboard:
+    """Periodic one-line stderr dashboard, driven by the event stream's
+    virtual timestamps — it fires when drained events cross the period
+    boundary (the backend's block cadence), never per token."""
+
+    def __init__(self, period: float, metrics: MetricsRegistry,
+                 out=sys.stderr):
+        self.period = period
+        self.metrics = metrics
+        self.out = out
+        self._next = period
+
+    def __call__(self, ev) -> None:
+        t = getattr(ev, "time", 0.0)
+        while t >= self._next:
+            self.line(self._next)
+            self._next += self.period
+
+    def line(self, t: float) -> None:
+        flat = self.metrics.flat()
+
+        def total(prefix, needle=""):
+            return sum(v for k, v in flat.items()
+                       if k.startswith(prefix) and needle in k)
+
+        freqs = {k.split('replica="')[1].rstrip('"}'): v
+                 for k, v in flat.items()
+                 if k.startswith("greenllm_frequency_mhz")}
+        p95 = max((v for k, v in flat.items()
+                   if k.startswith("greenllm_tbt_p95_seconds")),
+                  default=0.0)
+        fstr = " ".join(f"{n}={f:.0f}" for n, f in sorted(freqs.items()))
+        print(f"[serve t={t:8.3f}s] "
+              f"done={total('greenllm_requests_total', 'completed'):.0f} "
+              f"E={total('greenllm_energy_joules_total') / 1e3:.2f}kJ "
+              f"p95_tbt={p95 * 1e3:5.1f}ms MHz[{fstr}]", file=self.out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -98,11 +141,29 @@ def main(argv=None):
                          "the virtual clock)")
     ap.add_argument("--duration", type=float, default=60.0,
                     help="trace horizon in seconds (named traces only)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the Prometheus text exposition here at "
+                         "exit, plus the full metrics timeline next to it "
+                         "(<path>.timeline.jsonl)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle trace here as JSONL, "
+                         "plus a Chrome/Perfetto trace next to it "
+                         "(<path>.chrome.json)")
+    ap.add_argument("--dashboard", type=float, default=0.0,
+                    help="print a one-line stderr dashboard every N "
+                         "virtual seconds (0: off; implies a metrics "
+                         "registry)")
     args = ap.parse_args(argv)
 
     full = get_config(args.arch)
     smoke = full.smoke()
-    server = Server(build_backend(args, full, smoke))
+    metrics = MetricsRegistry(snapshot_min_dt=0.005) \
+        if args.metrics_out or args.dashboard > 0 else None
+    tracer = Tracer() if args.trace_out else None
+    on_event = Dashboard(args.dashboard, metrics) \
+        if args.dashboard > 0 else None
+    server = Server(build_backend(args, full, smoke), on_event=on_event,
+                    metrics=metrics, tracer=tracer)
     n = 0
     for arrival, prompt, max_tokens in workload(args, smoke.vocab_size):
         server.submit(prompt, sampling_for(args, n, max_tokens),
@@ -123,6 +184,18 @@ def main(argv=None):
               f"tok {row.prefill_tokens}/{row.decode_tokens} "
               f"handoffs {row.exported + row.imported} "
               f"clock {row.freq_mhz:.0f}MHz")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(metrics.render_prometheus())
+        lines = metrics.write_timeline_jsonl(
+            args.metrics_out + ".timeline.jsonl")
+        print(f"metrics: {args.metrics_out} "
+              f"(+{lines} timeline snapshots)", file=sys.stderr)
+    if args.trace_out:
+        n_rec = tracer.write_jsonl(args.trace_out)
+        tracer.write_chrome_trace(args.trace_out + ".chrome.json")
+        print(f"trace: {args.trace_out} ({n_rec} records; chrome trace "
+              f"next to it)", file=sys.stderr)
     assert rep.completed == n, "launcher burst must drain completely"
     return rep
 

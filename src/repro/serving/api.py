@@ -34,6 +34,7 @@ Design constraints inherited from the engine (ROADMAP invariants):
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, Iterator, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -55,6 +56,13 @@ class Backend(Protocol):
     is the backend's virtual-clock reading (what watchdog budgets compare
     against); ``report`` builds the shared typed report over everything
     served so far.
+
+    Two optional surfaces (every shipped backend has both; ``Server``
+    probes with ``hasattr``): ``install_observability(metrics, tracer)``
+    accepts a ``core.metrics.MetricsRegistry`` / ``core.tracing.Tracer``
+    pair, and ``evict(rid)`` drops a *terminal* request's per-request
+    bookkeeping (returning False while it is live) so long-lived servers
+    can bound memory (``Server(retain_reports=...)``).
     """
 
     def submit(self, req: Request,
@@ -169,10 +177,22 @@ class Server:
     backend to skip event buffering entirely (``backend.events_on``), so
     nobody pays for an observability surface nobody reads; handles keep
     streaming through their request token lists either way.
+
+    ``metrics`` / ``tracer`` (optional) are the pull-side observability
+    sinks — a ``core.metrics.MetricsRegistry`` and ``core.tracing.Tracer``
+    installed into the backend at construction: the backend publishes
+    gauges/counters/histograms and request-lifecycle spans at its block
+    cadence, and the registry's ``record_snapshot`` timeline makes any
+    metric queryable at any virtual-clock instant.  ``retain_reports``
+    bounds a long-lived server's memory: only the N most recently finished
+    requests keep handles and backend bookkeeping (older terminal requests
+    are evicted via ``Backend.evict`` and drop out of ``report()``).
     """
 
     def __init__(self, backend: Backend, on_event=None,
-                 watchdog: Optional[WatchdogConfig] = None):
+                 watchdog: Optional[WatchdogConfig] = None,
+                 metrics=None, tracer=None,
+                 retain_reports: Optional[int] = None):
         self.backend = backend
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
@@ -183,6 +203,22 @@ class Server:
         self.stuck = False          # set when the stall guard tripped
         if hasattr(backend, "events_on"):
             backend.events_on = on_event is not None
+        # pull-side observability: a MetricsRegistry / Tracer pair handed to
+        # the backend's install_observability (every shipped backend has
+        # one; both default None — the zero-overhead pattern)
+        self.metrics = metrics
+        self.tracer = tracer
+        if (metrics is not None or tracer is not None) \
+                and hasattr(backend, "install_observability"):
+            backend.install_observability(metrics, tracer)
+        # long-lived-server retention: with retain_reports=N, only the N
+        # most recently finished requests keep their handle / backend
+        # bookkeeping (request row, TBT records) — older terminal requests
+        # are evicted so a serve-forever process has bounded memory.
+        # Evicted requests no longer appear in report(); None retains all.
+        self._retain = retain_reports
+        self._seen_terminal: set = set()
+        self._terminal_order: deque = deque()
 
     # -- intake ----------------------------------------------------------------
     def submit(self, prompt, params: Optional[SamplingParams] = None, *,
@@ -233,10 +269,29 @@ class Server:
             return False
         self.backend.step()
         self._deliver(self.backend.drain_events())
+        if self._retain is not None:
+            self._retire()
         if self._watchdog is not None and not self._watch():
             self._deliver(self.backend.drain_events())
             return False
         return True
+
+    def _retire(self) -> None:
+        """Bound long-lived-server memory (``retain_reports``): record
+        newly-terminal requests in finish order, then evict the oldest
+        beyond the cap — the handle here and the per-request bookkeeping
+        in the backend (``Backend.evict``: request row, TBT records)."""
+        for rid, h in self._handles.items():
+            if h.done and rid not in self._seen_terminal:
+                self._seen_terminal.add(rid)
+                self._terminal_order.append(rid)
+        can_evict = hasattr(self.backend, "evict")
+        while len(self._terminal_order) > self._retain:
+            rid = self._terminal_order.popleft()
+            self._seen_terminal.discard(rid)
+            self._handles.pop(rid, None)
+            if can_evict:
+                self.backend.evict(rid)
 
     def _watch(self) -> bool:
         """Apply the watchdog policy after a pump round.  Returns False

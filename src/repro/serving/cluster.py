@@ -186,10 +186,17 @@ class Replica:
         """Move this replica's clock forward to ``t`` (waiting on an arrival
         or a migration), billing the gap at idle power.  Clocks never move
         backwards — the shared-clock invariant."""
-        gap = t - self.engine.vtime
+        e = self.engine
+        gap = t - e.vtime
         if gap > 0:
-            self.idle_j += gap * self.engine.plant.idle_power
-            self.engine.vtime = t
+            self.idle_j += gap * e.plant.idle_power
+            e.vtime = t
+            if e._m is not None:
+                # cluster idle is billed here, outside the engine's own
+                # idle meter — publish it directly so per-replica energy
+                # counters stay complete
+                e._m["e_idle"].inc(gap * e.plant.idle_power)
+                e._publish_metrics()
 
 
 class ServingCluster:
@@ -208,7 +215,8 @@ class ServingCluster:
                  hw: HardwareProfile = A100_SXM4_40G,
                  plant_cfg: ModelConfig = None,
                  slo: Optional[SLOConfig] = None, seed: int = 0,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 metrics=None, tracer=None):
         assert n_prefill + n_decode + n_colocated > 0
         assert (n_prefill > 0) == (n_decode > 0), \
             "disaggregated roles come in pairs (prefill output needs a " \
@@ -261,7 +269,7 @@ class ServingCluster:
                 plant_cfg=pcfg,
                 plant=PlantModel(cfg=pcfg, hw=hw, n_chips=1,
                                  seed=seed + 100 + idx),
-                controller=controller_for(role))
+                controller=controller_for(role), name=f"{role}{i}")
             self.replicas.append(Replica(f"{role}{i}", role, eng, classes))
 
         n_cls = self.dispatcher.num_classes
@@ -288,6 +296,14 @@ class ServingCluster:
         self.faults = faults
         self.kills: List[Tuple[str, float, float]] = []
         self.import_retries = 0
+        # observability: optional sinks fanned out to every replica engine;
+        # cluster-level events (faults, handoff retries, prefill DVFS) are
+        # emitted here because the engines cannot see them
+        self.metrics = None
+        self.tracer = None
+        self._m_faults = None
+        if metrics is not None or tracer is not None:
+            self.install_observability(metrics, tracer)
 
     @property
     def events_on(self) -> bool:
@@ -301,6 +317,23 @@ class ServingCluster:
     def events_on(self, value: bool) -> None:
         for r in self.replicas:
             r.engine.events_on = bool(value)
+
+    def install_observability(self, metrics=None, tracer=None) -> None:
+        """Install metrics/trace sinks on the cluster and every replica
+        engine (Backend observability surface — ``serving.api.Server``
+        calls this when built with sinks).  ``None`` leaves a sink
+        uninstalled; with neither installed every emission site reduces to
+        one ``is None`` check (the ``events_on`` zero-overhead pattern)."""
+        self.metrics = metrics
+        self.tracer = tracer
+        if metrics is not None:
+            self._m_faults = metrics.counter(
+                "greenllm_faults_total",
+                "Fault-tolerance events: replica kills, handoff retries "
+                "(injected or capacity), page-pressure on/off edges.",
+                ("replica", "kind"))
+        for r in self.replicas:
+            r.engine.install_observability(metrics, tracer)
 
     # -- intake ----------------------------------------------------------------
     def submit(self, req: Request,
@@ -350,6 +383,23 @@ class ServingCluster:
         terminal state."""
         return self._terminate(rid, RequestState.FAILED)
 
+    def evict(self, rid: int) -> bool:
+        """Backend protocol: drop a *terminal* request's bookkeeping — the
+        cluster-level request row plus every replica's per-request state
+        (request row, TBT records).  Returns False (and removes nothing)
+        while the request is still live; ``serving.api.Server`` calls this
+        to bound memory on long-lived servers."""
+        req = next((q for q in self.requests if q.rid == rid), None)
+        if req is not None and not req.state.terminal:
+            return False
+        found = False
+        for r in self.replicas:
+            found = r.engine.evict(rid) or found
+        if req is not None:
+            self.requests.remove(req)
+            found = True
+        return found
+
     def _terminate(self, rid: int, state: RequestState) -> bool:
         for t, seq, req, ptoks in self._future:
             if req.rid == rid and not req.state.terminal:
@@ -395,9 +445,14 @@ class ServingCluster:
         D = deadline_from_queue(lengths, slo_ttft,
                                 max(e.vtime - oldest, 0.0))
         D = max(DEADLINE_SAFETY * D - FIRST_TOKEN_RESERVE, 1e-3)
-        f, _ = self.optimizer.choose_frequency(lengths, D)
+        f, info = self.optimizer.choose_frequency(lengths, D)
+        prev = e.controller.freq
         e.controller.freq = f
         e.controller.history.append((e.vtime, f, 0.0))
+        if self.tracer is not None and f != prev:
+            self.tracer.decision(
+                e.vtime, r.name, "prefill", f, info["reason"],
+                n_jobs=info["n_jobs"], D=info["D"], busy=info["busy"])
 
     def _migrate(self, src: Replica, ho: StreamHandoff) -> None:
         dec = [r for r in self.replicas if r.alive and r.role == "decode"]
@@ -433,6 +488,16 @@ class ServingCluster:
                     HANDOFF_RETRY_BASE * (2.0 ** (pi.attempts - 1)),
                     HANDOFF_RETRY_CAP)
                 rest.append(pi)
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "handoff_retry", ho.req.rid, r.vtime,
+                        replica=r.name, attempts=pi.attempts,
+                        injected=injected)
+                if self._m_faults is not None:
+                    self._m_faults.labels(
+                        replica=r.name,
+                        kind="fault_import" if injected
+                        else "handoff_retry").inc()
         r.import_q = rest
         return moved
 
@@ -521,6 +586,14 @@ class ServingCluster:
                    # ahead of ours: its recompute may not predate the export
                    + [(pi.ho.req, max(r.killed_at, pi.ho.export_time))
                       for pi in r.import_q])
+        if self.tracer is not None:
+            self.tracer.instant(
+                "replica_kill", -1, r.killed_at, replica=r.name,
+                victims=sum(1 for q, _ in victims
+                            if not q.state.terminal),
+                energy_j=e.energy_j + r.idle_j)
+        if self._m_faults is not None:
+            self._m_faults.labels(replica=r.name, kind="kill").inc()
         e.pending.clear()
         e.prefilling.clear()
         e.active.clear()
@@ -574,6 +647,13 @@ class ServingCluster:
                 r.engine.pager.reserve(ev.pages)
             else:
                 r.engine.pager.release_reserved()
+            if self.tracer is not None:
+                name, attrs = ev.describe()
+                self.tracer.instant(name, -1, now, replica=ev.replica,
+                                    edge=edge, **attrs)
+            if self._m_faults is not None:
+                self._m_faults.labels(replica=ev.replica,
+                                      kind=f"pressure_{edge}").inc()
 
     def has_work(self) -> bool:
         """Backend protocol: future arrivals or any live replica with

@@ -77,7 +77,7 @@ from repro.core import (DualLoopController, MaxFreqController, Request,
                         RequestState, SamplingParams, ServingReport,
                         SLOConfig, StateEvent, TokenEvent, build_report,
                         make_router)
-from repro.core.telemetry import OccupancyMeter
+from repro.core.telemetry import OccupancyMeter, TBTMeter
 from repro.models import (ModelConfig, init_cache, init_params, prefill,
                           prefill_into_slot, prefill_chunk_into_slot,
                           decode_step, sample_tokens_batched)
@@ -406,13 +406,19 @@ class ServingEngine:
                  ecfg: Optional[EngineConfig] = None,
                  hw: HardwareProfile = A100_SXM4_40G, seed: int = 0,
                  plant_cfg: ModelConfig = None, plant: PlantModel = None,
-                 decode_table=None, controller=None):
+                 decode_table=None, controller=None, name: str = "engine",
+                 metrics=None, tracer=None):
         # plant_cfg: config used for virtual-time/energy accounting (e.g. the
         # FULL model) while `cfg` (possibly reduced) produces real tokens.
         # plant / decode_table / controller: cluster injection points — a
         # multi-replica cluster shares one offline profiling pass and gives
         # each replica its role's controller (prefill-optimizer-driven or
         # dual-loop) instead of re-profiling per engine.
+        # name / metrics / tracer: observability — `name` labels this
+        # engine's series and spans (the cluster passes the replica name);
+        # metrics is a core.MetricsRegistry, tracer a core.tracing.Tracer.
+        # Both default to None = every emission site is skipped (the
+        # events_on zero-overhead pattern).
         self.cfg = cfg
         self.ecfg = ecfg = ecfg if ecfg is not None else EngineConfig()
         self.params = params if params is not None else init_params(
@@ -474,6 +480,17 @@ class ServingEngine:
         # False -> skip event buffering entirely (serving.api.Server clears
         # this unless an on_event callback is installed)
         self.events_on = True
+        # observability: always-on host-sync audit counter (one int += per
+        # block — the zero-overhead regression test compares it across
+        # sinks-on/sinks-off runs), plus optional metric/trace sinks
+        self.name = name
+        self._host_drains = 0
+        self.metrics = None
+        self.tracer = None
+        self._m = None              # bound metric children (when metrics)
+        self._obs_tbt = None        # engine-level TBT window for p95/p99
+        if metrics is not None or tracer is not None:
+            self.install_observability(metrics, tracer)
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -547,6 +564,161 @@ class ServingEngine:
         # otherwise be billed as decode latency and wreck the controller)
         self._warmed: set = set()
 
+    # -- observability ---------------------------------------------------------
+    def install_observability(self, metrics=None, tracer=None) -> None:
+        """Install metric / trace sinks (``Server(metrics=..., tracer=...)``
+        and the cluster route through here).  Either may be None; with both
+        None every emission site below is a skipped ``is not None`` check —
+        the PR 5 ``events_on`` zero-overhead pattern.  Emission rides the
+        existing host-sync points only: publishing reads host floats the
+        engine already computed, never a device value."""
+        self.metrics = metrics
+        self.tracer = tracer
+        if tracer is not None:
+            self.controller.on_decision = tracer.bind(self.name)
+        if metrics is not None:
+            self._init_metrics(metrics)
+
+    def _init_metrics(self, reg) -> None:
+        """Bind this replica's metric children once (hot paths touch bound
+        children — a float add — not the label-resolution path).  Metric
+        names are a stable API; see README "Observability"."""
+        r = self.name
+        ev = reg.counter("greenllm_requests_total",
+                         "request lifecycle events", ("replica", "event"))
+        slo = reg.counter("greenllm_slo_total",
+                          "per-request SLO verdicts at finish",
+                          ("replica", "kind", "outcome"))
+        self._m = {
+            "ev": {k: ev.labels(replica=r, event=k) for k in
+                   ("submitted", "completed", "cancelled", "failed", "shed",
+                    "preempted", "imported", "exported")},
+            "slo": {(k, o): slo.labels(replica=r, kind=k, outcome=o)
+                    for k in ("ttft", "tbt") for o in ("pass", "miss")},
+            "tok_pf": reg.counter("greenllm_tokens_total",
+                                  "tokens processed by phase",
+                                  ("replica", "phase"))
+                         .labels(replica=r, phase="prefill"),
+            "tok_dec": reg.counter("greenllm_tokens_total", "",
+                                   ("replica", "phase"))
+                          .labels(replica=r, phase="decode"),
+            "e_pf": reg.counter("greenllm_energy_joules_total",
+                                "energy by phase (virtual-clock accounting)",
+                                ("replica", "phase"))
+                       .labels(replica=r, phase="prefill"),
+            "e_dec": reg.counter("greenllm_energy_joules_total", "",
+                                 ("replica", "phase"))
+                        .labels(replica=r, phase="decode"),
+            "e_idle": reg.counter("greenllm_energy_joules_total", "",
+                                  ("replica", "phase"))
+                         .labels(replica=r, phase="idle"),
+            "freq": reg.gauge("greenllm_frequency_mhz",
+                              "controller SM clock set point", ("replica",))
+                       .labels(replica=r),
+            "occ": reg.gauge("greenllm_page_occupancy",
+                             "KV page-pool occupancy [0,1]", ("replica",))
+                      .labels(replica=r),
+            "frag": reg.gauge("greenllm_page_fragmentation",
+                              "last-page slack fraction", ("replica",))
+                       .labels(replica=r),
+            "q_pending": reg.gauge("greenllm_queue_depth",
+                                   "streams by lifecycle stage",
+                                   ("replica", "queue"))
+                            .labels(replica=r, queue="pending"),
+            "q_prefill": reg.gauge("greenllm_queue_depth", "",
+                                   ("replica", "queue"))
+                            .labels(replica=r, queue="prefilling"),
+            "q_active": reg.gauge("greenllm_queue_depth", "",
+                                  ("replica", "queue"))
+                           .labels(replica=r, queue="active"),
+            "ttft": reg.histogram("greenllm_ttft_seconds",
+                                  "time to first token", ("replica",),
+                                  buckets=(0.05, 0.1, 0.2, 0.4, 0.8, 1.6,
+                                           3.2, 6.4))
+                       .labels(replica=r),
+            "tbt": reg.histogram("greenllm_tbt_seconds",
+                                 "time between tokens", ("replica",),
+                                 buckets=(0.005, 0.01, 0.02, 0.04, 0.08,
+                                          0.1, 0.15, 0.25, 0.5))
+                      .labels(replica=r),
+            "p95": reg.gauge("greenllm_tbt_p95_seconds",
+                             "sliding-window p95 TBT", ("replica",))
+                      .labels(replica=r),
+            "p99": reg.gauge("greenllm_tbt_p99_seconds",
+                             "sliding-window p99 TBT", ("replica",))
+                      .labels(replica=r),
+        }
+        # published-so-far totals: counters publish deltas at block cadence
+        self._pub = {"e_pf": 0.0, "e_dec": 0.0, "e_idle": 0.0,
+                     "tok_pf": 0, "tok_dec": 0}
+        self._obs_tbt = TBTMeter(horizon=1.0)
+
+    def _publish_metrics(self) -> None:
+        """Flush gauges + counter deltas and stamp a timeline snapshot at
+        the current virtual time.  Called only from existing host-side
+        points (end of a decode block, after prefill/idle accounting) —
+        this is bookkeeping over already-host-resident floats."""
+        m = self._m
+        if m is None:
+            return
+        pub = self._pub
+        for key, cur in (("e_pf", self.prefill_energy_j),
+                         ("e_dec", self.decode_energy_j),
+                         ("e_idle", self.idle_energy_j),
+                         ("tok_pf", self.prefill_tokens),
+                         ("tok_dec", self.decode_tokens)):
+            d = cur - pub[key]
+            if d > 0:
+                m[key].inc(d)
+                pub[key] = cur
+        m["freq"].set(self.controller.freq)
+        m["q_pending"].set(len(self.pending))
+        m["q_prefill"].set(len(self.prefilling))
+        m["q_active"].set(len(self.active))
+        if self.pager is not None:
+            occ = self.pager.occupancy()
+            m["occ"].set(occ["occupancy"])
+            m["frag"].set(occ["fragmentation"])
+        if self._obs_tbt is not None and len(self._obs_tbt):
+            p95 = self._obs_tbt.p95(self.vtime)
+            if p95 > 0.0:               # nan-safe: hold last on empty window
+                m["p95"].set(p95)
+                m["p99"].set(self._obs_tbt.p99(self.vtime))
+        self.metrics.record_snapshot(self.vtime)
+
+    def _obs_finish(self, req: Request) -> None:
+        """Score a FINISHED request's SLO verdicts into the counters (the
+        same targets ``core.report.slo_pass_metrics`` scores post-hoc)."""
+        m = self._m
+        if m is None:
+            return
+        m["ev"]["completed"].inc()
+        slo = self.ecfg.slo
+        if req.first_token >= 0:
+            ttft = req.first_token - req.arrival
+            ok = ttft <= slo.ttft_target(req.cls or "S")
+            m["slo"][("ttft", "pass" if ok else "miss")].inc()
+        recs = self._tbt.get(req.rid)
+        if recs:
+            ok = float(np.percentile(recs, 95)) <= slo.tbt_target
+            m["slo"][("tbt", "pass" if ok else "miss")].inc()
+
+    def evict(self, rid: int) -> bool:
+        """Backend protocol: drop a *terminal* request's bookkeeping (its
+        report row and TBT records) so a long-lived server doesn't grow
+        with total traffic served.  Counters and already-published metrics
+        are unaffected; ``report()`` afterwards no longer includes the
+        request.  Returns False for unknown or non-terminal requests."""
+        for i, req in enumerate(self.requests):
+            if req.rid == rid:
+                if not req.state.terminal:
+                    return False
+                self.requests.pop(i)
+                self._tbt.pop(rid, None)
+                return True
+        # already gone from the report rows; still drop stray TBT records
+        return self._tbt.pop(rid, None) is not None
+
     # -- request intake --------------------------------------------------------
     def submit(self, req: Request, prompt_tokens: Optional[np.ndarray] = None):
         if not self.ecfg.slot_native and self._resolve_sampling(req)[0] > 0.0:
@@ -568,6 +740,11 @@ class ServingEngine:
         req.state = RequestState.QUEUED
         self.pending.append(req)
         self.requests.append(req)
+        if self._m is not None:
+            self._m["ev"]["submitted"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("submit", req.rid, self.vtime, self.name,
+                                prompt_len=req.prompt_len, cls=req.cls)
 
     # -- per-slot sampling lanes ------------------------------------------------
     def _emit(self, ev) -> None:
@@ -642,6 +819,9 @@ class ServingEngine:
             req.tokens.append(tok)
             req.tokens_emitted = 1
             self._emit(TokenEvent(req.rid, self.vtime, (tok,), 1))
+            if self._m is not None and req.first_token >= 0:
+                self._m["ttft"].observe(
+                    max(req.first_token - req.arrival, 0.0))
         req.state = RequestState.DECODING
         self._emit(StateEvent(req.rid, self.vtime, RequestState.DECODING))
         self.active[slot] = st
@@ -674,7 +854,12 @@ class ServingEngine:
             self.caches, jnp.asarray(slot, jnp.int32), pt_row,
             self._tok, self._pos, self._keys, self._temps, self._topk,
             self._topp)
+        t0 = self.vtime
         self._account_prefill(req)
+        if self.tracer is not None:
+            self.tracer.span("prefill", req.rid, t0, self.vtime, self.name,
+                             tokens=L, bucket=bucket)
+        self._publish_metrics()
         # one tiny host read per admission (the first sampled token id)
         self._start_stream(req, slot, int(self._tok[slot]), L)
 
@@ -700,7 +885,12 @@ class ServingEngine:
             jnp.asarray([top_p], jnp.float32), sub[None])[0])
         self._tok = self._tok.at[slot].set(tok)
         self._pos = self._pos.at[slot].set(len(req.prompt))
+        t0 = self.vtime
         self._account_prefill(req)
+        if self.tracer is not None:
+            self.tracer.span("prefill", req.rid, t0, self.vtime, self.name,
+                             tokens=len(req.prompt), legacy=True)
+        self._publish_metrics()
         self._start_stream(req, slot, tok, len(req.prompt))
 
     def _admit(self):
@@ -727,6 +917,11 @@ class ServingEngine:
                 break                        # FIFO head-of-line: wait for pages
             self.pending.pop(0)
             slot = self.free_slots.pop(0)
+            if self.tracer is not None:
+                self.tracer.span("queue", req.rid,
+                                 max(req.arrival, req.not_before),
+                                 self.vtime, self.name, slot=slot,
+                                 resume=resume)
             if not self.ecfg.slot_native:
                 self._admit_legacy(req, slot)
             elif resume or len(ctx_toks) > self.buckets[-1]:
@@ -781,8 +976,12 @@ class ServingEngine:
                     self._tok, self._pos, self._keys, self._temps,
                     self._topk, self._topp)
             # resumed streams keep their original prefill_start/first_token
+            t0 = self.vtime
             self._account_prefill_tokens(
                 len(chunk), cs.start == 0 and cs.resume_tok is None, cs.req)
+            if self.tracer is not None:
+                self.tracer.span("prefill_chunk", cs.req.rid, t0, self.vtime,
+                                 self.name, start=cs.start, tokens=len(chunk))
             cs.start += len(chunk)
             progressed = True
             if cs.start >= len(cs.tokens):
@@ -802,6 +1001,8 @@ class ServingEngine:
                 cs.req.first_token = self.vtime
                 self._start_stream(cs.req, slot, int(self._tok[slot]),
                                    len(cs.tokens))
+        if progressed:
+            self._publish_metrics()
         return progressed
 
     def _preempt_for_pages(self, exclude: Optional[int] = None) -> bool:
@@ -831,6 +1032,10 @@ class ServingEngine:
         self._preempted += 1
         req.state = RequestState.QUEUED
         self._emit(StateEvent(req.rid, self.vtime, RequestState.QUEUED))
+        if self._m is not None:
+            self._m["ev"]["preempted"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("preempt", req.rid, self.vtime, self.name)
         return True
 
     # -- cancellation / failure ------------------------------------------------
@@ -883,15 +1088,28 @@ class ServingEngine:
         req.state = state
         if state is RequestState.CANCELLED:
             self._cancelled += 1
-        elif state is RequestState.FAILED:
+            kind = "cancelled"
+        else:
             self._failed += 1
+            kind = "failed"
         self._emit(StateEvent(req.rid, self.vtime, state))
+        if self._m is not None:
+            self._m["ev"][kind].inc()
+        if self.tracer is not None:
+            self.tracer.instant("cancel" if kind == "cancelled" else "fail",
+                                req.rid, self.vtime, self.name,
+                                tokens_emitted=req.tokens_emitted)
         return True
 
     def _mark_shed(self, req: Request) -> None:
         req.state = RequestState.SHED
         self._shed += 1
         self._emit(StateEvent(req.rid, self.vtime, RequestState.SHED))
+        if self._m is not None:
+            self._m["ev"]["shed"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("shed", req.rid, self.vtime, self.name,
+                                deadline=req.deadline)
 
     # -- replica-to-replica migration (disaggregated serving) ------------------
     def export_stream(self, slot: int) -> StreamHandoff:
@@ -936,6 +1154,11 @@ class ServingEngine:
                 max_tokens=sp.max_tokens if sp else st.req.output_len,
                 temperature=temp, top_k=top_k, top_p=top_p,
                 seed=sp.seed if sp else None)
+        if self._m is not None:
+            self._m["ev"]["exported"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("handoff_export", st.req.rid, self.vtime,
+                                self.name, pages=len(chain), pos=st.pos)
         return StreamHandoff(
             req=st.req, pos=st.pos, last_token=st.last_token,
             n_pages=len(chain), blocks=blocks, export_time=self.vtime,
@@ -990,6 +1213,14 @@ class ServingEngine:
         self._set_slot_sampling(slot, ho.req)
         self._imported += 1
         self.requests.append(ho.req)
+        if self._m is not None:
+            self._m["ev"]["imported"].inc()
+        if self.tracer is not None:
+            # the span covers the stream's in-flight window between replicas
+            # (clamped: the adopter's clock may lag the exporter's)
+            self.tracer.span("handoff", ho.req.rid, ho.export_time,
+                             max(self.vtime, ho.export_time), self.name,
+                             pages=ho.n_pages, pos=ho.pos)
         self._start_stream(ho.req, slot, ho.last_token, ho.pos, resumed=True)
         return True
 
@@ -1125,13 +1356,21 @@ class ServingEngine:
             max_pos += kb
             left -= kb
         # single drain per block: (k, B) int32
+        self._host_drains += 1
         toks = np.concatenate(jax.device_get(toks_dev), axis=0)
+        t_block = self.vtime
         done: List[int] = []
         block_toks: Dict[int, List[int]] = {slot: [] for slot, _ in snapshot}
         for i in range(k):
             ctx = float(np.mean([st.pos for st in self.active.values()
                                  if st.slot not in done]))
-            dur = self._account_decode_step(batch - len(done), ctx, durs[i])
+            alive = batch - len(done)
+            dur = self._account_decode_step(alive, ctx, durs[i])
+            if self._m is not None:
+                # one bucketed observation per step, weighted by the rows
+                # that shared it — exact, without alive python calls
+                self._m["tbt"].observe(dur, alive)
+                self._obs_tbt.record_tbt(self.vtime, dur)
             for slot, st in snapshot:
                 if slot in done:
                     continue
@@ -1143,6 +1382,11 @@ class ServingEngine:
                 self._tbt.setdefault(st.req.rid, []).append(dur)
                 if self._finish_check(st):
                     done.append(slot)
+                    self._obs_finish(st.req)
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "finish", st.req.rid, self.vtime, self.name,
+                            tokens=st.req.tokens_emitted)
         for slot, st in snapshot:       # one TokenEvent per stream per block
             if block_toks[slot]:
                 self._emit(TokenEvent(
@@ -1162,6 +1406,11 @@ class ServingEngine:
             record = getattr(self.controller, "record_occupancy", None)
             if record is not None:
                 record(self.vtime, occ)
+        if self.tracer is not None:
+            self.tracer.span("decode_block", -1, t_block, self.vtime,
+                             self.name, steps=k, batch=batch,
+                             freq_mhz=self.controller.freq)
+        self._publish_metrics()
         return k
 
     def _step_legacy(self) -> int:
@@ -1222,6 +1471,7 @@ class ServingEngine:
             return False
         self.idle_energy_j += (nxt - self.vtime) * self.plant.idle_power
         self.vtime = nxt
+        self._publish_metrics()
         return True
 
     def step(self, k: Optional[int] = None) -> int:

@@ -43,6 +43,12 @@ class ReplicaKill:
     at: float
     replica: str
 
+    def describe(self):
+        """(span_name, attrs) for the trace span emitted when this event
+        fires (``core.tracing`` instant; the cluster adds fire time and
+        runtime detail like victim count)."""
+        return "replica_kill", {"at": self.at}
+
 
 @dataclasses.dataclass(frozen=True)
 class HandoffFailure:
@@ -54,6 +60,11 @@ class HandoffFailure:
     until: float = float("inf")
     replica: str = ""              # "" = any replica
     count: int = 1                 # attempts to fail inside the window
+
+    def describe(self):
+        """(span_name, attrs) for the trace span of one injected failure
+        (the cluster emits it per failed attempt with rid and attempts)."""
+        return "handoff_retry", {"count": self.count}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +78,12 @@ class PagePressureSpike:
     duration: float
     replica: str
     pages: int
+
+    def describe(self):
+        """(span_name, attrs) for the trace spans at the spike's on/off
+        edges (the cluster adds the ``edge`` attribute)."""
+        return "page_pressure", {"pages": self.pages,
+                                 "duration": self.duration}
 
 
 class FaultPlan:

@@ -72,6 +72,8 @@ class PrefillWorker:
         self._rate = 0.0           # arrivals/s
         self._mean_tref = 0.0      # s at f_ref
         self._last_arrival: Optional[float] = None
+        # DVFS decision log sink: cb(t, phase, freq_mhz, reason, **inputs)
+        self.on_decision = None
 
     def observe_arrival(self, now: float, t_ref_job: float) -> None:
         if self._last_arrival is not None:
@@ -95,7 +97,8 @@ class PrefillWorker:
         # forecast work arriving within the window (queueing-aware, §3.2):
         # inflate the pending work by lambda * D * E[t_ref] expressed as
         # equivalent prompt tokens via a synthetic-length job list.
-        f, _ = self.optimizer.choose_frequency(lengths, D)
+        f, info = self.optimizer.choose_frequency(lengths, D)
+        reason = info["reason"]
         # bound the slowdown committed to any single job: once started a job
         # cannot be sped up, so cap its own latency at 60% of its class SLO
         if lengths:
@@ -103,14 +106,21 @@ class PrefillWorker:
             ladder = self.optimizer.hw.ladder()
             ok = ladder[t0 * self.optimizer.latency_model.f_ref / ladder
                         <= 0.6 * self.slo_ttft]
-            f = max(f, float(ok[0]) if len(ok) else float(ladder[-1]))
+            floor = float(ok[0]) if len(ok) else float(ladder[-1])
+            if floor > f:
+                f, reason = floor, "job_slo_floor"
         if self._rate > 0 and self._mean_tref > 0:
             # queueing stability: keep utilization rho = lambda * E[t(f)]
             # under 0.85 so arriving work does not accumulate unboundedly
             rho_target = 0.85
             f_ref = self.optimizer.latency_model.f_ref
-            f_stab = f_ref * self._rate * self._mean_tref / rho_target
-            f = max(f, min(f_stab, self.plant.hw.f_max))
+            f_stab = min(f_ref * self._rate * self._mean_tref / rho_target,
+                         self.plant.hw.f_max)
+            if f_stab > f:
+                f, reason = f_stab, "stability_floor"
+        if self.on_decision is not None:
+            self.on_decision(now, "prefill", f, reason,
+                             n_jobs=len(lengths), D=D, busy=info["busy"])
         return f
 
 
@@ -183,7 +193,8 @@ class ServingSimulator:
                  router: LengthRouter,
                  prefill_optimizers: Optional[Sequence[Optional[PrefillOptimizer]]],
                  decode_controller_fn: Callable[[int], object],
-                 slo: SLOConfig, node: NodeConfig = NodeConfig()):
+                 slo: SLOConfig, node: NodeConfig = NodeConfig(),
+                 metrics=None, tracer=None):
         """plant_fn(n_chips, seed) builds a worker's plant model."""
         self.router = router
         self.slo = slo
@@ -209,6 +220,101 @@ class ServingSimulator:
         # False -> skip event buffering (serving.api.Server clears this
         # unless an on_event callback is installed)
         self.events_on = True
+        # observability sinks (same zero-overhead pattern): per-worker
+        # metric children and DVFS decision callbacks, published at the
+        # discrete-event cadence — the simulator has no device to sync
+        self.metrics = None
+        self.tracer = None
+        self._m = None
+        self._pub: Dict[Tuple[str, str], float] = {}
+        if metrics is not None or tracer is not None:
+            self.install_observability(metrics, tracer)
+
+    # -- observability -----------------------------------------------------------
+    def install_observability(self, metrics=None, tracer=None) -> None:
+        """Backend observability surface: bind per-worker metric children
+        and per-controller DVFS decision callbacks.  ``None`` leaves a sink
+        uninstalled; with neither installed every emission site reduces to
+        one ``is None`` check."""
+        self.metrics = metrics
+        self.tracer = tracer
+        if tracer is not None:
+            for w in self.prefill:
+                w.on_decision = tracer.bind(w.wid)
+            for d in self.decode:
+                d.controller.on_decision = tracer.bind(d.wid)
+        if metrics is not None:
+            self._init_metrics(metrics)
+
+    def _init_metrics(self, reg) -> None:
+        """Same metric names as the serving engines (stable API): worker-
+        scoped series carry the worker id as the ``replica`` label;
+        node-wide lifecycle counters and latency histograms use ``node``."""
+        ev = reg.counter("greenllm_requests_total",
+                         "request lifecycle events", ("replica", "event"))
+        e = reg.counter("greenllm_energy_joules_total",
+                        "energy by phase (virtual-clock accounting)",
+                        ("replica", "phase"))
+        freq = reg.gauge("greenllm_frequency_mhz",
+                         "controller SM clock set point", ("replica",))
+        q = reg.gauge("greenllm_queue_depth",
+                      "streams by lifecycle stage", ("replica", "queue"))
+        self._m = {
+            "ev": {k: ev.labels(replica="node", event=k) for k in
+                   ("submitted", "completed", "cancelled", "failed",
+                    "shed")},
+            "ttft": reg.histogram("greenllm_ttft_seconds",
+                                  "time to first token", ("replica",),
+                                  buckets=(0.05, 0.1, 0.2, 0.4, 0.8, 1.6,
+                                           3.2, 6.4)).labels(replica="node"),
+            "tbt": reg.histogram("greenllm_tbt_seconds",
+                                 "time between tokens", ("replica",),
+                                 buckets=(0.005, 0.01, 0.02, 0.04, 0.08,
+                                          0.1, 0.15, 0.25, 0.5))
+                      .labels(replica="node"),
+        }
+        for w in self.prefill:
+            self._m[w.wid] = {
+                "freq": freq.labels(replica=w.wid),
+                "e_act": e.labels(replica=w.wid, phase="prefill"),
+                "e_idle": e.labels(replica=w.wid, phase="idle"),
+                "q": q.labels(replica=w.wid, queue="pending"),
+            }
+        for d in self.decode:
+            self._m[d.wid] = {
+                "freq": freq.labels(replica=d.wid),
+                "e_act": e.labels(replica=d.wid, phase="decode"),
+                "e_idle": e.labels(replica=d.wid, phase="idle"),
+                "q": q.labels(replica=d.wid, queue="pending"),
+                "q_act": q.labels(replica=d.wid, queue="active"),
+            }
+        self._pub = {}
+
+    def _pub_energy(self, wid: str, meter: EnergyMeter, m: Dict) -> None:
+        for key, total in (("e_act", meter.active_j),
+                           ("e_idle", meter.idle_j)):
+            d = total - self._pub.get((wid, key), 0.0)
+            if d > 0:
+                m[key].inc(d)
+                self._pub[(wid, key)] = total
+
+    def _publish(self, now: float) -> None:
+        """Publish worker gauges + energy counter deltas and snapshot the
+        registry (rides the event cadence)."""
+        if self._m is None:
+            return
+        for w in self.prefill:
+            m = self._m[w.wid]
+            m["freq"].set(w.freq)
+            m["q"].set(len(w.queue))
+            self._pub_energy(w.wid, w.energy, m)
+        for d in self.decode:
+            m = self._m[d.wid]
+            m["freq"].set(d.controller.freq)
+            m["q"].set(len(d.pending))
+            m["q_act"].set(len(d.streams))
+            self._pub_energy(d.wid, d.energy, m)
+        self.metrics.record_snapshot(now)
 
     # -- prefill routing -----------------------------------------------------------
     def _prefill_worker_for(self, cls_idx: int, rid: int) -> PrefillWorker:
@@ -228,6 +334,11 @@ class ServingSimulator:
         req.state = RequestState.QUEUED
         self.requests.append(req)
         self._push(req.arrival, "arrival", req)
+        if self._m is not None:
+            self._m["ev"]["submitted"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("submit", req.rid, req.arrival,
+                                prompt_len=req.prompt_len)
 
     def has_work(self) -> bool:
         return bool(self._evq)
@@ -269,6 +380,25 @@ class ServingSimulator:
                 if s.req is req:
                     d.streams.remove(s)
         self._emit(StateEvent(rid, self._last_time, state))
+        cancelled = state == RequestState.CANCELLED
+        if self._m is not None:
+            self._m["ev"]["cancelled" if cancelled else "failed"].inc()
+        if self.tracer is not None:
+            self.tracer.instant("cancel" if cancelled else "fail", rid,
+                                self._last_time)
+        return True
+
+    def evict(self, rid: int) -> bool:
+        """Backend protocol: drop a *terminal* request's bookkeeping
+        (request row + TBT records).  Returns False (and removes nothing)
+        while the request is still live."""
+        req = next((q for q in self.requests if q.rid == rid), None)
+        if req is None:
+            return self.tbt_records.pop(rid, None) is not None
+        if not req.state.terminal:
+            return False
+        self.requests.remove(req)
+        self.tbt_records.pop(rid, None)
         return True
 
     def _emit(self, ev) -> None:
@@ -329,6 +459,12 @@ class ServingSimulator:
             if cand.deadline >= 0 and now > cand.deadline:
                 cand.state = RequestState.SHED
                 self._emit(StateEvent(cand.rid, now, RequestState.SHED))
+                if self._m is not None:
+                    self._m["ev"]["shed"].inc()
+                if self.tracer is not None:
+                    self.tracer.instant("shed", cand.rid, now,
+                                        replica=w.wid,
+                                        deadline=cand.deadline)
                 continue
             req = cand
             break
@@ -344,6 +480,12 @@ class ServingSimulator:
         self._emit(StateEvent(req.rid, now, RequestState.PREFILLING))
         w.busy_until = now + dur
         self._push(now + dur, "prefill_done", (w, req))
+        if self.tracer is not None:
+            self.tracer.span("queue", req.rid, req.arrival, now,
+                             replica=w.wid)
+            self.tracer.span("prefill", req.rid, now, now + dur,
+                             replica=w.wid, tokens=req.prompt_len)
+        self._publish(now)
 
     def _schedule_decode_step(self, w: DecodeWorker, now: float) -> None:
         if w.stepping:
@@ -391,6 +533,8 @@ class ServingSimulator:
             s.ctx += 1
             if s.req.first_token < 0:
                 s.req.first_token = now
+                if self._m is not None:
+                    self._m["ttft"].observe(max(now - s.req.arrival, 0.0))
             self.tbt_records.setdefault(s.req.rid, []).append(dur)
             self._emit(TokenEvent(s.req.rid, now, (), 1))
             if s.req.tokens_emitted >= s.req.output_len:
@@ -399,9 +543,18 @@ class ServingSimulator:
                 self._emit(StateEvent(s.req.rid, now,
                                       RequestState.FINISHED))
                 done.append(s)
+                if self._m is not None:
+                    self._m["ev"]["completed"].inc()
+                if self.tracer is not None:
+                    self.tracer.instant("finish", s.req.rid, now,
+                                        replica=w.wid,
+                                        tokens=s.req.tokens_emitted)
         for s in done:
             w.streams.remove(s)
         w.controller.record_tokens(now, batch, dur)
+        if self._m is not None:
+            self._m["tbt"].observe(dur, batch)
+        self._publish(now)
         self._schedule_decode_step(w, now)
 
     def _finalize_energy(self) -> None:
