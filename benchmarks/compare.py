@@ -1,0 +1,109 @@
+"""Benchmark regression checker: diff a fresh ``serving_engine.py --json``
+run against the checked-in baseline.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/serving_engine.py --quick \
+        --batches 1,8 --governors defaultnv --json /tmp/fresh.json
+    python benchmarks/compare.py --fresh /tmp/fresh.json \
+        [--baseline benchmarks/BENCH_serving_engine.json] \
+        [--tol 0.10] [--energy-tol 0.10]
+
+Two gates, both relative to the baseline:
+
+* **throughput** — every row name present in both files compares
+  ``us_per_call``; a slowdown beyond ``--tol`` fails.  Timing rows are
+  noisy on shared CI runners, so CI invokes this with a wide ``--tol``
+  while keeping the energy gate strict.
+* **energy per token** — derived from the ``metrics_snapshot`` the
+  benchmark's metrics scenario embeds ((prefill + decode joules) /
+  (prefill + decode tokens)).  This is virtual-clock accounting, fully
+  deterministic, so ``--energy-tol`` stays at 10%: a regression here
+  means the serving engine actually bills more energy for the same
+  work, not that the runner was busy.
+
+Rows missing on either side are reported and skipped (benchmarks gain
+scenarios over time); exit status is 1 iff any gate fails.
+"""
+import argparse
+import json
+import math
+import sys
+
+
+def _energy_per_token(snap):
+    e = sum(v for k, v in snap.items()
+            if k.startswith("greenllm_energy_joules_total")
+            and ('phase="prefill"' in k or 'phase="decode"' in k))
+    t = sum(v for k, v in snap.items()
+            if k.startswith("greenllm_tokens_total"))
+    return e / t if t else math.nan
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_serving_engine.json")
+    ap.add_argument("--fresh", required=True,
+                    help="--json output of a fresh benchmark run")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="max relative us_per_call slowdown per row")
+    ap.add_argument("--energy-tol", type=float, default=0.10,
+                    help="max relative energy-per-token increase")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    base_rows = {r["name"]: float(r["us_per_call"])
+                 for r in base.get("rows", [])}
+    fresh_rows = {r["name"]: float(r["us_per_call"])
+                  for r in fresh.get("rows", [])}
+
+    failures = []
+    compared = 0
+    for name in sorted(base_rows):
+        if name not in fresh_rows:
+            print(f"skip {name}: not in fresh run")
+            continue
+        b, fr = base_rows[name], fresh_rows[name]
+        ratio = (fr - b) / b
+        bad = ratio > args.tol
+        print(f"{'FAIL' if bad else '  ok'} {name}: "
+              f"{b:.1f} -> {fr:.1f} us/call ({ratio:+.1%})")
+        if bad:
+            failures.append(f"{name} slowed {ratio:+.1%} (tol {args.tol:.0%})")
+        compared += 1
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"new  {name}: {fresh_rows[name]:.1f} us/call (no baseline)")
+
+    bs = base.get("metrics_snapshot")
+    fs = fresh.get("metrics_snapshot")
+    if bs and fs:
+        eb, ef = _energy_per_token(bs), _energy_per_token(fs)
+        ratio = (ef - eb) / eb
+        bad = ratio > args.energy_tol
+        print(f"{'FAIL' if bad else '  ok'} energy_per_token: "
+              f"{eb * 1e3:.4f} -> {ef * 1e3:.4f} mJ/tok ({ratio:+.1%})")
+        if bad:
+            failures.append(f"energy per token rose {ratio:+.1%} "
+                            f"(tol {args.energy_tol:.0%})")
+    else:
+        print("skip energy_per_token: metrics_snapshot missing on "
+              f"{'baseline' if not bs else 'fresh'} side")
+
+    if not compared:
+        failures.append("no common rows between baseline and fresh run")
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\nall gates passed ({compared} rows compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

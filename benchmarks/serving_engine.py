@@ -48,7 +48,9 @@ make the perf trajectory diffable across PRs.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
+import statistics
 import time
 
 import jax
@@ -242,6 +244,7 @@ def bench_metrics_overhead(cfg, params, *, batch, governor, nreq, out_len):
             srv.submit(rng.integers(0, cfg.vocab_size,
                                     size=int(rng.integers(8, 100))),
                        SamplingParams(max_tokens=out_len))
+        gc.collect()        # don't bill earlier runs' garbage to this one
         t0 = time.perf_counter()
         rep = srv.run()
         jax.block_until_ready(eng._tok)
@@ -256,11 +259,27 @@ def bench_metrics_overhead(cfg, params, *, batch, governor, nreq, out_len):
     assert abs(e1.vtime - e0.vtime) < 1e-9, "virtual clocks diverged"
     assert (r1.decode_tokens, r1.completed) == \
         (r0.decode_tokens, r0.completed), "served work diverged"
-    t_plain = min(run(False)[0] for _ in range(3))
-    t_inst = min(run(True)[0] for _ in range(3))
-    overhead = t_inst / t_plain - 1.0
+    # median of paired ratios: min-of-3 per mode let one lucky-fast bare
+    # run inflate the ratio several percent on shared machines; pairing
+    # adjacent bare/instrumented runs cancels slow load drift before the
+    # ratio is taken.  A round poisoned end-to-end by external load defeats
+    # any within-round statistic, so a failing round is re-measured once —
+    # a real regression fails both rounds
+    def measure():
+        plains, insts = [], []
+        for _ in range(5):
+            plains.append(run(False)[0])
+            insts.append(run(True)[0])
+        return (statistics.median(i / p
+                                  for p, i in zip(plains, insts)) - 1.0,
+                statistics.median(plains), statistics.median(insts))
+
+    overhead, t_plain, t_inst = measure()
+    if overhead >= 0.02:
+        overhead, t_plain, t_inst = measure()
     assert overhead < 0.02, \
-        f"metrics/tracing overhead {overhead * 100:.2f}% exceeds 2%"
+        f"metrics/tracing overhead {overhead * 100:.2f}% exceeds 2% " \
+        f"in two measurement rounds"
     total = nreq * out_len
     return total / t_plain, total / t_inst, reg
 

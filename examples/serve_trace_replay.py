@@ -26,9 +26,11 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (MetricsRegistry, SamplingParams, Tracer,
-                        read_timeline_jsonl)
+from repro.core import (AlertEngine, EnergyLedger, MetricsRegistry,
+                        SamplingParams, SLOConfig, Tracer,
+                        read_timeline_jsonl, verify_conservation)
 from repro.data import get_trace
+from repro.launch.serve import default_alert_rules
 from repro.serving import (EngineConfig, FaultPlan, HandoffFailure,
                            ReplicaKill, Server, ServingCluster,
                            ServingEngine)
@@ -60,12 +62,12 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
     import jax
     params = init_params(jax.random.PRNGKey(0), smoke)
 
-    def build(governor, faults=None, **kw):
+    def build(governor, faults=None, alerts=None, **kw):
         cl = ServingCluster(
             smoke, params=params, plant_cfg=cfg, faults=faults,
             ecfg=EngineConfig(max_batch=8, max_len=max_len,
                               governor=governor), **kw)
-        return cl, Server(cl)
+        return cl, Server(cl, alerts=alerts)
 
     _, bsrv = build("defaultnv", n_prefill=0, n_decode=0, n_colocated=2)
     base = replay_burst(bsrv, trace, smoke.vocab_size, max_len=max_len)
@@ -82,8 +84,11 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
 
     reg = MetricsRegistry(snapshot_min_dt=0.002)
     tr = Tracer()
-    cl, srv = build("greenllm", faults=plan, n_prefill=1, n_decode=1,
-                    metrics=reg, tracer=tr)
+    ledger = EnergyLedger()
+    alerts = AlertEngine(reg, default_alert_rules(SLOConfig()), tracer=tr)
+    cl, srv = build("greenllm", faults=plan, alerts=alerts,
+                    n_prefill=1, n_decode=1,
+                    metrics=reg, tracer=tr, ledger=ledger)
     rep = replay_burst(srv, trace, smoke.vocab_size, max_len=max_len)
     assert rep.completed == base.completed == len(trace), \
         "cluster must drain the burst completely (zero stalls)"
@@ -113,6 +118,26 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
     print(f"energy: disaggregated={rep.total_energy_j / 1e3:.2f}kJ  "
           f"colocated@fmax={base.total_energy_j / 1e3:.2f}kJ  "
           f"saving={save:.1f}%")
+
+    # --- per-request energy attribution + counterfactual savings -----------
+    # the ledger splits every metered joule across resident requests (idle
+    # stays an explicit unattributed pool); conservation against the report
+    # rows is *bitwise*, even across kills and handoffs
+    summary = verify_conservation(ledger, rep.replicas)
+    pool = sum(s["idle_pool_j"] for s in summary)
+    denom = max(rep.total_energy_j + rep.energy_saved_j, 1e-9)
+    print(f"attribution: conservation exact on {len(summary)} replicas  "
+          f"idle_pool={pool:.1f}J (unattributed)  "
+          f"saved_vs_fmax={rep.energy_saved_j:.1f}J "
+          f"({100 * rep.energy_saved_j / denom:.1f}% of a max-freq run)")
+    by_rid = {x["rid"]: x for x in ledger.rows()}
+    for r in sorted(rep.requests, key=lambda q: -q.energy_j)[:5]:
+        row = by_rid[r.rid]
+        carried = (f"  carried_from={','.join(row['carried_from'])}"
+                   if row["carried_from"] else "")
+        print(f"  rid={r.rid:<4d} E={r.energy_j:7.2f}J  "
+              f"saved={r.energy_saved_j:6.2f}J  "
+              f"replicas={','.join(row['replicas'])}{carried}")
     if plan is None:
         assert rep.total_energy_j <= base.total_energy_j, \
             "per-phase DVFS must not cost energy vs the max-freq baseline"
@@ -171,6 +196,11 @@ def run_cluster(cfg, smoke, trace, *, max_len=192, kill_replica="",
     reasons = sorted({d.reason for d in tr.decisions()})
     print(f"DVFS audit: {audited} frequency changes, each with a logged "
           f"reason; reasons seen: {reasons}")
+    n_alert = alerts.audit()
+    fired = [a for a in alerts.log if a.fired]
+    print(f"alerts: {len(fired)} firing transition(s), {n_alert} audited "
+          f"against the timeline"
+          + (f"; fired: {sorted({a.rule for a in fired})}" if fired else ""))
 
 
 def main():

@@ -10,6 +10,10 @@ from .decode_controller import (DualLoopController, DecodeControllerConfig,
                                 MaxFreqController, FixedFreqController)
 from .telemetry import TPSMeter, TBTMeter, OccupancyMeter, SlidingWindow
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                      parse_prometheus, read_timeline_jsonl)
+                      parse_prometheus, quantile_from_buckets,
+                      read_timeline_jsonl)
 from .tracing import DvfsDecision, Span, Tracer, read_jsonl as read_trace_jsonl
+from .attribution import (CounterfactualPricer, EnergyLedger, LedgerCarry,
+                          verify_conservation)
+from .alerts import Alert, AlertEngine, AlertRule
 from . import controller_jax

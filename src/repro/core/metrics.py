@@ -37,6 +37,8 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 
 def _format_value(v: float) -> str:
+    if v != v:                  # NaN first: int(nan) raises
+        return "NaN"
     if v == math.inf:
         return "+Inf"
     if v == -math.inf:
@@ -46,12 +48,30 @@ def _format_value(v: float) -> str:
     return repr(float(v))
 
 
+def _escape_label(v: str) -> str:
+    """Text-exposition label-value escaping: backslash, double quote and
+    newline (in that order — escaping the escape char first)."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+# flat() runs at block cadence and rebuilds the key of every live series
+# each snapshot; label escaping made that measurably hot, so keys are
+# memoized (sound: children are immutable per label-value tuple, and the
+# cache is bounded by series cardinality)
+_KEY_CACHE: Dict[Tuple[str, Tuple[str, ...], Tuple[str, ...]], str] = {}
+
+
 def _series_key(name: str, labelnames: Sequence[str],
                 labelvalues: Sequence[str]) -> str:
     if not labelnames:
         return name
-    inner = ",".join(f'{k}="{v}"' for k, v in zip(labelnames, labelvalues))
-    return f"{name}{{{inner}}}"
+    ck = (name, tuple(labelnames), tuple(labelvalues))
+    key = _KEY_CACHE.get(ck)
+    if key is None:
+        inner = ",".join(f'{k}="{_escape_label(v)}"'
+                         for k, v in zip(labelnames, labelvalues))
+        key = _KEY_CACHE[ck] = f"{name}{{{inner}}}"
+    return key
 
 
 class _Family:
@@ -170,6 +190,49 @@ class _HistogramChild:
         self.sum += value * n
         self.count += n
 
+    def quantile(self, q: float) -> float:
+        """Bucket-quantile estimate (p50/p95/p99) from this child's
+        cumulative counts — see ``quantile_from_buckets``."""
+        pairs: List[Tuple[float, float]] = []
+        cum = 0
+        for b, n in zip(self.buckets, self.counts):
+            cum += n
+            pairs.append((b, float(cum)))
+        pairs.append((math.inf, float(self.count)))
+        return quantile_from_buckets(pairs, q)
+
+
+def quantile_from_buckets(pairs: Sequence[Tuple[float, float]],
+                          q: float) -> float:
+    """Prometheus-style ``histogram_quantile`` over cumulative buckets:
+    ``pairs`` is ``(le, cumulative_count)`` including the ``+Inf`` bucket.
+    Linear interpolation inside the bucket containing rank ``q * count``;
+    a rank landing in the ``+Inf`` bucket clamps to the highest finite
+    bound (there is no upper edge to interpolate toward).  Returns NaN on
+    an empty histogram.  This is the one shared implementation for alert
+    rules, the dashboard, and ad-hoc analysis — don't re-derive it.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    pairs = sorted(pairs, key=lambda p: p[0])
+    if not pairs:
+        return math.nan
+    total = pairs[-1][1]
+    if total <= 0:
+        return math.nan
+    rank = q * total
+    prev_le, prev_cum = 0.0, 0.0        # implicit lower edge of bucket 0
+    for le, cum in pairs:
+        if cum >= rank:
+            if math.isinf(le):
+                return prev_le          # clamp: highest finite bound
+            if cum == prev_cum:
+                return le
+            return prev_le + (le - prev_le) * (rank - prev_cum) \
+                / (cum - prev_cum)
+        prev_le, prev_cum = le, cum
+    return prev_le
+
 
 DEFAULT_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0)
 
@@ -193,6 +256,11 @@ class Histogram(_Family):
     def observe(self, value: float, n: int = 1, **labels) -> None:
         (self.labels(**labels) if self.labelnames
          else self._child(())).observe(value, n)
+
+    def quantile(self, q: float, **labels) -> float:
+        """Bucket-quantile estimate for one child (NaN when empty)."""
+        return (self.labels(**labels) if self.labelnames
+                else self._child(())).quantile(q)
 
     def samples(self):
         for lv, c in self._children.items():
@@ -328,32 +396,78 @@ def read_timeline_jsonl(path: str) -> List[Tuple[float, Dict[str, float]]]:
     return out
 
 
+def _parse_series(line: str, lineno: int) -> Tuple[str, str]:
+    """Split one sample line into (series key, raw value), scanning the
+    label block character-by-character: quoted label values may contain
+    commas, spaces, braces and the escapes ``\\\\``, ``\\"``, ``\\n``, so
+    naive ``split(",")`` / ``rpartition(" ")`` slicing is wrong on hostile
+    labels.  The key keeps the escaped text verbatim — exactly what
+    ``flat()`` uses — so exposition round-trips key-for-key."""
+    n = len(line)
+    i = 0
+    while i < n and (line[i].isalnum() or line[i] in "_:"):
+        i += 1
+    name = line[:i]
+    if not name or not (name[0].isalpha() or name[0] == "_"):
+        raise ValueError(f"line {lineno}: bad metric name in {line!r}")
+    if i < n and line[i] == "{":
+        i += 1
+        while True:
+            if i >= n:
+                raise ValueError(f"line {lineno}: unbalanced labels: {line!r}")
+            if line[i] == "}":
+                i += 1
+                break
+            j = i
+            while j < n and (line[j].isalnum() or line[j] == "_"):
+                j += 1
+            if j == i or line[i].isdigit() or j >= n or line[j] != "=":
+                raise ValueError(
+                    f"line {lineno}: bad label name at col {i}: {line!r}")
+            i = j + 1
+            if i >= n or line[i] != '"':
+                raise ValueError(
+                    f"line {lineno}: unquoted label value: {line!r}")
+            i += 1
+            while i < n and line[i] != '"':
+                if line[i] == "\\":
+                    if i + 1 >= n or line[i + 1] not in ('\\', '"', 'n'):
+                        raise ValueError(
+                            f"line {lineno}: bad escape at col {i}: {line!r}")
+                    i += 1
+                i += 1
+            if i >= n:
+                raise ValueError(
+                    f"line {lineno}: unterminated label value: {line!r}")
+            i += 1                       # closing quote
+            if i < n and line[i] == ",":
+                i += 1                   # separator (or legal trailing comma)
+            elif i >= n or line[i] != "}":
+                raise ValueError(
+                    f"line {lineno}: expected ',' or '}}' at col {i}: "
+                    f"{line!r}")
+    key = line[:i]
+    rest = line[i:]
+    if not rest or rest[0] not in " \t":
+        raise ValueError(f"line {lineno}: no value: {line!r}")
+    fields = rest.split()
+    if not fields:
+        raise ValueError(f"line {lineno}: no value: {line!r}")
+    return key, fields[0]                # fields[1], if any, is a timestamp
+
+
 def parse_prometheus(text: str) -> Dict[str, float]:
-    """Minimal validating parser for the text exposition format: returns
+    """Validating parser for the text exposition format: returns
     ``{series_key: value}`` and raises ``ValueError`` on malformed lines.
-    Used by CI to check that what ``render_prometheus`` wrote is readable."""
+    Used by CI to check that what ``render_prometheus`` wrote is readable;
+    round-trips hostile label values (quotes, commas, newlines, braces,
+    backslashes) and legal non-finite samples (``NaN``, ``+Inf``)."""
     out: Dict[str, float] = {}
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.strip()
         if not line or line.startswith("#"):
             continue
-        key, _, raw = line.rpartition(" ")
-        if not key:
-            raise ValueError(f"line {lineno}: no metric name: {line!r}")
-        if "{" in key:
-            name, _, rest = key.partition("{")
-            if not rest.endswith("}"):
-                raise ValueError(f"line {lineno}: unbalanced labels: {line!r}")
-            for pair in filter(None, rest[:-1].split(",")):
-                lk, eq, lval = pair.partition("=")
-                if not eq or not (lval.startswith('"')
-                                  and lval.endswith('"')):
-                    raise ValueError(
-                        f"line {lineno}: bad label {pair!r}")
-        else:
-            name = key
-        if not name or not (name[0].isalpha() or name[0] == "_"):
-            raise ValueError(f"line {lineno}: bad metric name {name!r}")
+        key, raw = _parse_series(line, lineno)
         try:
             out[key] = float(raw)
         except ValueError as e:

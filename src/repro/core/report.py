@@ -74,6 +74,12 @@ class RequestReport:
     # False for SHED rows — shedding *is* the deadline miss, recorded at
     # admission instead of discovered at finish
     deadline_ok: Optional[bool]
+    # per-request energy attribution (core.attribution.EnergyLedger): the
+    # request's share of metered joules across every replica that served
+    # it, and the model-based estimate of joules saved vs running the same
+    # intervals at max frequency.  0.0 when no ledger was installed.
+    energy_j: float = 0.0
+    energy_saved_j: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +106,9 @@ class ReplicaReport:
     # run (recompute work is billed on whichever survivor runs it)
     alive: bool = True
     killed_at: float = -1.0
+    # counterfactual accounting (estimate): joules this replica saved vs
+    # pricing its active intervals at max frequency (0 without a ledger)
+    energy_saved_j: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +141,9 @@ class ServingReport:
     page_occupancy_peak: float = 0.0
     requests: Tuple[RequestReport, ...] = ()
     replicas: Tuple[ReplicaReport, ...] = ()
+    # cluster-wide counterfactual savings estimate vs max frequency
+    # (0 without an attribution ledger installed)
+    energy_saved_j: float = 0.0
 
     @property
     def total_energy_j(self) -> float:
@@ -144,6 +156,13 @@ class ServingReport:
 
     def summary(self) -> str:
         """Human-readable one-screen digest (CLI / example output)."""
+        e_line = (f"energy: prefill={self.prefill_energy_j / 1e3:.2f}kJ  "
+                  f"decode={self.decode_energy_j / 1e3:.2f}kJ  "
+                  f"idle={self.idle_energy_j / 1e3:.2f}kJ  "
+                  f"total={self.total_energy_j / 1e3:.2f}kJ")
+        if self.energy_saved_j:
+            e_line += (f"  saved_vs_fmax={self.energy_saved_j / 1e3:.2f}kJ "
+                       f"({100 * self.energy_saved_j / max(self.total_energy_j + self.energy_saved_j, 1e-12):.1f}%)")
         lines = [
             f"backend={self.backend}  requests={self.n_requests}  "
             f"completed={self.completed}  cancelled={self.cancelled}  "
@@ -151,10 +170,7 @@ class ServingReport:
             f"preempted={self.preempted}  migrated={self.migrated}",
             f"duration={self.duration_s:.2f}s  "
             f"throughput={self.throughput_tok_s:.0f} tok/s",
-            f"energy: prefill={self.prefill_energy_j / 1e3:.2f}kJ  "
-            f"decode={self.decode_energy_j / 1e3:.2f}kJ  "
-            f"idle={self.idle_energy_j / 1e3:.2f}kJ  "
-            f"total={self.total_energy_j / 1e3:.2f}kJ",
+            e_line,
             f"SLO: TTFT pass={self.ttft_pass * 100:.0f}%  "
             f"TBT pass={self.tbt_pass * 100:.0f}%  "
             f"p95 TBT={self.p95_tbt_s * 1e3:.1f}ms",
@@ -173,10 +189,17 @@ def build_report(*, backend: str, requests: List[Request],
                  prefill_tokens: int, decode_tokens: int, duration_s: float,
                  preempted: int = 0, migrated: int = 0,
                  page_occupancy_peak: float = 0.0,
-                 replicas: Tuple[ReplicaReport, ...] = ()) -> ServingReport:
+                 replicas: Tuple[ReplicaReport, ...] = (),
+                 energy_by_rid: Optional[Dict[int, float]] = None,
+                 saved_by_rid: Optional[Dict[int, float]] = None,
+                 energy_saved_j: float = 0.0) -> ServingReport:
     """Assemble a ``ServingReport``: aggregate SLO scoring via
-    ``slo_pass_metrics`` plus per-request attainment rows."""
+    ``slo_pass_metrics`` plus per-request attainment rows.  The optional
+    ``energy_by_rid`` / ``saved_by_rid`` maps (from an attribution ledger)
+    fill the per-request energy fields."""
     m = slo_pass_metrics(requests, tbt_records, slo, class_names)
+    e_rid = energy_by_rid or {}
+    s_rid = saved_by_rid or {}
     rows = []
     for r in requests:
         tbts = tbt_records.get(r.rid, [])
@@ -198,7 +221,9 @@ def build_report(*, backend: str, requests: List[Request],
             # rows are None, not misses.
             deadline_ok=False if r.state is RequestState.SHED
             else (r.finish <= r.deadline)
-            if r.deadline >= 0 and r.finish >= 0 else None))
+            if r.deadline >= 0 and r.finish >= 0 else None,
+            energy_j=e_rid.get(r.rid, 0.0),
+            energy_saved_j=s_rid.get(r.rid, 0.0)))
     return ServingReport(
         backend=backend,
         n_requests=len(requests),
@@ -218,4 +243,5 @@ def build_report(*, backend: str, requests: List[Request],
         p90_ttft_s=dict(m["p90_ttft"]),
         p95_tbt_s=m["p95_tbt"], p99_tbt_s=m["p99_tbt"],
         page_occupancy_peak=page_occupancy_peak,
-        requests=tuple(rows), replicas=replicas)
+        requests=tuple(rows), replicas=replicas,
+        energy_saved_j=energy_saved_j)

@@ -15,14 +15,20 @@ trace, and print the shared typed ``ServingReport``.
   PYTHONPATH=src python -m repro.launch.serve --cluster \
       --metrics-out /tmp/metrics.prom --trace-out /tmp/trace.jsonl \
       --dashboard 0.25
+  # per-request energy attribution + SLO alert rules
+  PYTHONPATH=src python -m repro.launch.serve --cluster \
+      --attribution-out /tmp/energy.jsonl --alerts
 """
 import argparse
+import json
 import sys
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import MetricsRegistry, SamplingParams, Tracer
+from repro.core import (AlertEngine, AlertRule, EnergyLedger,
+                        MetricsRegistry, SamplingParams, SLOConfig, Tracer,
+                        verify_conservation)
 from repro.serving import EngineConfig, Server, ServingCluster, ServingEngine
 
 
@@ -67,16 +73,32 @@ def workload(args, vocab):
                    int(rng.integers(16, 64)))
 
 
+def default_alert_rules(slo: SLOConfig):
+    """The ``--alerts`` rule set: TTFT/TBT error-budget burn rate over a
+    trailing window plus a hard p95-TBT latency ceiling."""
+    rules = [AlertRule.burn_rate(
+        f"{kind}-burn", "greenllm_slo_total",
+        bad_labels={"kind": kind, "outcome": "miss"},
+        good_labels={"kind": kind, "outcome": "pass"},
+        window_s=2.0, slo_target=0.9, burn_threshold=1.0, min_events=4,
+        severity="page") for kind in ("ttft", "tbt")]
+    rules.append(AlertRule.threshold(
+        "p95-tbt-high", "greenllm_tbt_p95_seconds", ">",
+        2.0 * slo.tbt_target, severity="warning"))
+    return rules
+
+
 class Dashboard:
     """Periodic one-line stderr dashboard, driven by the event stream's
     virtual timestamps — it fires when drained events cross the period
     boundary (the backend's block cadence), never per token."""
 
     def __init__(self, period: float, metrics: MetricsRegistry,
-                 out=sys.stderr):
+                 out=sys.stderr, alerts=None):
         self.period = period
         self.metrics = metrics
         self.out = out
+        self.alerts = alerts
         self._next = period
 
     def __call__(self, ev) -> None:
@@ -99,10 +121,22 @@ class Dashboard:
                    if k.startswith("greenllm_tbt_p95_seconds")),
                   default=0.0)
         fstr = " ".join(f"{n}={f:.0f}" for n, f in sorted(freqs.items()))
+        extra = ""
+        saved = total("greenllm_energy_saved_joules_total")
+        if saved:
+            extra += f" saved={saved / 1e3:.2f}kJ"
+        drops = total("greenllm_tracer_dropped")
+        if drops:
+            extra += f" trace_drops={drops:.0f}"
+        if self.alerts is not None:
+            firing = self.alerts.firing()
+            if firing:
+                extra += " ALERTS[" + ",".join(sorted(firing)) + "]"
         print(f"[serve t={t:8.3f}s] "
               f"done={total('greenllm_requests_total', 'completed'):.0f} "
               f"E={total('greenllm_energy_joules_total') / 1e3:.2f}kJ "
-              f"p95_tbt={p95 * 1e3:5.1f}ms MHz[{fstr}]", file=self.out)
+              f"p95_tbt={p95 * 1e3:5.1f}ms MHz[{fstr}]{extra}",
+              file=self.out)
 
 
 def main(argv=None):
@@ -153,17 +187,30 @@ def main(argv=None):
                     help="print a one-line stderr dashboard every N "
                          "virtual seconds (0: off; implies a metrics "
                          "registry)")
+    ap.add_argument("--attribution-out", default="",
+                    help="install the per-request energy ledger and write "
+                         "its attribution rows here as JSONL at exit "
+                         "(conservation-checked against the report)")
+    ap.add_argument("--alerts", action="store_true",
+                    help="evaluate the default SLO alert rule set (TTFT/"
+                         "TBT burn rate + p95-TBT ceiling) at block "
+                         "cadence; implies a metrics registry; firings "
+                         "are audited against the timeline at exit")
     args = ap.parse_args(argv)
 
     full = get_config(args.arch)
     smoke = full.smoke()
     metrics = MetricsRegistry(snapshot_min_dt=0.005) \
-        if args.metrics_out or args.dashboard > 0 else None
+        if args.metrics_out or args.dashboard > 0 or args.alerts else None
     tracer = Tracer() if args.trace_out else None
-    on_event = Dashboard(args.dashboard, metrics) \
+    ledger = EnergyLedger() if args.attribution_out else None
+    alerts = AlertEngine(metrics, default_alert_rules(SLOConfig()),
+                         tracer=tracer) if args.alerts else None
+    on_event = Dashboard(args.dashboard, metrics, alerts=alerts) \
         if args.dashboard > 0 else None
     server = Server(build_backend(args, full, smoke), on_event=on_event,
-                    metrics=metrics, tracer=tracer)
+                    metrics=metrics, tracer=tracer, ledger=ledger,
+                    alerts=alerts)
     n = 0
     for arrival, prompt, max_tokens in workload(args, smoke.vocab_size):
         server.submit(prompt, sampling_for(args, n, max_tokens),
@@ -196,6 +243,31 @@ def main(argv=None):
         tracer.write_chrome_trace(args.trace_out + ".chrome.json")
         print(f"trace: {args.trace_out} ({n_rec} records; chrome trace "
               f"next to it)", file=sys.stderr)
+    if ledger is not None:
+        rows = rep.replicas if rep.replicas else [dict(
+            replica=server.backend.name,
+            prefill_j=rep.prefill_energy_j, decode_j=rep.decode_energy_j,
+            idle_j=rep.idle_energy_j)]
+        verify_conservation(ledger, rows)
+        top = sorted(rep.requests, key=lambda r: -r.energy_j)[:5]
+        print("per-request attributed energy (top 5 by joules):")
+        for r in top:
+            print(f"  rid={r.rid:<4d} E={r.energy_j:8.1f}J  "
+                  f"saved_vs_fmax={r.energy_saved_j:8.1f}J")
+        with open(args.attribution_out, "w") as fh:
+            for row in ledger.rows():
+                fh.write(json.dumps(row) + "\n")
+        print(f"attribution: {args.attribution_out} ({len(ledger.rows())} "
+              f"rows; conservation verified)", file=sys.stderr)
+    if alerts is not None:
+        alerts.evaluate(server.backend.now)     # final round at drain
+        audited = alerts.audit()
+        fired = [a for a in alerts.log if a.fired]
+        print(f"alerts: {len(fired)} firing transition(s), "
+              f"{audited} audited against the timeline", file=sys.stderr)
+        for a in fired:
+            print(f"  [{a.severity}] {a.rule} @ t={a.t:.3f}s "
+                  f"value={a.value:.4g}", file=sys.stderr)
     assert rep.completed == n, "launcher burst must drain completely"
     return rep
 

@@ -58,9 +58,10 @@ class Backend(Protocol):
     served so far.
 
     Two optional surfaces (every shipped backend has both; ``Server``
-    probes with ``hasattr``): ``install_observability(metrics, tracer)``
-    accepts a ``core.metrics.MetricsRegistry`` / ``core.tracing.Tracer``
-    pair, and ``evict(rid)`` drops a *terminal* request's per-request
+    probes with ``hasattr``): ``install_observability(metrics, tracer,
+    ledger)`` accepts a ``core.metrics.MetricsRegistry`` /
+    ``core.tracing.Tracer`` / ``core.attribution.EnergyLedger`` triple,
+    and ``evict(rid)`` drops a *terminal* request's per-request
     bookkeeping (returning False while it is live) so long-lived servers
     can bound memory (``Server(retain_reports=...)``).
     """
@@ -191,7 +192,7 @@ class Server:
 
     def __init__(self, backend: Backend, on_event=None,
                  watchdog: Optional[WatchdogConfig] = None,
-                 metrics=None, tracer=None,
+                 metrics=None, tracer=None, ledger=None, alerts=None,
                  retain_reports: Optional[int] = None):
         self.backend = backend
         self._handles: Dict[int, RequestHandle] = {}
@@ -203,14 +204,19 @@ class Server:
         self.stuck = False          # set when the stall guard tripped
         if hasattr(backend, "events_on"):
             backend.events_on = on_event is not None
-        # pull-side observability: a MetricsRegistry / Tracer pair handed to
-        # the backend's install_observability (every shipped backend has
-        # one; both default None — the zero-overhead pattern)
+        # pull-side observability: MetricsRegistry / Tracer / EnergyLedger
+        # handed to the backend's install_observability (every shipped
+        # backend has one; all default None — the zero-overhead pattern).
+        # ``alerts`` is a core.alerts.AlertEngine evaluated once per pump
+        # round at the backend's clock (block cadence, timeline-pure).
         self.metrics = metrics
         self.tracer = tracer
-        if (metrics is not None or tracer is not None) \
+        self.ledger = ledger
+        self.alerts = alerts
+        if (metrics is not None or tracer is not None
+                or ledger is not None) \
                 and hasattr(backend, "install_observability"):
-            backend.install_observability(metrics, tracer)
+            backend.install_observability(metrics, tracer, ledger)
         # long-lived-server retention: with retain_reports=N, only the N
         # most recently finished requests keep their handle / backend
         # bookkeeping (request row, TBT records) — older terminal requests
@@ -269,6 +275,8 @@ class Server:
             return False
         self.backend.step()
         self._deliver(self.backend.drain_events())
+        if self.alerts is not None:
+            self.alerts.evaluate(self.backend.now)
         if self._retain is not None:
             self._retire()
         if self._watchdog is not None and not self._watch():

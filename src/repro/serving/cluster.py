@@ -189,13 +189,18 @@ class Replica:
         e = self.engine
         gap = t - e.vtime
         if gap > 0:
-            self.idle_j += gap * e.plant.idle_power
+            e_idle = gap * e.plant.idle_power
+            self.idle_j += e_idle
             e.vtime = t
+            if e.ledger is not None:
+                # mirror the identical float so the ledger's idle mirror
+                # stays bitwise equal to this replica's idle_j accumulator
+                e.ledger.record_idle(e.name, e_idle)
             if e._m is not None:
                 # cluster idle is billed here, outside the engine's own
                 # idle meter — publish it directly so per-replica energy
                 # counters stay complete
-                e._m["e_idle"].inc(gap * e.plant.idle_power)
+                e._m["e_idle"].inc(e_idle)
                 e._publish_metrics()
 
 
@@ -216,7 +221,7 @@ class ServingCluster:
                  plant_cfg: ModelConfig = None,
                  slo: Optional[SLOConfig] = None, seed: int = 0,
                  faults: Optional[FaultPlan] = None,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, ledger=None):
         assert n_prefill + n_decode + n_colocated > 0
         assert (n_prefill > 0) == (n_decode > 0), \
             "disaggregated roles come in pairs (prefill output needs a " \
@@ -301,9 +306,10 @@ class ServingCluster:
         # emitted here because the engines cannot see them
         self.metrics = None
         self.tracer = None
+        self.ledger = None
         self._m_faults = None
-        if metrics is not None or tracer is not None:
-            self.install_observability(metrics, tracer)
+        if metrics is not None or tracer is not None or ledger is not None:
+            self.install_observability(metrics, tracer, ledger)
 
     @property
     def events_on(self) -> bool:
@@ -318,14 +324,20 @@ class ServingCluster:
         for r in self.replicas:
             r.engine.events_on = bool(value)
 
-    def install_observability(self, metrics=None, tracer=None) -> None:
-        """Install metrics/trace sinks on the cluster and every replica
-        engine (Backend observability surface — ``serving.api.Server``
-        calls this when built with sinks).  ``None`` leaves a sink
-        uninstalled; with neither installed every emission site reduces to
-        one ``is None`` check (the ``events_on`` zero-overhead pattern)."""
+    def install_observability(self, metrics=None, tracer=None,
+                              ledger=None) -> None:
+        """Install metrics/trace/attribution sinks on the cluster and every
+        replica engine (Backend observability surface — ``serving.api.
+        Server`` calls this when built with sinks).  ``None`` leaves a sink
+        uninstalled; with none installed every emission site reduces to
+        one ``is None`` check (the ``events_on`` zero-overhead pattern).
+        A single ``EnergyLedger`` is shared by every replica — that is what
+        makes handoff carry a no-op and per-request attribution cluster-
+        wide by construction."""
         self.metrics = metrics
         self.tracer = tracer
+        if ledger is not None:
+            self.ledger = ledger
         if metrics is not None:
             self._m_faults = metrics.counter(
                 "greenllm_faults_total",
@@ -333,7 +345,7 @@ class ServingCluster:
                 "(injected or capacity), page-pressure on/off edges.",
                 ("replica", "kind"))
         for r in self.replicas:
-            r.engine.install_observability(metrics, tracer)
+            r.engine.install_observability(metrics, tracer, ledger)
 
     # -- intake ----------------------------------------------------------------
     def submit(self, req: Request,
@@ -721,8 +733,14 @@ class ServingCluster:
             # a dead one stops accumulating *anything* at the kill — that is
             # what keeps total energy comparable between a kill trace and a
             # healthy run (recompute is billed where it runs)
-            idle = r.idle_j + ((makespan - r.vtime) * e.plant.idle_power
-                               if r.alive else 0.0)
+            extra = ((makespan - r.vtime) * e.plant.idle_power
+                     if r.alive else 0.0)
+            idle = r.idle_j + extra
+            if self.ledger is not None:
+                # report-time idle goes into the ledger's idempotent top-up
+                # slot (report() may run several times) with the identical
+                # float, keeping the idle mirror bitwise equal to this row
+                self.ledger.set_idle_topup(r.name, extra)
             rows.append(ReplicaReport(
                 name=r.name, role=r.role, vtime_s=r.vtime,
                 prefill_energy_j=e.prefill_energy_j,
@@ -735,11 +753,18 @@ class ServingCluster:
                 preempted=e._preempted,
                 page_occupancy_peak=e.page_occupancy_peak(),
                 freq_mhz=e.controller.freq,
-                alive=r.alive, killed_at=r.killed_at))
+                alive=r.alive, killed_at=r.killed_at,
+                energy_saved_j=self.ledger.replica_saved_j(r.name)
+                if self.ledger is not None else 0.0))
         tbt: Dict[int, List[float]] = {}
         for r in self.replicas:
             for rid, v in r.engine._tbt.items():
                 tbt.setdefault(rid, []).extend(v)
+        led = {}
+        if self.ledger is not None:
+            led = dict(energy_by_rid=self.ledger.energy_by_rid(),
+                       saved_by_rid=self.ledger.saved_by_rid(),
+                       energy_saved_j=self.ledger.saved_total_j())
         return build_report(
             backend="cluster", requests=self.requests, tbt_records=tbt,
             slo=self.slo, class_names=self.dispatcher.class_names,
@@ -753,7 +778,7 @@ class ServingCluster:
             migrated=sum(w.imported for w in rows),
             page_occupancy_peak=max([w.page_occupancy_peak for w in rows]
                                     or [0.0]),
-            replicas=tuple(rows))
+            replicas=tuple(rows), **led)
 
     def stats(self) -> Dict:
         """Legacy dict view, kept for one release: derived entirely from

@@ -73,10 +73,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DualLoopController, MaxFreqController, Request,
-                        RequestState, SamplingParams, ServingReport,
-                        SLOConfig, StateEvent, TokenEvent, build_report,
-                        make_router)
+from repro.core import (CounterfactualPricer, DualLoopController,
+                        MaxFreqController, Request, RequestState,
+                        SamplingParams, ServingReport, SLOConfig, StateEvent,
+                        TokenEvent, build_report, make_router)
 from repro.core.telemetry import OccupancyMeter, TBTMeter
 from repro.models import (ModelConfig, init_cache, init_params, prefill,
                           prefill_into_slot, prefill_chunk_into_slot,
@@ -369,6 +369,10 @@ class StreamHandoff:
     cfg_name: str = ""              # guard against cross-model migration
     sampling: Optional[SamplingParams] = None   # per-request sampling config
     rng_lane: Optional[object] = None  # (2,) uint32 base lane (np.ndarray)
+    # the stream's partial energy ledger (core.attribution.LedgerCarry):
+    # migrated requests keep their attributed joules across replicas.  A
+    # no-op on adoption when both replicas share one ledger (the cluster).
+    ledger_carry: Optional[object] = None
 
 
 class _Stream:
@@ -407,7 +411,7 @@ class ServingEngine:
                  hw: HardwareProfile = A100_SXM4_40G, seed: int = 0,
                  plant_cfg: ModelConfig = None, plant: PlantModel = None,
                  decode_table=None, controller=None, name: str = "engine",
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, ledger=None):
         # plant_cfg: config used for virtual-time/energy accounting (e.g. the
         # FULL model) while `cfg` (possibly reduced) produces real tokens.
         # plant / decode_table / controller: cluster injection points — a
@@ -487,10 +491,12 @@ class ServingEngine:
         self._host_drains = 0
         self.metrics = None
         self.tracer = None
+        self.ledger = None          # core.attribution.EnergyLedger (opt-in)
+        self._cf = None             # counterfactual pricer (with ledger)
         self._m = None              # bound metric children (when metrics)
         self._obs_tbt = None        # engine-level TBT window for p95/p99
-        if metrics is not None or tracer is not None:
-            self.install_observability(metrics, tracer)
+        if metrics is not None or tracer is not None or ledger is not None:
+            self.install_observability(metrics, tracer, ledger)
 
         # device-resident decode state (slot-native path)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -565,15 +571,24 @@ class ServingEngine:
         self._warmed: set = set()
 
     # -- observability ---------------------------------------------------------
-    def install_observability(self, metrics=None, tracer=None) -> None:
-        """Install metric / trace sinks (``Server(metrics=..., tracer=...)``
-        and the cluster route through here).  Either may be None; with both
-        None every emission site below is a skipped ``is not None`` check —
-        the PR 5 ``events_on`` zero-overhead pattern.  Emission rides the
-        existing host-sync points only: publishing reads host floats the
-        engine already computed, never a device value."""
+    def install_observability(self, metrics=None, tracer=None,
+                              ledger=None) -> None:
+        """Install metric / trace / attribution sinks (``Server(metrics=...,
+        tracer=..., ledger=...)`` and the cluster route through here).  Any
+        may be None; with all None every emission site below is a skipped
+        ``is not None`` check — the PR 5 ``events_on`` zero-overhead
+        pattern.  Emission rides the existing host-sync points only:
+        publishing reads host floats the engine already computed, never a
+        device value.  ``ledger`` (a ``core.attribution.EnergyLedger``,
+        shareable across replicas) mirrors every billed joule — and prices
+        the same intervals at max frequency through a noiseless plant
+        clone, so the live plant's RNG (and hence the run) is untouched."""
         self.metrics = metrics
         self.tracer = tracer
+        if ledger is not None:
+            self.ledger = ledger
+            ledger.register(self.name)
+            self._cf = CounterfactualPricer(self.plant)
         if tracer is not None:
             self.controller.on_decision = tracer.bind(self.name)
         if metrics is not None:
@@ -612,6 +627,10 @@ class ServingEngine:
             "e_idle": reg.counter("greenllm_energy_joules_total", "",
                                   ("replica", "phase"))
                          .labels(replica=r, phase="idle"),
+            "e_saved": reg.counter(
+                "greenllm_energy_saved_joules_total",
+                "counterfactual joules saved vs max frequency (estimate)",
+                ("replica",)).labels(replica=r),
             "freq": reg.gauge("greenllm_frequency_mhz",
                               "controller SM clock set point", ("replica",))
                        .labels(replica=r),
@@ -648,9 +667,18 @@ class ServingEngine:
                              "sliding-window p99 TBT", ("replica",))
                       .labels(replica=r),
         }
+        if self.tracer is not None:
+            # ring-buffer overflow in the tracer is otherwise silent
+            # truncation; surface the drop counts where dashboards look
+            self._m["drop_spans"] = reg.gauge(
+                "greenllm_tracer_dropped_spans",
+                "trace spans lost to ring-buffer overflow").labels()
+            self._m["drop_decisions"] = reg.gauge(
+                "greenllm_tracer_dropped_decisions",
+                "DVFS decisions lost to ring-buffer overflow").labels()
         # published-so-far totals: counters publish deltas at block cadence
         self._pub = {"e_pf": 0.0, "e_dec": 0.0, "e_idle": 0.0,
-                     "tok_pf": 0, "tok_dec": 0}
+                     "e_saved": 0.0, "tok_pf": 0, "tok_dec": 0}
         self._obs_tbt = TBTMeter(horizon=1.0)
 
     def _publish_metrics(self) -> None:
@@ -671,6 +699,15 @@ class ServingEngine:
             if d > 0:
                 m[key].inc(d)
                 pub[key] = cur
+        if self.ledger is not None:
+            cur = self.ledger.replica_saved_j(self.name)
+            d = cur - pub["e_saved"]
+            if d > 0:                   # counters are monotone; savings can
+                m["e_saved"].inc(d)     # dip (noise near f_max) — hold then
+                pub["e_saved"] = cur
+        if self.tracer is not None and "drop_spans" in m:
+            m["drop_spans"].set(self.tracer.dropped_spans)
+            m["drop_decisions"].set(self.tracer.dropped_decisions)
         m["freq"].set(self.controller.freq)
         m["q_pending"].set(len(self.pending))
         m["q_prefill"].set(len(self.prefilling))
@@ -804,6 +841,13 @@ class ServingEngine:
         self.prefill_energy_j += t_pf * p_pf
         self.prefill_tokens += n_tokens
         self.vtime += t_pf
+        if self.ledger is not None:
+            # the prefilling stream is this interval's only resident; the
+            # mirror sees the identical float the counters above added
+            e = t_pf * p_pf
+            self.ledger.record_prefill(
+                self.name, req.rid, e, tokens=n_tokens,
+                saved_j=self._cf.prefill_j(n_tokens) - e)
         if first:
             req.prefill_start = self.vtime - t_pf
 
@@ -981,7 +1025,8 @@ class ServingEngine:
                 len(chunk), cs.start == 0 and cs.resume_tok is None, cs.req)
             if self.tracer is not None:
                 self.tracer.span("prefill_chunk", cs.req.rid, t0, self.vtime,
-                                 self.name, start=cs.start, tokens=len(chunk))
+                                 self.name, chunk_start=cs.start,
+                                 tokens=len(chunk))
             cs.start += len(chunk)
             progressed = True
             if cs.start >= len(cs.tokens):
@@ -1164,7 +1209,9 @@ class ServingEngine:
             n_pages=len(chain), blocks=blocks, export_time=self.vtime,
             page_size=self.ecfg.page_size if self.pager is not None else 0,
             cfg_name=self.cfg.name, sampling=sp,
-            rng_lane=self._lane_for(st.req))
+            rng_lane=self._lane_for(st.req),
+            ledger_carry=self.ledger.export_carry(self.name, st.req.rid)
+            if self.ledger is not None else None)
 
     def import_stream(self, ho: StreamHandoff) -> bool:
         """Adopt a migrated stream: allocate a slot + an equal-length page
@@ -1211,6 +1258,11 @@ class ServingEngine:
         if ho.sampling is not None:
             ho.req.sampling = ho.sampling
         self._set_slot_sampling(slot, ho.req)
+        if self.ledger is not None:
+            # no-op when the exporter billed into this same ledger (the
+            # cluster shares one); across distinct ledgers the request's
+            # partial attribution travels with the stream
+            self.ledger.adopt_carry(ho.ledger_carry, ho.req.rid)
         self._imported += 1
         self.requests.append(ho.req)
         if self._m is not None:
@@ -1225,7 +1277,8 @@ class ServingEngine:
         return True
 
     # -- decode ----------------------------------------------------------------
-    def _account_decode_step(self, batch: int, ctx: float, dur=None) -> float:
+    def _account_decode_step(self, batch: int, ctx: float, dur=None,
+                             rids=None) -> float:
         f = self.controller.maybe_tick(self.vtime)
         if dur is None:
             dur = self.plant.decode_step_latency(batch, ctx, f)
@@ -1234,6 +1287,12 @@ class ServingEngine:
         self.decode_energy_j += e
         self.decode_tokens += batch
         self.vtime += dur
+        if rids is not None:
+            # each alive row produced exactly one token this step, so
+            # "shared by tokens produced" is an equal per-rid split
+            self.ledger.record_decode(
+                self.name, rids, e,
+                saved_j=self._cf.decode_j(batch, ctx) - e)
         self.controller.record_tokens(self.vtime, batch, dur)
         return dur
 
@@ -1365,7 +1424,9 @@ class ServingEngine:
             ctx = float(np.mean([st.pos for st in self.active.values()
                                  if st.slot not in done]))
             alive = batch - len(done)
-            dur = self._account_decode_step(alive, ctx, durs[i])
+            rids = None if self.ledger is None else \
+                [st.req.rid for slot, st in snapshot if slot not in done]
+            dur = self._account_decode_step(alive, ctx, durs[i], rids)
             if self._m is not None:
                 # one bucketed observation per step, weighted by the rows
                 # that shared it — exact, without alive python calls
@@ -1427,7 +1488,9 @@ class ServingEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         batch = len(self.active)
         ctx = float(np.mean([st.pos for st in self.active.values()]))
-        dur = self._account_decode_step(batch, ctx)
+        rids = None if self.ledger is None else \
+            [st.req.rid for st in self.active.values()]
+        dur = self._account_decode_step(batch, ctx, rids=rids)
         done = []
         for slot, st in self.active.items():
             st.last_token = int(nxt[slot])
@@ -1469,7 +1532,10 @@ class ServingEngine:
         nxt = max(head.arrival, head.not_before)
         if nxt <= self.vtime + 1e-12:
             return False
-        self.idle_energy_j += (nxt - self.vtime) * self.plant.idle_power
+        e_idle = (nxt - self.vtime) * self.plant.idle_power
+        self.idle_energy_j += e_idle
+        if self.ledger is not None:
+            self.ledger.record_idle(self.name, e_idle)
         self.vtime = nxt
         self._publish_metrics()
         return True
@@ -1532,6 +1598,11 @@ class ServingEngine:
         """Backend protocol: the typed serving report (single scoring
         definition shared with the cluster and the simulator)."""
         peak = self.page_occupancy_peak()
+        led = {}
+        if self.ledger is not None:
+            led = dict(energy_by_rid=self.ledger.energy_by_rid(),
+                       saved_by_rid=self.ledger.saved_by_rid(),
+                       energy_saved_j=self.ledger.replica_saved_j(self.name))
         return build_report(
             backend="engine", requests=self.requests, tbt_records=self._tbt,
             slo=self.ecfg.slo, class_names=self.router.class_names,
@@ -1544,7 +1615,7 @@ class ServingEngine:
             # adopted handoffs only, matching the cluster-level definition
             # (summing imports counts each migration exactly once)
             migrated=self._imported,
-            page_occupancy_peak=peak)
+            page_occupancy_peak=peak, **led)
 
     def _slo_stats(self) -> Dict:
         """Per-class p90 TTFT and TTFT/TBT SLO pass rates —

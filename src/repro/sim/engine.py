@@ -21,9 +21,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (DualLoopController, LengthRouter, MaxFreqController,
-                        PrefillOptimizer, Request, RequestState, SLOConfig,
-                        ServingReport, StateEvent, TokenEvent, build_report)
+from repro.core import (CounterfactualPricer, DualLoopController,
+                        LengthRouter, MaxFreqController, PrefillOptimizer,
+                        Request, RequestState, SLOConfig, ServingReport,
+                        StateEvent, TokenEvent, build_report)
 from repro.core.prefill_optimizer import deadline_from_queue
 from .plant import PlantModel
 
@@ -36,15 +37,27 @@ class EnergyMeter:
         self._last_busy_end = 0.0
 
     def record_active(self, start: float, dur: float, power: float):
+        """Bill one active interval; returns ``(active_j, idle_j)`` billed
+        by this call so an attribution ledger can mirror the identical
+        floats (the conservation invariant is bitwise)."""
+        idle = 0.0
         if start > self._last_busy_end:
-            self.idle_j += (start - self._last_busy_end) * self.idle_power
-        self.active_j += dur * power
+            idle = (start - self._last_busy_end) * self.idle_power
+            self.idle_j += idle
+        act = dur * power
+        self.active_j += act
         self._last_busy_end = max(self._last_busy_end, start + dur)
+        return act, idle
 
     def finalize(self, horizon: float):
+        """Extend idle billing to ``horizon``; returns the idle joules this
+        call added (monotone — repeated calls bill only the extension)."""
+        idle = 0.0
         if horizon > self._last_busy_end:
-            self.idle_j += (horizon - self._last_busy_end) * self.idle_power
+            idle = (horizon - self._last_busy_end) * self.idle_power
+            self.idle_j += idle
             self._last_busy_end = horizon
+        return idle
 
     @property
     def total_j(self) -> float:
@@ -194,7 +207,7 @@ class ServingSimulator:
                  prefill_optimizers: Optional[Sequence[Optional[PrefillOptimizer]]],
                  decode_controller_fn: Callable[[int], object],
                  slo: SLOConfig, node: NodeConfig = NodeConfig(),
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, ledger=None):
         """plant_fn(n_chips, seed) builds a worker's plant model."""
         self.router = router
         self.slo = slo
@@ -225,19 +238,28 @@ class ServingSimulator:
         # discrete-event cadence — the simulator has no device to sync
         self.metrics = None
         self.tracer = None
+        self.ledger = None
+        self._cf: Dict[str, CounterfactualPricer] = {}
         self._m = None
         self._pub: Dict[Tuple[str, str], float] = {}
-        if metrics is not None or tracer is not None:
-            self.install_observability(metrics, tracer)
+        if metrics is not None or tracer is not None or ledger is not None:
+            self.install_observability(metrics, tracer, ledger)
 
     # -- observability -----------------------------------------------------------
-    def install_observability(self, metrics=None, tracer=None) -> None:
-        """Backend observability surface: bind per-worker metric children
-        and per-controller DVFS decision callbacks.  ``None`` leaves a sink
-        uninstalled; with neither installed every emission site reduces to
-        one ``is None`` check."""
+    def install_observability(self, metrics=None, tracer=None,
+                              ledger=None) -> None:
+        """Backend observability surface: bind per-worker metric children,
+        per-controller DVFS decision callbacks, and (optionally) a shared
+        attribution ledger with a per-worker counterfactual pricer.
+        ``None`` leaves a sink uninstalled; with none installed every
+        emission site reduces to one ``is None`` check."""
         self.metrics = metrics
         self.tracer = tracer
+        if ledger is not None:
+            self.ledger = ledger
+            for w in self.prefill + self.decode:
+                ledger.register(w.wid)
+                self._cf[w.wid] = CounterfactualPricer(w.plant)
         if tracer is not None:
             for w in self.prefill:
                 w.on_decision = tracer.bind(w.wid)
@@ -429,6 +451,11 @@ class ServingSimulator:
         phase fields match ``compute_metrics`` and ``idle_energy_j`` is 0.
         """
         self._finalize_energy()
+        led = {}
+        if self.ledger is not None:
+            led = dict(energy_by_rid=self.ledger.energy_by_rid(),
+                       saved_by_rid=self.ledger.saved_by_rid(),
+                       energy_saved_j=self.ledger.saved_total_j())
         return build_report(
             backend="simulator", requests=self.requests,
             tbt_records=self.tbt_records, slo=self.slo,
@@ -439,7 +466,7 @@ class ServingSimulator:
             prefill_tokens=sum(r.prompt_len for r in self.requests
                                if r.prefill_start >= 0),
             decode_tokens=sum(r.tokens_emitted for r in self.requests),
-            duration_s=self._last_time)
+            duration_s=self._last_time, **led)
 
     # -- event plumbing -----------------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -474,7 +501,15 @@ class ServingSimulator:
         w.freq_history.append((now, w.freq))
         dur = w.plant.prefill_latency(req.prompt_len, w.freq)
         power = w.plant.prefill_power(req.prompt_len, w.freq, dur)
-        w.energy.record_active(now, dur, power)
+        act, idle = w.energy.record_active(now, dur, power)
+        if self.ledger is not None:
+            # mirror the exact floats the meter just billed (bitwise
+            # conservation); the prefilling request is the only resident
+            if idle:
+                self.ledger.record_idle(w.wid, idle)
+            self.ledger.record_prefill(
+                w.wid, req.rid, act, tokens=req.prompt_len,
+                saved_j=self._cf[w.wid].prefill_j(req.prompt_len) - act)
         req.prefill_start = now
         req.state = RequestState.PREFILLING
         self._emit(StateEvent(req.rid, now, RequestState.PREFILLING))
@@ -499,7 +534,15 @@ class ServingSimulator:
         avg_ctx = float(np.mean([s.ctx for s in w.streams]))
         dur = w.plant.decode_step_latency(batch, avg_ctx, f)
         power = w.plant.decode_power(batch, avg_ctx, f, dur)
-        w.energy.record_active(now, dur, power)
+        act, idle = w.energy.record_active(now, dur, power)
+        if self.ledger is not None:
+            # split the step across the streams resident when the energy
+            # was committed (a cancel before step-done doesn't unbill)
+            if idle:
+                self.ledger.record_idle(w.wid, idle)
+            self.ledger.record_decode(
+                w.wid, [s.req.rid for s in w.streams], act,
+                saved_j=self._cf[w.wid].decode_j(batch, avg_ctx) - act)
         self._push(now + dur, "decode_step_done", (w, dur, batch))
 
     # -- event handlers -----------------------------------------------------------
@@ -560,10 +603,10 @@ class ServingSimulator:
     def _finalize_energy(self) -> None:
         # EnergyMeter.finalize is monotone in the horizon, so calling it at
         # every report() only extends idle up to the latest event time
-        for w in self.prefill:
-            w.energy.finalize(self._last_time)
-        for w in self.decode:
-            w.energy.finalize(self._last_time)
+        for w in self.prefill + self.decode:
+            idle = w.energy.finalize(self._last_time)
+            if self.ledger is not None and idle:
+                self.ledger.record_idle(w.wid, idle)
 
     # -- batch interface (sim.replay) ---------------------------------------------
     def run(self, requests: Sequence[Request]) -> SimResult:

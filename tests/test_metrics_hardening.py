@@ -1,0 +1,122 @@
+"""Adversarial regression tests for the Prometheus exposition layer
+(ROADMAP PR 8 satellite): hostile label values must round-trip through
+``render_prometheus`` -> ``parse_prometheus`` key-for-key against
+``MetricsRegistry.flat()``, non-finite values must render as the legal
+exposition tokens, malformed scrapes must be *rejected* (not silently
+mis-keyed), and the shared bucket-quantile helper must interpolate the
+way both the alert engine and the dashboard assume it does.
+"""
+import math
+
+import pytest
+
+from repro.core import MetricsRegistry, quantile_from_buckets
+from repro.core.metrics import parse_prometheus
+
+HOSTILE = [
+    'plain',
+    'sp ace and\ttab',
+    'quo"te',
+    'back\\slash',
+    'new\nline',
+    'comma,brace}{equals=',
+    '\\" tricky \\\\',
+    '',                                   # empty label value is legal
+]
+
+
+def test_hostile_labels_round_trip():
+    reg = MetricsRegistry()
+    g = reg.gauge("hostile_gauge", "adversarial labels", ["who", "what"])
+    for i, v in enumerate(HOSTILE):
+        g.set(float(i), who=v, what=HOSTILE[-1 - i])
+    text = reg.render_prometheus()
+    parsed = parse_prometheus(text)
+    assert parsed == reg.flat()
+    assert len([k for k in parsed if k.startswith("hostile_gauge")]) \
+        == len(HOSTILE)
+
+
+def test_nonfinite_values_render_and_parse():
+    reg = MetricsRegistry()
+    g = reg.gauge("weird_vals", "", ["k"])
+    g.set(float("nan"), k="nan")
+    g.set(math.inf, k="pinf")
+    g.set(-math.inf, k="ninf")
+    text = reg.render_prometheus()
+    assert 'weird_vals{k="nan"} NaN' in text
+    assert 'weird_vals{k="pinf"} +Inf' in text
+    assert 'weird_vals{k="ninf"} -Inf' in text
+    parsed = parse_prometheus(text)
+    assert math.isnan(parsed['weird_vals{k="nan"}'])
+    assert parsed['weird_vals{k="pinf"}'] == math.inf
+    assert parsed['weird_vals{k="ninf"}'] == -math.inf
+
+
+def test_histogram_exposition_round_trip():
+    reg = MetricsRegistry()
+    h = reg.histogram("rt_seconds", "", ["replica"],
+                      buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v, replica='r"0')
+    parsed = parse_prometheus(reg.render_prometheus())
+    assert parsed == reg.flat()
+    # cumulative le buckets, +Inf == _count
+    assert parsed['rt_seconds_bucket{replica="r\\"0",le="+Inf"}'] \
+        == parsed['rt_seconds_count{replica="r\\"0"}'] == 4
+
+
+@pytest.mark.parametrize("bad", [
+    'm{k="unterminated} 1',               # quote never closed
+    'm{k="bad\\escape"} 1',               # \e is not a valid escape
+    'm{k="v"}',                           # no value field
+    'm{9k="v"} 1',                        # label name starts with a digit
+    'm{k="a" j="b"} 1',                   # missing comma between labels
+    'm{k="v" 1',                          # missing closing brace
+    '{k="v"} 1',                          # empty metric name
+    'm{k="v"} notanumber',                # unparseable value
+])
+def test_malformed_lines_are_rejected(bad):
+    with pytest.raises(ValueError):
+        parse_prometheus(bad + "\n")
+
+
+def test_parse_ignores_comments_and_timestamps():
+    text = "# HELP m help\n# TYPE m gauge\nm 2.5 1700000000\n\n"
+    assert parse_prometheus(text) == {"m": 2.5}
+
+
+# -- bucket quantiles (shared by alerts + dashboard) ---------------------------
+
+
+def test_quantile_interpolation():
+    # 10 obs uniform in (0, 0.1], 10 in (0.1, 1.0]
+    pairs = [(0.1, 10.0), (1.0, 20.0), (math.inf, 20.0)]
+    assert quantile_from_buckets(pairs, 0.5) == pytest.approx(0.1)
+    # rank 15 of 20 -> halfway through the (0.1, 1.0] bucket
+    assert quantile_from_buckets(pairs, 0.75) == pytest.approx(0.55)
+    # everything below the first bound interpolates from zero
+    assert 0.0 < quantile_from_buckets(pairs, 0.25) <= 0.1
+
+
+def test_quantile_inf_clamps_to_highest_finite_bound():
+    pairs = [(0.1, 5.0), (math.inf, 10.0)]
+    assert quantile_from_buckets(pairs, 0.99) == pytest.approx(0.1)
+
+
+def test_quantile_edge_cases():
+    assert math.isnan(quantile_from_buckets([], 0.5))
+    assert math.isnan(quantile_from_buckets([(0.1, 0.0),
+                                             (math.inf, 0.0)], 0.5))
+    with pytest.raises(ValueError):
+        quantile_from_buckets([(0.1, 1.0)], 1.5)
+
+
+def test_histogram_quantile_convenience():
+    reg = MetricsRegistry()
+    h = reg.histogram("q_seconds", "", ["r"], buckets=(0.1, 1.0))
+    assert math.isnan(h.quantile(0.95, r="a"))       # no child yet
+    for _ in range(10):
+        h.observe(0.05, r="a")
+    q = h.quantile(0.95, r="a")
+    assert 0.0 < q <= 0.1
