@@ -22,12 +22,20 @@ Two gates, both relative to the baseline:
   means the serving engine actually bills more energy for the same
   work, not that the runner was busy.
 
+A third gate applies to ``engine_prefix_cache_*`` rows in the *fresh* run
+(when present): the shared-system-prompt burst must compute at least
+``--prefix-min-saved`` fewer prefill tokens than its cold-cache twin and
+bill strictly less energy per request.  Both values are deterministic
+(virtual-clock, token-count arithmetic), so a failure means the cache
+stopped matching — not noise.
+
 Rows missing on either side are reported and skipped (benchmarks gain
 scenarios over time); exit status is 1 iff any gate fails.
 """
 import argparse
 import json
 import math
+import re
 import sys
 
 
@@ -50,6 +58,9 @@ def main(argv=None):
                     help="max relative us_per_call slowdown per row")
     ap.add_argument("--energy-tol", type=float, default=0.10,
                     help="max relative energy-per-token increase")
+    ap.add_argument("--prefix-min-saved", type=float, default=0.30,
+                    help="min prefill_tokens_saved_frac for "
+                         "engine_prefix_cache_* rows in the fresh run")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -78,6 +89,26 @@ def main(argv=None):
         compared += 1
     for name in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  {name}: {fresh_rows[name]:.1f} us/call (no baseline)")
+
+    for row in fresh.get("rows", []):
+        if "prefix_cache" not in row["name"]:
+            continue
+        derived = row.get("derived", "")
+        m = re.search(r"prefill_tokens_saved_frac=([0-9.]+)", derived)
+        e = re.search(r"energy_per_req_vs_cold=([0-9.]+)", derived)
+        if not m or not e:
+            failures.append(f"{row['name']}: derived metrics missing "
+                            f"from {derived!r}")
+            continue
+        saved, eratio = float(m.group(1)), float(e.group(1))
+        bad = saved < args.prefix_min_saved or eratio >= 1.0
+        print(f"{'FAIL' if bad else '  ok'} {row['name']}: "
+              f"saved_frac={saved:.3f} (min {args.prefix_min_saved:.2f}), "
+              f"energy_per_req={eratio:.3f}x cold (must be < 1)")
+        if bad:
+            failures.append(
+                f"{row['name']} prefix-cache win below floor: "
+                f"saved_frac={saved:.3f}, energy ratio={eratio:.3f}")
 
     bs = base.get("metrics_snapshot")
     fs = fresh.get("metrics_snapshot")

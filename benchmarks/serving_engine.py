@@ -28,6 +28,14 @@ Paged scenarios (``--paged``):
   K/V memory: the dense layout pins ``memory / max_len`` streams; paging
   holds ``max_batch`` (the acceptance lever for GreenLLM's decode batching).
 
+Prefix-cache scenario (``--prefix-cache``):
+
+* ``engine_prefix_cache`` — a shared-system-prompt burst served cold vs
+  with the content-addressed prefix cache: prefill tokens computed, hit
+  rate, and (full-size plant accounting) energy per request.  Output
+  tokens are hard-asserted identical between the two runs;
+  ``compare.py`` gates the saved-token fraction and the energy ratio.
+
 Cluster scenario (``--cluster``):
 
 * ``cluster_disagg_1p1d`` — a 2-replica disaggregated prefill/decode cluster
@@ -220,6 +228,70 @@ def bench_mixed_sampling(cfg, params, *, batch, governor, nreq, out_len):
     return nreq * out_len / dt, greedy / nreq
 
 
+def bench_prefix_cache(cfg, params, *, governor, nreq, out_len, arch):
+    """Shared-system-prompt burst, cold cache vs ``prefix_cache=True``.
+
+    Every request carries the same 96-token system prompt plus a short
+    random tail — the chat/RAG traffic shape the prefix cache targets.  The
+    warm run must produce bit-identical tokens (hard-asserted here: the CI
+    smoke rides this scenario) while computing fewer prefill tokens and
+    billing less prefill energy.  Accounting uses the *full-size* plant
+    config for ``arch`` (virtual clock, deterministic): at paper scale the
+    skipped tokens carry real joules, whereas the smoke model's prefill is
+    weight-read-bound and nearly flat in L.
+
+    Returns (warm tok/s, prefill_tokens_saved_frac, hit_rate,
+    energy_per_request warm/cold ratio).
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import SamplingParams
+    from repro.models import init_params
+    from repro.serving import EngineConfig, Server, ServingEngine
+    plant_cfg = get_config(arch)
+    # f32 model compute: a hit routes the stream through chunked prefill
+    # (reading matched context from the cache) while the cold run one-shots
+    # the whole prompt — two summation orders that agree bitwise in f32 but
+    # differ by an ulp in bf16, which the token-identity assert below would
+    # trip over (same reason the paging equivalence tests pin f32).  Energy
+    # accounting uses the plant config and is unaffected.
+    if cfg.dtype != "float32":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def run(pc):
+        eng = ServingEngine(cfg, params=params, plant_cfg=plant_cfg,
+                            ecfg=EngineConfig(
+                                max_batch=8, max_len=256, governor=governor,
+                                slot_native=True, paged=True,
+                                cache_dtype="float32", prefix_cache=pc))
+        srv = Server(eng)
+        rng = np.random.default_rng(0)
+        sys_prompt = rng.integers(0, cfg.vocab_size, size=96)
+        for _ in range(nreq):
+            tail = rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(8, 32)))
+            srv.submit(np.concatenate([sys_prompt, tail]),
+                       SamplingParams(max_tokens=out_len))
+        t0 = time.perf_counter()
+        rep = srv.run()
+        jax.block_until_ready(eng._tok)
+        return eng, rep, time.perf_counter() - t0
+
+    run(True)                                  # compile warmup
+    cold, crep, _ = run(False)
+    warm, wrep, dt = run(True)
+    assert [q.tokens for q in warm.requests] == \
+        [q.tokens for q in cold.requests], \
+        "prefix-cache hit must be token-identical to the cold run"
+    assert crep.completed == wrep.completed == nreq
+    saved = 1.0 - warm.prefill_tokens / cold.prefill_tokens
+    hit_rate = warm.prefix_cache.stats()["hit_rate"]
+    eratio = wrep.total_energy_j / crep.total_energy_j
+    return nreq * out_len / dt, saved, hit_rate, eratio
+
+
 def bench_metrics_overhead(cfg, params, *, batch, governor, nreq, out_len):
     """Serve the same burst with no observability sinks and with the full
     PR-7 surface installed (MetricsRegistry + Tracer through ``Server``).
@@ -322,7 +394,7 @@ def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                          batches=(1, 4, 8), governors=("greenllm", "defaultnv"),
                          paged: bool = False, cluster: bool = False,
-                         extras: dict = None):
+                         prefix_cache: bool = False, extras: dict = None):
     from repro.configs import get_config
     from repro.models import init_params
 
@@ -377,6 +449,16 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
             rows.extend(_paged_rows(cfg, params, gov=gov, b=b, steps=steps,
                                     nreq=nreq, n_admit=n_admit, warm2=warm2,
                                     dense_decode=dense_decode[b]))
+        if prefix_cache:
+            tps, saved, hit, eratio = bench_prefix_cache(
+                cfg, params, governor=gov, nreq=nreq,
+                out_len=12 if quick else 24, arch=arch)
+            rows.append((f"engine_prefix_cache_{gov}",
+                         1e6 / max(tps, 1e-9),
+                         f"{tps:.0f}tok/s;"
+                         f"prefill_tokens_saved_frac={saved:.3f};"
+                         f"hit_rate={hit:.2f};"
+                         f"energy_per_req_vs_cold={eratio:.3f}x"))
     if governors:
         # observability overhead: no-sink vs instrumented serve (host-drain
         # and token equality hard-asserted; wall overhead must stay <2%)
@@ -438,7 +520,8 @@ def _paged_rows(cfg, params, *, gov, b, steps, nreq, n_admit, warm2,
 def bench_serving_engine_quick():
     """Registry entry for benchmarks.run (CI-sized)."""
     return bench_serving_engine(quick=True, batches=(1, 8),
-                                governors=("defaultnv",), paged=True)
+                                governors=("defaultnv",), paged=True,
+                                prefix_cache=True)
 
 
 def main():
@@ -450,6 +533,10 @@ def main():
     ap.add_argument("--cluster", action="store_true",
                     help="add the 2-replica disaggregated prefill/decode "
                          "mini-trace vs the 2x-colocated max-freq baseline")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add the shared-system-prompt burst: prefix cache "
+                         "vs cold cache (prefill tokens computed, hit rate, "
+                         "energy/request; token identity hard-asserted)")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batches", default="1,4,8")
     ap.add_argument("--governors", default="greenllm,defaultnv")
@@ -464,7 +551,7 @@ def main():
     rows = bench_serving_engine(
         quick=args.quick, arch=args.arch, batches=batches,
         governors=governors, paged=args.paged, cluster=args.cluster,
-        extras=extras)
+        prefix_cache=args.prefix_cache, extras=extras)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -474,7 +561,8 @@ def main():
             "config": {"quick": args.quick, "arch": args.arch,
                        "batches": list(batches),
                        "governors": list(governors),
-                       "paged": args.paged, "cluster": args.cluster},
+                       "paged": args.paged, "cluster": args.cluster,
+                       "prefix_cache": args.prefix_cache},
             "backend": jax.default_backend(),
             "rows": [{"name": n, "us_per_call": round(us, 1),
                       "derived": d} for n, us, d in rows],

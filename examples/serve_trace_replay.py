@@ -7,8 +7,12 @@ front door (submit → stream → cancel) and reported as the shared typed
 ``ServingReport``.
 
     PYTHONPATH=src python examples/serve_trace_replay.py [--trace chat_5qps]
-        [--arch qwen3-14b] [--duration 120] [--cluster]
+        [--arch qwen3-14b] [--duration 120] [--cluster] [--prefix-cache]
         [--kill-replica decode0] [--kill-frac 0.4] [--handoff-failures 3]
+
+``--prefix-cache`` adds a shared-system-prompt burst served twice — cold
+cache vs warm — asserting bit-identical tokens and printing the hit rate
+plus the prefill joules the cache saved on the full-size plant model.
 
 ``--cluster`` adds a disaggregated 1-prefill + 1-decode replica cluster
 (paged-KV handoff, per-phase DVFS) replaying an azure_code burst against a
@@ -211,6 +215,10 @@ def main():
     ap.add_argument("--cluster", action="store_true",
                     help="add the disaggregated prefill/decode cluster "
                          "replay vs the colocated max-frequency baseline")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add a shared-system-prompt burst served warm "
+                         "(prefix cache on) vs cold, printing hit rate and "
+                         "prefill joules saved (tokens asserted identical)")
     ap.add_argument("--kill-replica", default="",
                     help="with --cluster: kill this replica (e.g. decode0) "
                          "partway through and recover on survivors")
@@ -284,6 +292,53 @@ def main():
           f"E_decode={pst.decode_energy_j/1e3:.2f}kJ "
           f"({pst.decode_tokens} tok)  "
           f"p95 TBT={pst.p95_tbt_s * 1e3:.1f}ms")
+
+    # --- prefix cache: shared-system-prompt burst, warm vs cold ---------------
+    # chat/RAG traffic re-prefills the same system prompt per request; with
+    # --prefix-cache the paged engine serves the shared head from cached
+    # pages (bit-identical tokens, asserted) and the skipped prefill work
+    # shows up directly as joules on the full-size plant model
+    if args.prefix_cache:
+        print("\n=== prefix cache: shared 80-token system prompt, "
+              "12 requests ===")
+        import dataclasses
+        # f32 compute: a hit replays the prompt through chunked prefill
+        # against cached pages while the cold run one-shots it — bitwise
+        # equal in f32, an ulp apart in bf16 (see tests/test_prefix_cache)
+        pc_smoke = dataclasses.replace(smoke, dtype="float32")
+
+        def pc_burst(on):
+            eng = ServingEngine(pc_smoke, plant_cfg=cfg, ecfg=EngineConfig(
+                max_batch=8, max_len=192, paged=True, prefix_cache=on))
+            psrv = Server(eng)
+            prng = np.random.default_rng(7)
+            head = prng.integers(0, smoke.vocab_size, size=80)
+            for _ in range(12):
+                tail = prng.integers(0, smoke.vocab_size,
+                                     size=int(prng.integers(4, 16)))
+                psrv.submit(np.concatenate([head, tail]),
+                            SamplingParams(max_tokens=16))
+            return eng, psrv.run()
+
+        ceng, crep = pc_burst(False)
+        weng, wrep = pc_burst(True)
+        assert [q.tokens for q in weng.requests] == \
+            [q.tokens for q in ceng.requests], \
+            "prefix-cache tokens must match the cold run"
+        st = weng.prefix_cache.stats()
+        saved_j = crep.prefill_energy_j - wrep.prefill_energy_j
+        saved_tok = crep.prefill_tokens - wrep.prefill_tokens
+        print(f"hit_rate={st['hit_rate'] * 100:.0f}% "
+              f"({st['hits']} hits / {st['misses']} misses, "
+              f"{st['hit_tokens']} prompt tokens from cache)")
+        print(f"prefill: {crep.prefill_tokens} -> {wrep.prefill_tokens} "
+              f"tokens ({saved_tok} skipped)  "
+              f"energy: {crep.prefill_energy_j:.1f}J -> "
+              f"{wrep.prefill_energy_j:.1f}J "
+              f"(saved {saved_j:.1f}J, "
+              f"{100 * saved_j / crep.prefill_energy_j:.0f}% of prefill)")
+        assert wrep.prefill_tokens < crep.prefill_tokens, \
+            "warm run must prefill fewer tokens"
 
     # --- disaggregated prefill/decode cluster on the azure_code burst ---------
     if args.cluster:

@@ -34,8 +34,10 @@ from repro.serving import EngineConfig, Server, ServingCluster, ServingEngine
 
 def build_backend(args, full, smoke):
     ecfg = EngineConfig(max_batch=args.max_batch, max_len=args.max_len,
-                        governor=args.governor, paged=args.paged,
-                        chunked_prefill=args.chunked)
+                        governor=args.governor,
+                        paged=args.paged or args.prefix_cache,
+                        chunked_prefill=args.chunked,
+                        prefix_cache=args.prefix_cache)
     if args.cluster:
         # paged slot-native plane is forced by the cluster (KV handoff)
         return ServingCluster(smoke, n_prefill=1, n_decode=1,
@@ -59,17 +61,29 @@ def workload(args, vocab):
     """(arrival, prompt_tokens, max_tokens) triples: a named trace's
     arrival/length mix, or the synthetic burst."""
     rng = np.random.default_rng(0)
+    # with --prefix-cache every prompt opens with the same system prefix
+    # (the chat/RAG traffic shape the cache targets) so the dashboard's
+    # hit rate reflects real sharing instead of random-prompt misses; the
+    # tail is capped so the engine's keep-the-last-max_len/2 prompt
+    # truncation never chops (and misaligns) the shared head
+    sys_prompt = rng.integers(0, vocab, size=48) if args.prefix_cache \
+        else np.empty(0, np.int64)
+    cap = max(args.max_len // 2 - len(sys_prompt), 1)
     if args.trace != "synthetic":
         from repro.data import get_trace
         trace = get_trace(args.trace, duration=args.duration)
         for r in trace[: args.requests]:
-            plen = min(r.prompt_len, args.max_len // 2)
-            yield (r.arrival, rng.integers(0, vocab, size=plen),
+            plen = min(r.prompt_len, args.max_len // 2, cap)
+            yield (r.arrival,
+                   np.concatenate([sys_prompt,
+                                   rng.integers(0, vocab, size=plen)]),
                    min(r.output_len, args.max_len // 3))
     else:
         for _ in range(args.requests):
-            yield (0.0, rng.integers(0, vocab,
-                                     size=int(rng.integers(16, 80))),
+            plen = min(int(rng.integers(16, 80)), cap)
+            yield (0.0,
+                   np.concatenate([sys_prompt,
+                                   rng.integers(0, vocab, size=plen)]),
                    int(rng.integers(16, 64)))
 
 
@@ -128,6 +142,10 @@ class Dashboard:
         drops = total("greenllm_tracer_dropped")
         if drops:
             extra += f" trace_drops={drops:.0f}"
+        pc_hits = total("greenllm_prefix_cache_hits_total")
+        pc_miss = total("greenllm_prefix_cache_misses_total")
+        if pc_hits + pc_miss:
+            extra += f" pc_hit={100 * pc_hits / (pc_hits + pc_miss):.0f}%"
         if self.alerts is not None:
             firing = self.alerts.firing()
             if firing:
@@ -149,6 +167,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=192)
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache (page-table data plane)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed prompt prefix cache over the "
+                         "paged pool (implies --paged); the synthetic "
+                         "workload prepends a shared system prompt so the "
+                         "dashboard's pc_hit%% shows real sharing")
     ap.add_argument("--chunked", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="chunked prefill admission (--no-chunked falls "
@@ -231,6 +254,19 @@ def main(argv=None):
               f"tok {row.prefill_tokens}/{row.decode_tokens} "
               f"handoffs {row.exported + row.imported} "
               f"clock {row.freq_mhz:.0f}MHz")
+    if args.prefix_cache:
+        engines = [r.engine for r in server.backend.replicas] \
+            if args.cluster else [server.backend]
+        for eng in engines:
+            if eng.prefix_cache is None:
+                continue
+            st = eng.prefix_cache.stats()
+            print(f"  prefix-cache[{eng.name}]: hit_rate="
+                  f"{st['hit_rate'] * 100:.0f}% "
+                  f"({st['hits']} hits / {st['misses']} misses, "
+                  f"{st['hit_tokens']} prompt tokens served from cache, "
+                  f"{st['entries']} pages resident, "
+                  f"{st['evictions']} evictions)")
     if args.metrics_out:
         with open(args.metrics_out, "w") as fh:
             fh.write(metrics.render_prometheus())

@@ -371,6 +371,17 @@ def paged_chain_insert(cache: Dict, pages: Dict, chain):
             for k in cache}
 
 
+def paged_page_copy(cache: Dict, src, dst):
+    """Copy physical page ``src`` onto ``dst`` in every leaf of a stacked
+    paged pool dict (leaves (n_rep, num_pages, page_size, ...)).  The
+    copy-on-write step of prefix sharing: the allocator swaps a private page
+    into a chain, and this moves the shared page's K/V bits onto it so the
+    stream's subsequent in-place writes can't perturb other readers."""
+    s = jnp.asarray(src, jnp.int32)
+    d = jnp.asarray(dst, jnp.int32)
+    return {k: v.at[:, d].set(v[:, s]) for k, v in cache.items()}
+
+
 def cache_row_extract(cache: Dict, slot: int):
     """Copy one batch row out of a stacked dense cache dict (bounded ring
     buffers and recurrent SSM/RG-LRU states): leaves (n_rep, B, ...) ->

@@ -1,5 +1,6 @@
 from .engine import ServingEngine, EngineConfig, StreamHandoff
 from .pager import PageAllocator, SCRATCH_PAGE
+from .prefix_cache import PrefixCache
 from .cluster import (ServingCluster, ClusterDispatcher, Replica,
                       PrefillPhaseController)
 from .api import Backend, RequestHandle, Server, WatchdogConfig

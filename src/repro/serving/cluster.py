@@ -126,7 +126,12 @@ class ClusterDispatcher(LengthRouter):
             return min(cands, key=lambda r: (r.queue_depth(), r.vtime))
 
         def expected_ready(r: "Replica") -> float:
-            lengths = r.queued_lengths() + [req.prompt_len]
+            # effective_prefill_tokens: a replica whose prefix cache already
+            # holds this prompt's pages owes less work for it — placement
+            # and the busy-time clock plan see the computed tokens, not the
+            # nominal prompt length (identical when caching is off)
+            lengths = r.queued_lengths() + \
+                [r.engine.effective_prefill_tokens(req)]
             return r.vtime + optimizer.busy_time(lengths, r.freq)
 
         return min(cands, key=expected_ready)
@@ -166,7 +171,7 @@ class Replica:
         """Prefill tokens still owed: queued prompts in full, in-flight
         chunked prefills by their remaining chunks."""
         e = self.engine
-        return ([r.prompt_len for r in e.pending]
+        return ([e.effective_prefill_tokens(r) for r in e.pending]
                 + [max(len(cs.tokens) - cs.start, 0)
                    for cs in e.prefilling.values()])
 
@@ -551,6 +556,7 @@ class ServingCluster:
             # earliest adoptable instant — export time or backoff expiry
             r.advance_to(min(max(pi.ho.export_time, pi.next_try)
                              for pi in r.import_q))
+        e._evict_lapsed()       # opt-in: lapsed decoders free slots first
         self._drain_imports(r)
         e._admit()              # re-admits locally-preempted streams only
         e._advance_chunks()     # (recompute-on-resume; no raw prompts here)
@@ -559,6 +565,7 @@ class ServingCluster:
 
     def _step_colocated(self, r: Replica) -> None:
         e = r.engine
+        e._evict_lapsed()       # opt-in: lapsed decoders free slots first
         self._admit_arrived(r)
         e._advance_chunks()
         if e.active:

@@ -84,11 +84,13 @@ from repro.models import (ModelConfig, init_cache, init_params, prefill,
 from repro.models.config import FULL_ATTN, LOCAL_ATTN
 from repro.models.kvcache import (attn_buffer_len, is_paged,
                                   paged_chain_extract, paged_chain_insert,
+                                  paged_page_copy,
                                   cache_row_extract, cache_row_insert)
 from repro.sim import PlantModel
 from repro.sim.profiling import profile_decode_table
 from repro.core.hardware import HardwareProfile, A100_SXM4_40G
 from .pager import PageAllocator
+from .prefix_cache import PrefixCache
 
 # CPU XLA has no buffer donation; the jitted step is still correct, so keep
 # the log quiet on smoke runs (donation engages on TPU/GPU).
@@ -270,6 +272,19 @@ def _chunk_prefill_kernel(cfg, sampled, params, toks, start, length, caches,
     return tok, caches, pos
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _page_copy_kernel(caches, src, dst):
+    """Copy physical page ``src`` onto ``dst`` in every paged pool leaf —
+    the device half of copy-on-write (``PageAllocator.cow_page`` is the host
+    half).  Only dispatched when the engine is fully paged (every cache leaf
+    a page pool), so a uniform tree map is safe; donation keeps it from
+    duplicating the pools."""
+    out = []
+    for stage in caches:
+        out.append(tuple(paged_page_copy(d, src, dst) for d in stage))
+    return out
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8
@@ -295,6 +310,21 @@ class EngineConfig:
     # queue head is SHED instead of served — burning prefill+decode energy
     # on a guaranteed SLO miss only delays every request behind it
     shed_past_deadline: bool = True
+    # content-addressed prefix cache (serving.prefix_cache): admission
+    # matches the longest cached page-aligned prompt prefix and shares those
+    # pages (refcounted, copy-on-write) instead of re-prefilling them.
+    # Requires paged; only fully-paged models (dense/GQA/kv_quant full
+    # attention) actually share — hybrids with ring/recurrent state always
+    # miss.  Off by default: bare runs are step-for-step identical to
+    # pre-cache behavior.
+    prefix_cache: bool = False
+    prefix_cache_pages: int = 0     # retained-page cap (0 = pool-pressure
+    #                                 bounded: reclaim on allocation failure)
+    # deadline-aware eviction of *admitted* decoding streams (opt-in): a
+    # stream whose absolute deadline lapses mid-decode is freed via the
+    # cancel machinery and reported SHED — the tokens it would still emit
+    # are guaranteed-late, so the energy belongs to streams that can pass
+    evict_lapsed: bool = False
     # SLO targets for stats() pass-rate reporting (parity with
     # sim.replay.Metrics); virtual-time accounting itself is unaffected
     slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
@@ -340,6 +370,14 @@ class EngineConfig:
                     f"num_pages={self.num_pages} leaves no usable pages: "
                     "page 0 is the reserved scratch page (need num_pages "
                     ">= 2, or 0 for dense-equivalent capacity)")
+        if self.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache=True requires paged=True: cache entries are "
+                "refcounted pages in the PageAllocator pool")
+        if self.prefix_cache_pages < 0:
+            raise ValueError(
+                f"prefix_cache_pages must be >= 0, "
+                f"got {self.prefix_cache_pages}")
 
 
 @dataclasses.dataclass
@@ -401,6 +439,10 @@ class _ChunkState:
         self.resume_tok = resume_tok
         self.order = order          # admission sequence (preemption victims
         #                             are youngest-first across phases)
+        self.billed = False         # first *computed* chunk sets
+        #                             prefill_start (prefix-cache hits start
+        #                             at start > 0, so "start == 0" can't
+        #                             identify the first chunk)
 
 
 class ServingEngine:
@@ -456,6 +498,16 @@ class ServingEngine:
         self.caches = init_cache(cfg, B, ecfg.max_len,
                                  dtype=jnp.dtype(ecfg.cache_dtype),
                                  paged_pool=pool)
+        # prefix sharing is only sound when *every* cache leaf is a page
+        # pool: ring buffers and recurrent states carry per-position context
+        # outside the pages, so a shared chain would not reconstruct the
+        # stream.  Hybrid models keep the cache object (counters report the
+        # misses) but never share or register.
+        self._cacheable = ecfg.prefix_cache and all(
+            is_paged(d) for stage in self.caches for d in stage)
+        self.prefix_cache = PrefixCache(
+            self.pager, ecfg.prefix_cache_pages) \
+            if ecfg.prefix_cache else None
         self.active: Dict[int, _Stream] = {}
         self.prefilling: Dict[int, _ChunkState] = {}
         self.free_slots = list(range(B))
@@ -676,9 +728,29 @@ class ServingEngine:
             self._m["drop_decisions"] = reg.gauge(
                 "greenllm_tracer_dropped_decisions",
                 "DVFS decisions lost to ring-buffer overflow").labels()
+        if self.ecfg.prefix_cache:
+            # registered only when caching is on: a bare engine's metric
+            # families are byte-identical to pre-cache exposition
+            self._m["pc_hits"] = reg.counter(
+                "greenllm_prefix_cache_hits_total",
+                "admissions that matched >= 1 cached prompt page",
+                ("replica",)).labels(replica=r)
+            self._m["pc_misses"] = reg.counter(
+                "greenllm_prefix_cache_misses_total",
+                "admissions with no cached prefix", ("replica",)) \
+                .labels(replica=r)
+            self._m["pc_evictions"] = reg.counter(
+                "greenllm_prefix_cache_evictions_total",
+                "cache entries reclaimed under pool pressure",
+                ("replica",)).labels(replica=r)
+            self._m["pc_shared"] = reg.gauge(
+                "greenllm_prefix_cache_shared_pages",
+                "cached pages currently shared with live streams",
+                ("replica",)).labels(replica=r)
         # published-so-far totals: counters publish deltas at block cadence
         self._pub = {"e_pf": 0.0, "e_dec": 0.0, "e_idle": 0.0,
-                     "e_saved": 0.0, "tok_pf": 0, "tok_dec": 0}
+                     "e_saved": 0.0, "tok_pf": 0, "tok_dec": 0,
+                     "pc_hits": 0, "pc_misses": 0, "pc_evictions": 0}
         self._obs_tbt = TBTMeter(horizon=1.0)
 
     def _publish_metrics(self) -> None:
@@ -716,6 +788,16 @@ class ServingEngine:
             occ = self.pager.occupancy()
             m["occ"].set(occ["occupancy"])
             m["frag"].set(occ["fragmentation"])
+        if self.prefix_cache is not None and "pc_hits" in m:
+            pc = self.prefix_cache
+            for key, cur in (("pc_hits", pc.hits),
+                             ("pc_misses", pc.misses),
+                             ("pc_evictions", pc.evictions)):
+                d = cur - pub[key]
+                if d > 0:
+                    m[key].inc(d)
+                    pub[key] = cur
+            m["pc_shared"].set(pc.shared_pages())
         if self._obs_tbt is not None and len(self._obs_tbt):
             p95 = self._obs_tbt.p95(self.vtime)
             if p95 > 0.0:               # nan-safe: hold last on empty window
@@ -903,6 +985,7 @@ class ServingEngine:
         if self.tracer is not None:
             self.tracer.span("prefill", req.rid, t0, self.vtime, self.name,
                              tokens=L, bucket=bucket)
+        self._register_prefix(req, slot, L)
         self._publish_metrics()
         # one tiny host read per admission (the first sampled token id)
         self._start_stream(req, slot, int(self._tok[slot]), L)
@@ -956,11 +1039,23 @@ class ServingEngine:
             resume = bool(req.tokens)        # preempted stream: recompute
             ctx_toks = req.prompt if not resume else np.concatenate(
                 [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
-            if self.pager is not None and not self.pager.can_admit(
-                    min(len(ctx_toks), self.chunk_len)):
-                break                        # FIFO head-of-line: wait for pages
+            need = min(len(ctx_toks), self.chunk_len)
+            if self.pager is not None and not self.pager.can_admit(need):
+                # cached prefixes are strictly less valuable than admitting
+                # live work: evict before stalling the FIFO head
+                if not (self._reclaim_cached()
+                        and self.pager.can_admit(need)):
+                    break                    # FIFO head-of-line: wait for pages
             self.pending.pop(0)
             slot = self.free_slots.pop(0)
+            # longest-cached-prefix match (after the admission gates: a
+            # lookup that can't admit must not skew hit/miss counters).
+            # Resumed streams match too — their prompt pages are often
+            # still cached, so recompute-on-resume skips them as well.
+            hit_pages: List[int] = []
+            hit_tok = 0
+            if self._cacheable:
+                hit_pages, hit_tok = self.prefix_cache.lookup(ctx_toks)
             if self.tracer is not None:
                 self.tracer.span("queue", req.rid,
                                  max(req.arrival, req.not_before),
@@ -968,25 +1063,89 @@ class ServingEngine:
                                  resume=resume)
             if not self.ecfg.slot_native:
                 self._admit_legacy(req, slot)
-            elif resume or len(ctx_toks) > self.buckets[-1]:
+            elif hit_tok or resume or len(ctx_toks) > self.buckets[-1]:
                 if self._chunked:
-                    self._start_chunked(req, slot, ctx_toks, resume)
+                    self._start_chunked(req, slot, ctx_toks, resume,
+                                        hit_pages, hit_tok)
                 else:
                     self._admit_legacy(req, slot)
             else:
                 self._admit_slot(req, slot)
 
     def _start_chunked(self, req: Request, slot: int, ctx_toks: np.ndarray,
-                       resume: bool):
+                       resume: bool, hit_pages: Optional[List[int]] = None,
+                       hit_tok: int = 0):
         """Admit via chunked prefill: the stream owns ``slot`` now but joins
-        the decode batch only after its last chunk (``_advance_chunks``)."""
+        the decode batch only after its last chunk (``_advance_chunks``).
+
+        A prefix-cache hit (``hit_tok`` > 0) seeds the slot's chain with the
+        shared pages and starts chunking at ``hit_tok`` instead of 0 — the
+        matched tokens' K/V is the cached bits, never recomputed.  When the
+        match isn't page-aligned (a fully-covered prompt, capped so one real
+        token remains for the first-token logits) the partially-reused last
+        page is copied-on-write first: the chunk at ``hit_tok`` rewrites that
+        page's final position, and shared pages are immutable."""
+        if hit_tok:
+            hit_tok = self._share_prefix(slot, hit_pages, hit_tok)
         self._order += 1
         self._set_slot_sampling(slot, req)
-        self.prefilling[slot] = _ChunkState(
+        cs = _ChunkState(
             req, slot, np.asarray(ctx_toks, np.int32),
             resume_tok=req.tokens[-1] if resume else None, order=self._order)
+        cs.start = hit_tok
+        self.prefilling[slot] = cs
         req.state = RequestState.PREFILLING
         self._emit(StateEvent(req.rid, self.vtime, RequestState.PREFILLING))
+
+    def _share_prefix(self, slot: int, pages: List[int], hit_tok: int) -> int:
+        """Adopt cached pages into ``slot``'s chain (refcount bump, no data
+        movement), CoW the last page if the hit ends mid-page, and seed the
+        device position so the held-position write of the still-inactive row
+        lands at ``hit_tok`` (inside the private/unallocated region, never a
+        shared page).  Returns the effective hit length — 0 when the CoW
+        cannot get a page even after reclaiming, in which case the share is
+        rolled back and admission proceeds as a miss."""
+        ps = self.ecfg.page_size
+        self.pager.share_chain(slot, pages)
+        if hit_tok % ps:
+            # the hit ends inside pages[-1]: CoW before the chunk at
+            # hit_tok rewrites its final position
+            old = pages[-1]
+            new = self.pager.cow_page(slot, len(pages) - 1)
+            if new is None and self._reclaim_cached():
+                new = self.pager.cow_page(slot, len(pages) - 1)
+            if new is None:
+                self.pager.free_chain(slot)     # roll back: admit as a miss
+                return 0
+            if new != old:
+                self.caches = _page_copy_kernel(
+                    self.caches, jnp.asarray(old, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+        self._pos = self._pos.at[slot].set(hit_tok)
+        if self.tracer is not None:
+            self.tracer.instant("prefix_hit", -1, self.vtime, self.name,
+                                pages=len(pages), tokens=hit_tok)
+        return hit_tok
+
+    def _reclaim_cached(self) -> bool:
+        """Evict up to a chunk's worth of LRU cache-only pages back to the
+        pool; False when caching is off or nothing is evictable (the caller
+        falls through to preemption / head-of-line wait)."""
+        if self.prefix_cache is None:
+            return False
+        return self.prefix_cache.reclaim(
+            -(-self.chunk_len // self.ecfg.page_size)) > 0
+
+    def _register_prefix(self, req: Request, slot: int, upto: int) -> None:
+        """Publish the fully-written prompt pages of ``slot``'s chain into
+        the cache (dedup by digest: already-known pages are LRU-touched,
+        not re-retained)."""
+        if not self._cacheable or req.prompt is None:
+            return
+        chain = self.pager.chains.get(slot)
+        if chain:
+            self.prefix_cache.register(req.prompt, chain,
+                                       min(upto, len(req.prompt)))
 
     def _advance_chunks(self) -> bool:
         """Process one chunk for every mid-prefill stream (called once per
@@ -1000,7 +1159,8 @@ class ServingEngine:
             chunk = cs.tokens[cs.start: cs.start + self.chunk_len]
             if self.pager is not None:
                 ok = self.pager.ensure(slot, cs.start + len(chunk))
-                while not ok and self._preempt_for_pages(exclude=slot):
+                while not ok and (self._reclaim_cached()
+                                  or self._preempt_for_pages(exclude=slot)):
                     ok = self.pager.ensure(slot, cs.start + len(chunk))
                 if not ok:
                     continue             # stall this chunk; retry next block
@@ -1022,12 +1182,14 @@ class ServingEngine:
             # resumed streams keep their original prefill_start/first_token
             t0 = self.vtime
             self._account_prefill_tokens(
-                len(chunk), cs.start == 0 and cs.resume_tok is None, cs.req)
+                len(chunk), not cs.billed and cs.resume_tok is None, cs.req)
+            cs.billed = True
             if self.tracer is not None:
                 self.tracer.span("prefill_chunk", cs.req.rid, t0, self.vtime,
                                  self.name, chunk_start=cs.start,
                                  tokens=len(chunk))
             cs.start += len(chunk)
+            self._register_prefix(cs.req, slot, cs.start)
             progressed = True
             if cs.start >= len(cs.tokens):
                 finished.append(slot)
@@ -1146,6 +1308,24 @@ class ServingEngine:
                                 tokens_emitted=req.tokens_emitted)
         return True
 
+    def _evict_lapsed(self) -> None:
+        """Deadline-aware eviction of *admitted* decoding streams (opt-in
+        via ``EngineConfig.evict_lapsed``): a stream whose absolute deadline
+        has lapsed mid-decode is freed through the same release path as
+        ``cancel`` and reported SHED — every further token it would emit is
+        guaranteed-late, so its slot, pages, and energy go to streams that
+        can still pass.  Block-granular like every host-side decision;
+        survivors are untouched (freed pages' held-position writes land in
+        the scratch page)."""
+        if not self.ecfg.evict_lapsed:
+            return
+        for slot, st in list(self.active.items()):
+            req = st.req
+            if req.deadline >= 0 and self.vtime > req.deadline + 1e-12:
+                del self.active[slot]
+                self._release_slot(slot)
+                self._mark_shed(req)
+
     def _mark_shed(self, req: Request) -> None:
         req.state = RequestState.SHED
         self._shed += 1
@@ -1232,6 +1412,8 @@ class ServingEngine:
         chain = None
         if ho.n_pages:
             chain = self.pager.adopt_chain(slot, ho.n_pages)
+            if chain is None and self._reclaim_cached():
+                chain = self.pager.adopt_chain(slot, ho.n_pages)
             if chain is None:
                 return False
         self.free_slots.pop(0)
@@ -1258,6 +1440,9 @@ class ServingEngine:
         if ho.sampling is not None:
             ho.req.sampling = ho.sampling
         self._set_slot_sampling(slot, ho.req)
+        # the adopted chain's prompt pages are this pool's bits now: re-share
+        # them so later arrivals with the same prompt hit on this replica too
+        self._register_prefix(ho.req, slot, ho.pos)
         if self.ledger is not None:
             # no-op when the exporter billed into this same ledger (the
             # cluster shares one); across distinct ledgers the request's
@@ -1330,6 +1515,9 @@ class ServingEngine:
                              key=lambda kv: kv[1].order)   # oldest first
             if all(self.pager.ensure(s, st.pos + k) for s, st in ordered):
                 return k
+            if self._reclaim_cached():
+                continue        # cache-only pages go before k shrinks or
+                #                 anything live is preempted
             if k > 1:
                 k = max(k // 2, 1)
                 continue
@@ -1459,7 +1647,11 @@ class ServingEngine:
                                   RequestState.FINISHED))
         self._retire(done)
         if self.pager is not None:
-            occ = self.pager.occupancy()["occupancy"]
+            # occupancy_live excludes cache-only (evictable) pages: a pool
+            # full of reclaimable prefixes is not memory pressure, and the
+            # controller's occ_high bias must not chase it.  Bitwise equal
+            # to raw occupancy whenever the cache holds nothing.
+            occ = self.pager.occupancy()["occupancy_live"]
             self._occupancy.record(self.vtime, occ)
             # memory pressure is a controller input: sustained high pool
             # occupancy biases the coarse loop toward higher clocks so
@@ -1549,6 +1741,7 @@ class ServingEngine:
         This is the ``Backend.step`` entry point: the ``serving.api``
         driver loop calls it with no argument; pass ``k=1`` for
         single-step-granularity tests."""
+        self._evict_lapsed()     # opt-in: lapsed decoders free slots first
         self._admit()
         progressed = False
         if self.ecfg.slot_native:
@@ -1585,6 +1778,18 @@ class ServingEngine:
         """Backend protocol: the engine's current virtual time (the clock
         the ``Server.run`` watchdog compares request wall-budgets against)."""
         return self.vtime
+
+    def effective_prefill_tokens(self, req: Request) -> int:
+        """Prefill tokens this engine would actually *compute* for ``req``:
+        the prompt length minus the currently-cached prefix (a pure probe —
+        no counters, no LRU touch).  ``PrefillOptimizer.busy_time`` and the
+        cluster's routing/retuning consume this so clock selection and
+        placement see the real work, not the nominal prompt length.  Exactly
+        ``req.prompt_len`` whenever caching is off or the prompt tokens are
+        not yet materialized."""
+        if not self._cacheable or req.prompt is None:
+            return req.prompt_len
+        return max(req.prompt_len - self.prefix_cache.probe(req.prompt), 1)
 
     def page_occupancy_peak(self) -> float:
         """Peak page-pool occupancy over the run (0 when unpaged)."""
@@ -1662,9 +1867,16 @@ class ServingEngine:
             s.update({
                 "pages_used": occ["pages_used"],
                 "pages_total": occ["pages_total"],
+                "pages_shared": occ["pages_shared"],
+                "pages_reserved": occ["pages_reserved"],
+                "pages_cached": occ["pages_cached"],
                 "page_occupancy": occ["occupancy"],
+                "page_occupancy_live": occ["occupancy_live"],
                 "page_occupancy_peak": occ["peak_occupancy"],
                 "page_fragmentation": occ["fragmentation"],
                 "preempted": self._preempted,
             })
+        if self.prefix_cache is not None:
+            pc = self.prefix_cache.stats()
+            s.update({f"prefix_cache_{k}": v for k, v in pc.items()})
         return s

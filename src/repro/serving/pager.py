@@ -24,6 +24,18 @@ Page 0 is a reserved scratch page: freed streams' table rows point at it, so
 the (held) writes of inactive batch rows inside a decode block land in scratch
 instead of corrupting pages that may have been reallocated to other streams.
 Reads from scratch are position-masked exactly like unwritten dense slots.
+
+**Refcounted sharing** (serving.prefix_cache): a physical page may be held by
+several stream chains at once (a shared prompt prefix) and/or retained by the
+prefix cache itself.  ``ref[p]`` counts the holders — one per chain containing
+``p`` plus one if the cache retains it — and a page returns to the free list
+only when the count reaches zero.  ``share_chain`` seeds a fresh chain from
+existing pages (incref, no data movement), ``cow_page`` gives one chain a
+private copy of a shared page before its first write (copy-on-write on
+divergence; the *contents* are copied by the caller on device), and
+``retain``/``release`` are the cache's grip.  All existing call sites see the
+old exclusive-ownership behavior unchanged: without sharing every ref is 1
+and ``free_chain`` frees eagerly, exactly as before.
 """
 from __future__ import annotations
 
@@ -38,12 +50,15 @@ class PageAllocator:
     """Free-list page allocator with per-stream chains and a host-shadowed
     device page table.
 
-    Invariants (property-tested in tests/test_paging.py):
-    * a physical page is in exactly one place: the free list or one chain
-      (double frees raise);
-    * ``pages_used + pages_free == num_pages - 1`` (scratch excluded);
-    * chains grow monotonically between ``free_chain`` calls and are returned
-      to the free list in full at retire;
+    Invariants (property-tested in tests/test_paging.py and, under sharing,
+    tests/test_prefix_cache.py):
+    * a physical page is either on the free list (ref 0) or held (ref ==
+      #chains containing it + 1 if cache-retained); double frees raise;
+    * ``pages_used + pages_free == num_pages - 1`` (scratch excluded), where
+      ``pages_used`` counts *distinct* held pages — a page shared by N
+      streams is one page, not N;
+    * chains grow monotonically between ``free_chain`` calls and drop every
+      reference at retire (pages with no other holder return to the pool);
     * table rows of unallocated logical pages (and of freed streams) point at
       ``SCRATCH_PAGE``.
     """
@@ -59,6 +74,10 @@ class PageAllocator:
         self._free_set = set(self._free)
         self.chains: Dict[int, List[int]] = {}
         self._reserved: List[int] = []   # withheld by reserve() (fault inj.)
+        # holder counts: chains containing the page + 1 if cache-retained;
+        # 0 <=> on the free list (scratch excluded from both)
+        self.ref = np.zeros(num_pages, np.int32)
+        self._retained = set()           # pages gripped by the prefix cache
         self.peak_used = 0               # run peak, monotone (telemetry)
         self.table = np.full((max_streams, max_pages_per_stream),
                              SCRATCH_PAGE, np.int32)
@@ -133,25 +152,109 @@ class PageAllocator:
         for _ in range(need):
             page = self._free.pop()
             self._free_set.discard(page)
+            self.ref[page] = 1
             self.table[slot, len(chain)] = page
             chain.append(page)
         self.peak_used = max(self.peak_used, self.pages_used)
         self._dirty = True
         return True
 
-    def free_chain(self, slot: int) -> int:
-        """Return every page of ``slot``'s chain to the free list and point
-        the table row back at scratch.  Returns the number of pages freed."""
-        chain = self.chains.pop(slot, [])
-        for page in chain:
-            if page in self._free_set or page == SCRATCH_PAGE:
-                raise ValueError(f"double free of page {page} (slot {slot})")
+    def _drop_ref(self, page: int, who: str) -> None:
+        """Release one holder's reference; the page returns to the free list
+        only when nobody — chain or cache — holds it anymore."""
+        if page in self._free_set or page == SCRATCH_PAGE \
+                or self.ref[page] <= 0:
+            raise ValueError(f"double free of page {page} ({who})")
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
             self._free.append(page)
             self._free_set.add(page)
+
+    def free_chain(self, slot: int) -> int:
+        """Drop ``slot``'s reference on every page of its chain (pages with
+        no other holder return to the free list) and point the table row
+        back at scratch.  Returns the chain length released."""
+        chain = self.chains.pop(slot, [])
+        for page in chain:
+            self._drop_ref(page, f"slot {slot}")
         if chain:
             self.table[slot, :] = SCRATCH_PAGE
             self._dirty = True
         return len(chain)
+
+    # -- prefix sharing (serving.prefix_cache) --------------------------------
+    def share_chain(self, slot: int, pages: List[int]) -> None:
+        """Seed ``slot``'s (empty) chain with existing live pages — no data
+        moves, each page just gains a reference.  This is how a prefix-cache
+        hit adopts the cached pages of a shared prompt."""
+        if self.chains.get(slot):
+            raise ValueError(f"slot {slot} already holds a chain; "
+                             "free it before sharing into it")
+        if len(pages) > self.max_pages_per_stream:
+            raise ValueError(
+                f"shared prefix of {len(pages)} pages "
+                f"> max_pages_per_stream={self.max_pages_per_stream}")
+        chain = []
+        for i, page in enumerate(pages):
+            if page == SCRATCH_PAGE or page in self._free_set \
+                    or self.ref[page] <= 0:
+                raise ValueError(f"cannot share dead page {page}")
+            self.ref[page] += 1
+            self.table[slot, i] = page
+            chain.append(page)
+        self.chains[slot] = chain
+        if chain:
+            self._dirty = True
+
+    def cow_page(self, slot: int, logical: int) -> Optional[int]:
+        """Copy-on-write: give ``slot`` a private copy of logical page
+        ``logical`` before its first write into it.  Exclusively-held pages
+        are already private (returned as-is); shared ones are swapped for a
+        fresh page (or None — changing nothing — if the pool is dry).  The
+        caller must copy the page *contents* on device (e.g.
+        ``kvcache.paged_page_copy``) when the returned id differs."""
+        chain = self.chains[slot]
+        page = chain[logical]
+        if self.ref[page] == 1:
+            return page
+        if not self._free:
+            return None
+        new = self._free.pop()
+        self._free_set.discard(new)
+        self.ref[new] = 1
+        self.ref[page] -= 1       # >= 1 left: another chain or the cache
+        chain[logical] = new
+        self.table[slot, logical] = new
+        self.peak_used = max(self.peak_used, self.pages_used)
+        self._dirty = True
+        return new
+
+    def retain(self, page: int) -> None:
+        """The prefix cache grips ``page``: it survives ``free_chain`` until
+        ``release``d, keeping its contents addressable for future hits."""
+        if page == SCRATCH_PAGE or page in self._free_set \
+                or self.ref[page] <= 0:
+            raise ValueError(f"cannot retain dead page {page}")
+        if page in self._retained:
+            raise ValueError(f"page {page} already retained")
+        self.ref[page] += 1
+        self._retained.add(page)
+
+    def release(self, page: int) -> None:
+        """Drop the cache's grip on ``page`` (eviction); the page frees now
+        if no chain still holds it, or when the last chain retires."""
+        if page not in self._retained:
+            raise ValueError(f"page {page} is not retained")
+        self._retained.discard(page)
+        self._drop_ref(page, "cache")
+
+    def stream_refs(self, page: int) -> int:
+        """How many stream chains hold ``page`` (cache grip excluded)."""
+        return int(self.ref[page]) - (1 if page in self._retained else 0)
+
+    @property
+    def pages_retained(self) -> int:
+        return len(self._retained)
 
     # -- migration (replica-to-replica paged-KV handoff) ----------------------
     def export_chain(self, slot: int) -> List[int]:
@@ -195,22 +298,49 @@ class PageAllocator:
         """Pool pressure for ``stats()``/telemetry: later energy PRs feed
         ``occupancy`` to the controller as a memory-pressure input.
 
+        Reserved, shared, and cache-retained pages are counted *distinctly*:
+        ``pages_used`` is derived from the free list, so a page shared by N
+        streams contributes one page, and ``pages_shared`` /
+        ``pages_reserved`` / ``pages_cached`` break the total down without
+        double-counting.  ``occupancy_live`` excludes pages only the prefix
+        cache holds (evictable on demand) — the decode controller's
+        ``occ_high`` bias reads this so a warm cache is not mistaken for
+        pool pressure.
+
         ``fragmentation`` is internal (last-page slack): 1 - live tokens /
-        token slots held.  There is no external fragmentation — pages are
-        uniform — so this is the only capacity lost to the page granularity.
+        token slots held, over *distinct* held pages — a shared page's
+        utilization is the max coverage over its sharers.  There is no
+        external fragmentation — pages are uniform — so this is the only
+        capacity lost to the page granularity.
         """
         usable = self.num_pages - 1
         used = self.pages_used
+        counts: Dict[int, int] = {}
+        for chain in self.chains.values():
+            for p in chain:
+                counts[p] = counts.get(p, 0) + 1
+        shared = sum(1 for n in counts.values() if n > 1)
+        # pages only the cache holds (no chain): freeable by eviction
+        evictable = sum(1 for p in self._retained if p not in counts)
         frag = 0.0
         if live_tokens is not None and used:
-            held = sum(len(self.chains.get(s, [])) for s in live_tokens)
-            live = sum(live_tokens.values())
-            if held:
-                frag = 1.0 - live / (held * self.page_size)
+            ps = self.page_size
+            cover: Dict[int, int] = {}
+            for s, live in live_tokens.items():
+                for i, p in enumerate(self.chains.get(s, [])):
+                    c = min(max(live - i * ps, 0), ps)
+                    cover[p] = max(cover.get(p, 0), c)
+            if cover:
+                frag = 1.0 - sum(cover.values()) / (len(cover) * ps)
         return {
             "pages_used": used,
             "pages_total": usable,
+            "pages_shared": shared,
+            "pages_reserved": len(self._reserved),
+            "pages_cached": len(self._retained),
+            "pages_evictable": evictable,
             "occupancy": used / usable if usable else 0.0,
+            "occupancy_live": (used - evictable) / usable if usable else 0.0,
             "peak_occupancy": self.peak_used / usable if usable else 0.0,
             "fragmentation": frag,
         }

@@ -383,3 +383,88 @@ def test_watchdog_stops_a_stuck_backend():
     assert srv.stuck is True
     assert rounds == 5
     assert h.state is RequestState.FAILED
+
+
+# -- prefix-cache interactions (PR 9) ------------------------------------------
+
+def test_cancel_storm_with_prefix_cache_leaks_nothing(params):
+    """The cancel storm over shared-prefix traffic with the prefix cache
+    enabled: cancelled sharers must not corrupt survivors (bit-identical to
+    the storm-free cache-on run) and the only pages left after the drain
+    are the cache's own grip — clearing it returns the pool to baseline."""
+    rng = np.random.default_rng(21)
+    head = rng.integers(0, CFG.vocab_size, size=16)
+    prompts = [np.concatenate(
+        [head, rng.integers(0, CFG.vocab_size, size=6)]) for _ in range(60)]
+
+    def run(cancel):
+        eng = ServingEngine(CFG, params=params,
+                            ecfg=_ecfg(prefix_cache=True))
+        srv = Server(eng)
+        hs = [srv.submit(p, SamplingParams(max_tokens=6)) for p in prompts]
+        if cancel:
+            for h in hs[::3]:
+                h.cancel()
+            srv._pump()
+            for h in hs[1::3]:
+                h.cancel()
+        srv.run()
+        return eng, hs
+
+    eng, hs = run(cancel=True)
+    st = eng.stats()
+    assert st["completed"] + st["cancelled"] == len(prompts)
+    assert st["cancelled"] >= len(prompts) // 3
+    assert st["prefix_cache_hits"] > 0
+    # only the cache still holds pages; dropping it restores baseline
+    assert eng.pager.pages_used == eng.pager.pages_retained > 0
+    eng.prefix_cache.clear()
+    _pool_at_baseline(eng)
+    survivors = [h.request.tokens for h in hs[2::3]
+                 if h.state is RequestState.FINISHED]
+    _, clean = run(cancel=False)
+    clean_toks = [h.request.tokens for h in clean[2::3]]
+    assert survivors == clean_toks[:len(survivors)]
+    assert len(survivors) == len(clean_toks)
+
+
+def test_evict_lapsed_sheds_mid_decode_and_survivors_exact(params):
+    """Deadline-aware eviction of admitted streams (opt-in
+    ``EngineConfig.evict_lapsed``): a stream whose deadline lapses
+    mid-decode is freed through the cancel release path and reported SHED
+    with ``deadline_ok is False``; without the flag the same request
+    finishes (late).  Survivors are bit-identical either way."""
+    rng = np.random.default_rng(23)
+    doomed_prompt = rng.integers(0, CFG.vocab_size, size=10)
+    other_prompts = [rng.integers(0, CFG.vocab_size, size=10)
+                     for _ in range(3)]
+
+    def run(evict, deadline):
+        eng = ServingEngine(CFG, params=params,
+                            ecfg=_ecfg(evict_lapsed=evict, decode_block=4))
+        srv = Server(eng)
+        doomed = srv.submit(doomed_prompt, SamplingParams(max_tokens=64),
+                            deadline=deadline)
+        others = [srv.submit(p, SamplingParams(max_tokens=8))
+                  for p in other_prompts]
+        rep = srv.run()
+        return doomed, others, rep
+
+    # pilot: how long does the doomed stream take unmolested?
+    d0, o0, rep0 = run(evict=False, deadline=1e9)
+    assert d0.state is RequestState.FINISHED
+    lapse = 0.5 * rep0.duration_s          # admits fine, lapses mid-decode
+
+    d1, o1, rep1 = run(evict=False, deadline=lapse)
+    assert d1.state is RequestState.FINISHED     # without the flag: late
+    d2, o2, rep2 = run(evict=True, deadline=lapse)
+    assert d2.state is RequestState.SHED
+    assert d2.request.tokens                     # it *was* decoding
+    assert len(d2.request.tokens) < 64
+    assert rep2.shed == 1
+    (row,) = [r for r in rep2.requests if r.state is RequestState.SHED]
+    assert row.deadline_ok is False
+    # survivors untouched by the eviction (f32 rows are batch-independent)
+    assert [h.request.tokens for h in o2] == \
+        [h.request.tokens for h in o0] == [h.request.tokens for h in o1]
+    assert all(h.state is RequestState.FINISHED for h in o2)

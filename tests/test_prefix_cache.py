@@ -1,0 +1,591 @@
+"""Prefix-cache subsystem tests (ROADMAP item 3): content-addressed sharing
+of page-aligned prompt chunks over the paged KV pool.
+
+The headline guarantee is the strong one: a request whose prompt *hits* the
+cache (adopting another stream's physical pages via ``share_chain`` and
+prefilling only the tail) emits tokens **bit-identical** to the same request
+served cold — greedy rows because f32 rows are batch-independent, seeded
+rows because the per-stream RNG lane folds in absolute position only.  Like
+tests/test_paging.py, every equivalence run therefore pins model compute and
+K/V storage to float32: a hit routes through chunked prefill while the cold
+twin may one-shot, two summation orders that agree bitwise in f32 but differ
+by an ulp in bf16.
+
+Below the engine, ``PrefixCache`` unit tests pin the digest-chain contract
+(one divergent token kills every later page's match) and the eviction rules
+(LRU over unreferenced leaves only — never a page a live chain still holds),
+and the allocator property storm extends tests/test_paging.py's invariants
+to refcounted sharing: conservation, ref == holders, no aliasing, no leaks.
+The storm runs under hypothesis when available and falls back to seeded
+numpy randomness (same invariants, fixed corpus) when not.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EnergyLedger, Request, RequestState, SamplingParams,
+                        verify_conservation)
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+from repro.serving import (EngineConfig, FaultPlan, ReplicaKill, Server,
+                           ServingCluster, ServingEngine)
+from repro.serving.pager import SCRATCH_PAGE, PageAllocator
+from repro.serving.prefix_cache import PrefixCache
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - env-dependent
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+MAXLEN = 96
+PS = 16                                  # page size used by every engine here
+
+
+def _cfg(variant: str) -> ModelConfig:
+    # identical to tests/test_paging.py's configs *including the name*: the
+    # engine's jitted steps key their compile cache on the (static, frozen)
+    # ModelConfig, so reusing the exact value means this module re-uses the
+    # paging suite's compiled executables instead of re-JITting every
+    # bucket x variant shape under a fresh name (the full tier-1 run has
+    # enough compilations in one process without gratuitous duplicates)
+    kw = dict(name=f"tp-{variant}", arch_type="dense", num_layers=2,
+              d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+              vocab_size=128, dtype="float32", max_seq=512)
+    if variant == "gqa":
+        kw["num_kv_heads"] = 2
+    elif variant == "kv_quant":
+        kw.update(num_kv_heads=2, kv_quant=True)
+    return ModelConfig(**kw)
+
+
+CFG = _cfg("full")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_cache():
+    """By the time this module runs, the tier-1 suite has JITted hundreds
+    of executables in one process, and on the single-core CI runner
+    XLA:CPU's JIT has been observed to segfault on the next *fresh*
+    compilation past that load (the faulthandler stack bottoms out in
+    ``backend_compile``).  Dropping the accumulated executables first
+    resets the process to this module's standalone compile set, which
+    passes; the shared-name configs above keep the recompile bill small."""
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(KEY, CFG)
+
+
+def _ecfg(cache=True, **kw):
+    kw.setdefault("cache_dtype", "float32")
+    kw.setdefault("governor", "defaultnv")
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("page_size", PS)
+    return EngineConfig(max_len=MAXLEN, paged=True, prefix_cache=cache, **kw)
+
+
+def _engine(cfg, params, cache=True, **kw):
+    return ServingEngine(cfg, params=params, ecfg=_ecfg(cache, **kw))
+
+
+def _reference_tokens(params, cfg, prompt, output_len):
+    caches = init_cache(cfg, 1, MAXLEN, dtype=jnp.float32)
+    lg, caches, pos = prefill(params, cfg,
+                              jnp.asarray(prompt, jnp.int32)[None], caches)
+    toks = [int(jnp.argmax(lg[0]))]
+    while len(toks) < max(output_len, 2) and pos < MAXLEN - 1:
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 caches, jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
+def _shared_head_burst(cfg, n=6, head_len=32, seed=2, max_tokens=8):
+    """n prompts sharing a head_len-token head, mixed greedy + seeded
+    sampling — hits must replay both.  Tails keep total length under
+    max_len // 2 so the engine's keep-the-tail prompt truncation never
+    chops the shared head."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, size=head_len)
+    prompts = [np.concatenate(
+        [head, rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 12)))])
+        for _ in range(n)]
+    sps = [SamplingParams(max_tokens=max_tokens, temperature=0.7,
+                          seed=100 + i) if i % 2 else
+           SamplingParams(max_tokens=max_tokens) for i in range(n)]
+    return prompts, sps
+
+
+def _force_chunk(eng, n=16):
+    """Shrink the admission buckets so prompts > n take the chunked path
+    (same helper as tests/test_paging.py)."""
+    eng.buckets = [b for b in eng.buckets if b <= n] or [n]
+    eng.chunk_len = eng.buckets[-1]
+
+
+def _run_engine(cfg, params, prompts, sps, cache, **kw):
+    eng = _engine(cfg, params, cache, **kw)
+    srv = Server(eng)
+    hs = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+    rep = srv.run()
+    return eng, rep, [h.request.tokens for h in hs]
+
+
+# -- hit == miss, bit-identical ------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["full", "gqa", "kv_quant"])
+def test_hit_matches_miss_token_exact(variant):
+    """A shared-prefix burst through a cache-enabled engine emits tokens
+    bit-identical to the cache-off run — greedy and seeded rows — and the
+    greedy rows also match the scalar one-stream reference."""
+    cfg = _cfg(variant)
+    params = init_params(KEY, cfg)
+    prompts, sps = _shared_head_burst(cfg)
+    _, _, cold = _run_engine(cfg, params, prompts, sps, cache=False)
+    eng, rep, warm = _run_engine(cfg, params, prompts, sps, cache=True)
+    assert warm == cold
+    assert rep.completed == len(prompts)
+    st = eng.stats()
+    assert st["prefix_cache_hits"] > 0
+    assert st["prefix_cache_hit_tokens"] >= st["prefix_cache_hits"] * PS
+    for p, t, sp in zip(prompts, warm, sps):
+        if sp.temperature is None:
+            assert t == _reference_tokens(params, cfg, p, sp.max_tokens)
+
+
+def test_fully_covered_prompt_cow_exact(params):
+    """Resubmitting an identical prompt is the copy-on-write case: the
+    matched-token cap forces the last cached page to be rewritten at its
+    final position, so the hit stream must get a private copy first.  Both
+    the page-aligned and mid-page prompt lengths stay token-exact across
+    three generations of resubmission, and the cached bits stay pristine."""
+    for size in (2 * PS, 2 * PS + 5):        # aligned / mid-page
+        rng = np.random.default_rng(size)
+        prompt = rng.integers(0, CFG.vocab_size, size=size)
+        prompts, sps = [prompt] * 3, [SamplingParams(max_tokens=8)] * 3
+        eng, rep, toks = _run_engine(CFG, params, prompts, sps, cache=True)
+        ref = _reference_tokens(params, CFG, prompt, 8)
+        assert toks == [ref] * 3
+        assert rep.completed == 3
+        assert eng.stats()["prefix_cache_hits"] >= 1
+
+
+def test_hit_exact_under_pool_pressure(params):
+    """An over-committed pool with the cache competing for pages: reclaim
+    (evict unreferenced cached prefixes) and preemption must between them
+    drain the burst completely, token-exactly vs the cache-off twin.
+    Pressure comes from reserving most of the default pool (the
+    fault-injection hook) rather than shrinking ``num_pages``, so the
+    buffer shapes — and therefore the compiled executables — are the same
+    ones every other test here uses."""
+    prompts, sps = _shared_head_burst(CFG, n=4, head_len=PS, seed=3,
+                                      max_tokens=16)
+
+    def run(cache):
+        eng = _engine(CFG, params, cache)
+        _force_chunk(eng)
+        eng.pager.reserve(eng.pager.pages_free - 7)   # 7 usable pages
+        srv = Server(eng)
+        hs = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+        rep = srv.run()
+        return eng, rep, [h.request.tokens for h in hs]
+
+    _, _, cold = run(False)
+    eng, rep, warm = run(True)
+    assert warm == cold
+    assert rep.completed == len(prompts)
+    st = eng.stats()
+    assert st["preempted"] + st["prefix_cache_evictions"] > 0
+    assert eng.pager.pages_used == \
+        eng.pager.pages_retained + eng.pager.pages_reserved
+
+
+def test_cancel_hit_stream_leaves_sharers_exact(params):
+    """Cancelling streams that share cached pages mid-flight must not
+    disturb the survivors (bit-identical to the cancel-free run) and must
+    not leak: after the drain the only pages still held are the cache's,
+    and clearing the cache returns the pool to baseline."""
+    prompts, sps = _shared_head_burst(CFG, n=9, seed=5, max_tokens=20)
+
+    def run(cancel):
+        # small decode blocks keep streams in flight across pumps, so the
+        # cancel wave hits admitted sharers mid-decode (and one queued)
+        eng = _engine(CFG, params, cache=True, decode_block=4)
+        srv = Server(eng)
+        hs = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+        if cancel:
+            srv._pump()
+            for h in hs[::3]:
+                h.cancel()
+        srv.run()
+        return eng, hs
+
+    eng, hs = run(cancel=True)
+    assert all(h.state is RequestState.CANCELLED for h in hs[::3])
+    assert any(h.request.tokens for h in hs[::3])   # died mid-decode
+    survivors = [h.request.tokens for h in hs
+                 if h.state is RequestState.FINISHED]
+    _, clean = run(cancel=False)
+    clean_toks = [h.request.tokens for i, h in enumerate(clean) if i % 3]
+    assert survivors == clean_toks
+    assert eng.pager.pages_used == eng.pager.pages_retained
+    assert eng.prefix_cache.clear() > 0
+    assert eng.pager.pages_used == 0
+    assert sorted(eng.free_slots) == list(range(eng.ecfg.max_batch))
+
+
+# -- disabled-cache identity and config gates ----------------------------------
+
+def test_cache_disabled_is_bare_engine(params):
+    """prefix_cache=False must leave the engine bit-for-bit the bare paged
+    engine: no cache object, no cache stats keys, nominal prefill work."""
+    prompts, sps = _shared_head_burst(CFG, n=4, seed=7)
+    eng, rep, toks = _run_engine(CFG, params, prompts, sps, cache=False)
+    assert eng.prefix_cache is None
+    assert not any(k.startswith("prefix_cache") for k in eng.stats())
+    assert rep.completed == len(prompts)
+    r = Request(rid=99, arrival=0.0, prompt_len=len(prompts[0]),
+                output_len=4)
+    r.prompt = np.asarray(prompts[0], np.int32)
+    assert eng.effective_prefill_tokens(r) == r.prompt_len
+    occ = eng.pager.occupancy()
+    assert occ["pages_cached"] == 0 and occ["pages_shared"] == 0
+
+
+def test_prefix_cache_requires_paged():
+    with pytest.raises(ValueError, match="requires paged"):
+        EngineConfig(max_len=MAXLEN, paged=False, prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_cache_pages"):
+        EngineConfig(max_len=MAXLEN, paged=True, prefix_cache=True,
+                     prefix_cache_pages=-1)
+
+
+def test_effective_prefill_tokens_sees_cached_prefix(params):
+    """After a warm run the optimizer-facing prefill work for a sharing
+    prompt is the tail only (plus >= 1 token for the first logits)."""
+    prompts, sps = _shared_head_burst(CFG, n=3, seed=9)
+    eng, _, _ = _run_engine(CFG, params, prompts, sps, cache=True)
+    tail = np.concatenate([prompts[0][:2 * PS],
+                           np.asarray([1, 2, 3], np.int32)])
+    r = Request(rid=42, arrival=0.0, prompt_len=len(tail), output_len=4)
+    r.prompt = np.asarray(tail, np.int32)
+    eff = eng.effective_prefill_tokens(r)
+    assert eff == len(tail) - 2 * PS
+    assert eng.prefix_cache.probe(tail) == 2 * PS
+
+
+# -- cluster: handoff, crash recovery, conservation ----------------------------
+
+# same trick as _cfg: tests/test_cluster.py runs its replicas on "tc-full"
+# (identical dimensions), so naming ours the same reuses its compiled
+# prefill/decode/handoff executables; the params arrays carry no name
+CCFG = dataclasses.replace(CFG, name="tc-full")
+
+
+def _cluster(params, cache, faults=None, n_decode=2):
+    return ServingCluster(CCFG, n_prefill=1, n_decode=n_decode,
+                          params=params, ecfg=_ecfg(cache), faults=faults)
+
+
+def _run_cluster(params, cache, faults=None, ledger=None):
+    cl = _cluster(params, cache, faults=faults)
+    srv = Server(cl, ledger=ledger)
+    prompts, sps = _shared_head_burst(CFG, n=6, seed=11)
+    hs = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+    rep = srv.run()
+    return cl, rep, [h.request.tokens for h in hs]
+
+
+def _prefill_engine(cl):
+    return next(r.engine for r in cl.replicas if r.name == "prefill0")
+
+
+def test_cluster_handoff_hit_exact(params):
+    """Prefix-cache hits on the prefill replica survive the paged-KV
+    handoff to decode replicas: warm cluster tokens == cold cluster
+    tokens, and the prefill plane actually hit."""
+    _, crep, cold = _run_cluster(params, cache=False)
+    cl, wrep, warm = _run_cluster(params, cache=True)
+    assert warm == cold
+    assert wrep.completed == crep.completed == 6
+    assert wrep.migrated > 0
+    assert _prefill_engine(cl).stats()["prefix_cache_hits"] > 0
+
+
+def test_replica_kill_with_cache_recovers_exact(params):
+    """Killing a decode replica mid-run with the cache enabled: victims are
+    recomputed from the prompt on survivors (re-hitting the cache on the
+    prefill plane) and every stream stays bit-identical to the healthy
+    warm run."""
+    _, healthy, toks0 = _run_cluster(params, cache=True)
+    assert healthy.completed == 6
+    plan = FaultPlan([ReplicaKill(at=0.4 * healthy.duration_s,
+                                  replica="decode1")])
+    cl, rep, toks1 = _run_cluster(params, cache=True, faults=plan)
+    assert toks1 == toks0
+    assert rep.completed == 6
+    assert _prefill_engine(cl).stats()["prefix_cache_hits"] > 0
+
+
+def test_ledger_conservation_bitwise_with_sharing(params):
+    """Shared pages shorten prefill, but the attribution ledger's two-layer
+    conservation invariant (per-replica and fleet-wide, bitwise) must hold
+    exactly as in the cold world."""
+    led = EnergyLedger()
+    cl, rep, _ = _run_cluster(params, cache=True, ledger=led)
+    assert rep.completed == 6
+    summ = verify_conservation(led, rep.replicas)
+    assert len(summ) == len(rep.replicas)
+    assert _prefill_engine(cl).stats()["prefix_cache_hits"] > 0
+
+
+# -- PrefixCache unit contract -------------------------------------------------
+
+def _pager(num_pages=32, page_size=4, max_streams=4, per_stream=8):
+    return PageAllocator(num_pages=num_pages, page_size=page_size,
+                         max_streams=max_streams,
+                         max_pages_per_stream=per_stream)
+
+
+def _seed_cache(pager, tokens, slot=0):
+    """Allocate a chain for ``tokens`` on ``slot``, register it fully, and
+    retire the stream — the cache alone keeps the pages alive."""
+    pc = PrefixCache(pager)
+    assert pager.ensure(slot, len(tokens))
+    chain = list(pager.chains[slot])
+    pc.register(tokens, chain, upto=len(tokens))
+    pager.free_chain(slot)
+    return pc, chain
+
+
+def test_digest_chain_divergence():
+    """One divergent token invalidates its page and every page after it —
+    and registered pages outlive the producing stream."""
+    a = _pager()
+    toks = np.arange(16, dtype=np.int32)
+    pc, chain = _seed_cache(a, toks)
+    assert len(pc) == 4 and a.pages_retained == 4
+    assert a.pages_used == 4                 # cache grip only
+
+    pages, matched = pc.lookup(toks)
+    assert matched == 15                     # capped at len - 1
+    assert pages == chain
+    early = toks.copy()
+    early[2] = 99                            # first page diverges
+    assert pc.lookup(early) == ([], 0)
+    late = toks.copy()
+    late[6] = 99                             # second page diverges
+    pages, matched = pc.lookup(late)
+    assert pages == chain[:1] and matched == 4
+    assert pc.stats()["hits"] == 2 and pc.stats()["misses"] == 1
+
+
+def test_register_partial_prompt_only_full_pages():
+    a = _pager()
+    pc = PrefixCache(a)
+    toks = np.arange(16, dtype=np.int32)
+    assert a.ensure(0, 16)
+    chain = list(a.chains[0])
+    assert pc.register(toks, chain, upto=10) == 2    # 2 full pages of 4
+    assert pc.register(toks, chain, upto=16) == 2    # idempotent extension
+    assert len(pc) == 4
+    a.free_chain(0)
+    pc.clear()
+    assert a.pages_used == 0
+
+
+def test_reclaim_never_evicts_shared_or_interior_pages():
+    """Eviction victims are LRU *leaves with no stream refs*: pages a live
+    chain shares survive unconditionally, and interior entries survive
+    while any descendant does."""
+    a = _pager()
+    toks = np.arange(16, dtype=np.int32)
+    pc, chain = _seed_cache(a, toks)
+    a.share_chain(1, chain[:2])              # a live stream adopts 2 pages
+    freed = pc.reclaim(10)
+    assert freed == 2                        # only the unshared tail pages
+    assert len(pc) == 2
+    assert all(a.stream_refs(p) == 1 for p in chain[:2])
+    assert list(a.chains[1]) == chain[:2]    # live chain untouched
+    a.free_chain(1)
+    assert pc.reclaim(10) == 2               # now evictable
+    assert a.pages_used == 0
+    assert pc.stats()["evictions"] == 4
+
+
+def test_capacity_cap_evicts_lru_before_retaining():
+    a = _pager(num_pages=32)
+    pc = PrefixCache(a, max_pages=2)
+    for i in range(3):
+        toks = np.full(8, i, np.int32)
+        assert a.ensure(i, 8)
+        chain = list(a.chains[i])
+        pc.register(toks, chain, upto=8)
+        a.free_chain(i)
+    assert a.pages_retained <= 2             # cap held via LRU reclaim
+    assert pc.evictions > 0
+    pc.clear()
+    assert a.pages_used == 0
+
+
+# -- allocator properties under sharing ----------------------------------------
+
+def _check_sharing_invariants(a):
+    """Conservation, ref == holders, free-list/table consistency — the
+    tests/test_paging.py invariants extended to refcounted sharing."""
+    assert a.pages_used + a.pages_free == a.num_pages - 1
+    holders = np.zeros(a.num_pages, np.int32)
+    for chain in a.chains.values():
+        for p in chain:
+            holders[p] += 1
+    for p in a._retained:
+        holders[p] += 1
+    for p in range(1, a.num_pages):
+        assert a.ref[p] == holders[p], f"page {p}: ref != holders"
+        in_free = p in a._free_set
+        reserved = p in a._reserved
+        assert in_free == (holders[p] == 0 and not reserved)
+        if holders[p]:
+            assert a.stream_refs(p) == holders[p] - (p in a._retained)
+    assert holders[SCRATCH_PAGE] == 0
+    for s, chain in a.chains.items():
+        assert list(a.table[s, :len(chain)]) == chain
+        assert (a.table[s, len(chain):] == SCRATCH_PAGE).all()
+    occ = a.occupancy()
+    assert occ["pages_cached"] == len(a._retained)
+    assert occ["pages_reserved"] == len(a._reserved)
+    assert 0.0 <= occ["occupancy_live"] <= occ["occupancy"] <= 1.0
+
+
+def _sharing_storm(seed):
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(num_pages=24, page_size=8, max_streams=6,
+                      max_pages_per_stream=6)
+    cached = []                              # ordered retained-page prefixes
+
+    def prune(page):
+        cached[:] = [c for c in cached if page not in c]
+
+    for _ in range(250):
+        op = rng.random()
+        slot = int(rng.integers(0, 6))
+        if op < 0.25:                        # grow (private pages)
+            held = len(a.chains.get(slot, [])) * a.page_size
+            want = min(held + int(rng.integers(1, 17)),
+                       a.max_pages_per_stream * a.page_size)
+            a.ensure(slot, want)
+        elif op < 0.40:                      # retire a stream
+            if a.chains.get(slot):
+                a.free_chain(slot)
+        elif op < 0.55:                      # cache-register a chain prefix
+            live = [c for c in a.chains.values() if c]
+            if live:
+                chain = live[int(rng.integers(0, len(live)))]
+                k = int(rng.integers(1, len(chain) + 1))
+                for p in chain[:k]:
+                    if p not in a._retained:
+                        a.retain(p)
+                cached.append(list(chain[:k]))
+        elif op < 0.70:                      # hit: share a cached prefix
+            free_slots = [s for s in range(6) if not a.chains.get(s)]
+            ok = [c for c in cached
+                  if all(p in a._retained for p in c)]
+            if free_slots and ok:
+                c = ok[int(rng.integers(0, len(ok)))]
+                s = free_slots[0]
+                a.share_chain(s, c)
+                a.ensure(s, min(len(c) * a.page_size
+                                + int(rng.integers(0, 9)),
+                                a.max_pages_per_stream * a.page_size))
+        elif op < 0.80:                      # evict one cached page
+            if a._retained:
+                p = sorted(a._retained)[
+                    int(rng.integers(0, len(a._retained)))]
+                a.release(p)
+                prune(p)
+        elif op < 0.90:                      # copy-on-write a shared page
+            shared = [(s, i) for s, c in a.chains.items()
+                      for i, p in enumerate(c) if a.ref[p] > 1]
+            if shared:
+                s, i = shared[int(rng.integers(0, len(shared)))]
+                a.cow_page(s, i)
+        elif op < 0.95:
+            a.reserve(int(rng.integers(1, 4)))
+        else:
+            a.release_reserved()
+        _check_sharing_invariants(a)
+
+    for s in list(a.chains):
+        a.free_chain(s)
+    for p in sorted(a._retained):
+        a.release(p)
+    a.release_reserved()
+    _check_sharing_invariants(a)
+    assert a.pages_used == 0 and a.pages_free == a.num_pages - 1
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 16 - 1))
+    def test_allocator_sharing_storm(seed):
+        _sharing_storm(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 7, 42, 123, 2024])
+    def test_allocator_sharing_storm(seed):
+        _sharing_storm(seed)
+
+
+def test_sharing_api_contract():
+    a = _pager()
+    assert a.ensure(0, 16)
+    chain = list(a.chains[0])
+    with pytest.raises(ValueError, match="already holds"):
+        a.share_chain(0, chain)
+    a.retain(chain[0])
+    with pytest.raises(ValueError, match="already retained"):
+        a.retain(chain[0])
+    with pytest.raises(ValueError, match="not retained"):
+        a.release(chain[1])
+    free_page = a._free[-1]
+    with pytest.raises(ValueError, match="dead page"):
+        a.share_chain(1, [free_page])
+    # exclusively-held pages are already private: cow is the identity
+    assert a.cow_page(0, 1) == chain[1]
+    # shared pages get a fresh id and the original keeps its holders
+    a.share_chain(1, chain[:2])
+    new = a.cow_page(1, 0)
+    assert new != chain[0] and a.chains[1][0] == new
+    assert a.ref[chain[0]] == 2              # slot 0 + the cache grip
+    a.free_chain(0)
+    a.free_chain(1)
+    a.release(chain[0])
+    assert a.pages_used == 0
+
+
+def test_occupancy_telemetry_counts_shared_and_cached(params):
+    """Engine-level occupancy telemetry distinguishes live, shared,
+    reserved, and cache-held pages mid-run and after the drain."""
+    prompts, sps = _shared_head_burst(CFG, n=6, seed=13)
+    eng, _, _ = _run_engine(CFG, params, prompts, sps, cache=True)
+    occ = eng.pager.occupancy()
+    assert occ["pages_cached"] == eng.pager.pages_retained > 0
+    assert occ["pages_evictable"] == occ["pages_cached"]  # streams retired
+    assert occ["occupancy_live"] == 0.0      # only cache pages remain
+    assert occ["occupancy"] > 0.0
+    st = eng.stats()
+    for k in ("prefix_cache_hits", "prefix_cache_misses",
+              "prefix_cache_evictions", "prefix_cache_shared_pages",
+              "prefix_cache_hit_rate", "prefix_cache_entries"):
+        assert k in st
+    assert st["prefix_cache_hit_rate"] > 0.5
