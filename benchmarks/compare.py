@@ -22,6 +22,13 @@ Two gates, both relative to the baseline:
   means the serving engine actually bills more energy for the same
   work, not that the runner was busy.
 
+A fourth gate applies to ``engine_mesh_*`` rows in the *fresh* run (when
+present): the mesh-sharded serving scenario embeds its energy-per-token
+ratio against the unsharded engine, and that ratio must sit within
+``--energy-tol`` of 1.0 in both directions.  Sharded serving is bit-exact
+by construction (the ratio is 1.0 when the PR 10 invariant holds), so any
+drift means the sharded data plane changed the work it bills — not noise.
+
 A third gate applies to ``engine_prefix_cache_*`` rows in the *fresh* run
 (when present): the shared-system-prompt burst must compute at least
 ``--prefix-min-saved`` fewer prefill tokens than its cold-cache twin and
@@ -109,6 +116,25 @@ def main(argv=None):
             failures.append(
                 f"{row['name']} prefix-cache win below floor: "
                 f"saved_frac={saved:.3f}, energy ratio={eratio:.3f}")
+
+    for row in fresh.get("rows", []):
+        if not row["name"].startswith("engine_mesh_"):
+            continue
+        derived = row.get("derived", "")
+        m = re.search(r"energy_per_tok_vs_unsharded=([0-9.]+)", derived)
+        if not m:
+            failures.append(f"{row['name']}: energy parity metric missing "
+                            f"from {derived!r}")
+            continue
+        ratio = float(m.group(1))
+        bad = abs(ratio - 1.0) > args.energy_tol
+        print(f"{'FAIL' if bad else '  ok'} {row['name']}: "
+              f"energy_per_token={ratio:.4f}x unsharded "
+              f"(band ±{args.energy_tol:.0%})")
+        if bad:
+            failures.append(
+                f"{row['name']} energy-per-token parity broken: "
+                f"{ratio:.4f}x unsharded")
 
     bs = base.get("metrics_snapshot")
     fs = fresh.get("metrics_snapshot")

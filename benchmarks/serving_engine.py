@@ -44,8 +44,15 @@ Cluster scenario (``--cluster``):
   the shared makespan), handoff and preemption counts.  ``--governors ""``
   skips the per-governor engine scenarios and runs only this one (CI smoke).
 
+Mesh scenario (``--mesh dp,tp`` or ``--mesh auto``):
+
+* ``engine_mesh_dp{D}tp{T}`` — the same burst served on a sharded device
+  mesh vs the unsharded engine: output tokens hard-asserted identical
+  (the PR 10 bit-exactness invariant), and the energy-per-token ratio is
+  emitted for ``compare.py`` to hold inside its strict parity band.
+
     PYTHONPATH=src python benchmarks/serving_engine.py [--quick] [--paged]
-        [--cluster] [--arch qwen2-1.5b] [--batches 1,4,8]
+        [--cluster] [--mesh 2,4] [--arch qwen2-1.5b] [--batches 1,4,8]
         [--governors greenllm,defaultnv] [--json out.json]
 
 Prints ``name,value,derived`` CSV rows like benchmarks/run.py.  ``--json``
@@ -391,10 +398,63 @@ def bench_cluster(cfg, params, *, nreq, out_len, max_len=192):
             rep.migrated, rep.preempted)
 
 
+def bench_mesh(cfg, params, *, governor, nreq, out_len, mesh):
+    """Same burst served unsharded and on a ``(dp, tp)`` device mesh.
+
+    PR 10's equivalence bar makes this a parity gate, not a horse race:
+    params are storage-sharded and gathered at kernel entry, slot rows and
+    the paged pool shard along ``data`` — pure data movement, so tokens are
+    hard-asserted identical and energy per token must sit inside
+    ``compare.py``'s strict band (it is 1.0 exactly when the invariant
+    holds).  Returns (mesh tok/s, energy-per-token ratio mesh/unsharded).
+    """
+    from repro.core import SamplingParams
+    from repro.serving import EngineConfig, Server, ServingEngine
+
+    def run(m):
+        eng = ServingEngine(cfg, params=params, ecfg=EngineConfig(
+            max_batch=8, max_len=256, governor=governor, slot_native=True,
+            paged=True, mesh=m))
+        srv = Server(eng)
+        rng = np.random.default_rng(0)
+        for _ in range(nreq):
+            srv.submit(rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(8, 100))),
+                       SamplingParams(max_tokens=out_len))
+        t0 = time.perf_counter()
+        rep = srv.run()
+        jax.block_until_ready(eng._tok)
+        return eng, rep, time.perf_counter() - t0
+
+    run(mesh)                                  # compile warmup
+    beng, brep, _ = run(None)
+    meng, mrep, dt = run(mesh)
+    assert [q.tokens for q in meng.requests] == \
+        [q.tokens for q in beng.requests], \
+        "mesh serving must be token-identical to the unsharded engine"
+    assert mrep.completed == brep.completed == nreq
+
+    def ept(rep):
+        return rep.total_energy_j / (rep.prefill_tokens + rep.decode_tokens)
+
+    return nreq * out_len / dt, ept(mrep) / ept(brep)
+
+
+def _parse_mesh(spec: str):
+    """'dp,tp' -> tuple; 'auto' picks the widest shape the visible devices
+    support (both axes when 8 are forced, data-only on 2, degenerate on 1)."""
+    if spec == "auto":
+        d = len(jax.devices())
+        return (2, 4) if d >= 8 else (2, 1) if d >= 2 else (1, 1)
+    dp, tp = (int(x) for x in spec.split(","))
+    return dp, tp
+
+
 def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                          batches=(1, 4, 8), governors=("greenllm", "defaultnv"),
                          paged: bool = False, cluster: bool = False,
-                         prefix_cache: bool = False, extras: dict = None):
+                         prefix_cache: bool = False, mesh: str = "",
+                         extras: dict = None):
     from repro.configs import get_config
     from repro.models import init_params
 
@@ -480,6 +540,19 @@ def bench_serving_engine(quick: bool = False, arch: str = "qwen2-1.5b",
                      f"{tps:.0f}tok/s;energy_vs_colocated="
                      f"{eratio:.2f}x;handoffs={handoffs};"
                      f"preempted={preempted}"))
+    if mesh:
+        # mesh-sharded data plane vs the unsharded engine on the same burst:
+        # tokens hard-asserted identical, energy-per-token ratio gated by
+        # compare.py's strict band (bit-exact serving makes it 1.0)
+        m = _parse_mesh(mesh)
+        gov = governors[0] if governors else "defaultnv"
+        tps, eratio = bench_mesh(cfg, params, governor=gov,
+                                 nreq=6 if quick else 12,
+                                 out_len=12 if quick else 24, mesh=m)
+        rows.append((f"engine_mesh_dp{m[0]}tp{m[1]}_{gov}",
+                     1e6 / max(tps, 1e-9),
+                     f"{tps:.0f}tok/s;"
+                     f"energy_per_tok_vs_unsharded={eratio:.4f}x"))
     return rows
 
 
@@ -537,6 +610,13 @@ def main():
                     help="add the shared-system-prompt burst: prefix cache "
                          "vs cold cache (prefill tokens computed, hit rate, "
                          "energy/request; token identity hard-asserted)")
+    ap.add_argument("--mesh", default="", metavar="DP,TP",
+                    help="add the mesh-sharded serving scenario on a "
+                         "'dp,tp' device mesh ('auto' sizes to the visible "
+                         "devices; force CPU devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8): tokens "
+                         "hard-asserted identical to the unsharded engine, "
+                         "energy-per-token parity gated by compare.py")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batches", default="1,4,8")
     ap.add_argument("--governors", default="greenllm,defaultnv")
@@ -551,7 +631,7 @@ def main():
     rows = bench_serving_engine(
         quick=args.quick, arch=args.arch, batches=batches,
         governors=governors, paged=args.paged, cluster=args.cluster,
-        prefix_cache=args.prefix_cache, extras=extras)
+        prefix_cache=args.prefix_cache, mesh=args.mesh, extras=extras)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -562,7 +642,8 @@ def main():
                        "batches": list(batches),
                        "governors": list(governors),
                        "paged": args.paged, "cluster": args.cluster,
-                       "prefix_cache": args.prefix_cache},
+                       "prefix_cache": args.prefix_cache,
+                       "mesh": args.mesh},
             "backend": jax.default_backend(),
             "rows": [{"name": n, "us_per_call": round(us, 1),
                       "derived": d} for n, us, d in rows],

@@ -1,1 +1,1 @@
-from .mesh import make_production_mesh, make_debug_mesh
+from .mesh import make_production_mesh, make_debug_mesh, make_serving_mesh

@@ -33,11 +33,18 @@ from repro.serving import EngineConfig, Server, ServingCluster, ServingEngine
 
 
 def build_backend(args, full, smoke):
+    mesh = None
+    if args.mesh:
+        try:
+            mesh = tuple(int(v) for v in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh expects 'dp,tp', got {args.mesh!r}")
     ecfg = EngineConfig(max_batch=args.max_batch, max_len=args.max_len,
                         governor=args.governor,
                         paged=args.paged or args.prefix_cache,
                         chunked_prefill=args.chunked,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        mesh=mesh)
     if args.cluster:
         # paged slot-native plane is forced by the cluster (KV handoff)
         return ServingCluster(smoke, n_prefill=1, n_decode=1,
@@ -176,6 +183,12 @@ def main(argv=None):
                     default=True,
                     help="chunked prefill admission (--no-chunked falls "
                          "back to eager reference prefill for long prompts)")
+    ap.add_argument("--mesh", default="",
+                    help="'dp,tp' serving mesh (e.g. 2,4): shard the data "
+                         "plane over dp*tp devices — bit-identical to "
+                         "single-device serving; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=<dp*tp> "
+                         "first")
     ap.add_argument("--cluster", action="store_true",
                     help="disaggregated 1-prefill + 1-decode cluster with "
                          "paged-KV handoff instead of one colocated engine")

@@ -181,6 +181,82 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
     return specs, shapes
 
 
+# -- serving data plane -------------------------------------------------------------
+
+def make_serving_shard_ctx(mesh: Mesh) -> ShardCtx:
+    """ShardCtx for the sharded serving engine: activations shard along
+    ``data`` only (``model_axis=None`` dissolves tensor-parallel activation
+    constraints).  Batch rows are independent, so every sharded computation
+    is bit-identical to its single-device twin — the PR 10 equivalence bar.
+    ``batch_axes`` is fixed (not ``batch_axes_for``) because slot vectors,
+    cache rows, and the page table all carry ``max_batch`` rows and
+    ``EngineConfig`` validates divisibility up front."""
+    return ShardCtx(mesh=mesh, batch_axes=("data",), model_axis=None)
+
+
+def serving_param_specs(cfg: ModelConfig, mesh: Mesh):
+    """(specs, shapes) for serving parameter *storage*: fsdp-style largest-
+    divisible-dim sharding over the flattened ('data','model') axes, except
+    MoE expert tensors, which shard their expert axis over 'model' so each
+    expert's weights live on exactly one model shard (expert parallelism at
+    rest).  Kernels gather to replicated at entry (``gather_replicated``) —
+    pure data movement, so sharded serving stays bit-exact while the at-rest
+    footprint scales down with the mesh."""
+    specs, shapes = fsdp_param_specs(cfg, mesh)
+    msize = mesh.shape.get("model", 1)
+    if not (cfg.is_moe and msize > 1 and cfg.num_experts % msize == 0):
+        return specs, shapes
+    from repro.models.moe import is_expert_leaf
+
+    def fix(path, spec, shape):
+        if is_expert_leaf(cfg, path, shape.shape):
+            entries = [None] * len(shape.shape)
+            entries[1] = "model"        # stacked leaves: (n_rep, E, ...)
+            return P(*entries)
+        return spec
+
+    specs = jax.tree_util.tree_map_with_path(
+        fix, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    return specs, shapes
+
+
+def serving_cache_specs(caches, mesh: Mesh):
+    """Specs paralleling a serving cache pytree (``init_cache`` output,
+    paged or dense): the stacked capacity axis — batch rows of dense/ring/
+    recurrent leaves, the *page* axis of paged pool leaves — shards along
+    'data'; non-divisible leaves fall back to replicated."""
+    ax = KV.STACKED_CAPACITY_AXIS
+
+    def spec_for(x):
+        if x.ndim > ax:
+            entries = [None] * (ax + 1)
+            entries[ax] = "data"
+            return sanitize_spec(P(*entries), x.shape, mesh)
+        return P()
+
+    return jax.tree.map(spec_for, caches)
+
+
+def shard_serving_caches(caches, mesh: Mesh):
+    """Place a freshly-initialized serving cache pytree on the mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        caches, serving_cache_specs(caches, mesh))
+
+
+def gather_replicated(tree, mesh: Optional[Mesh]):
+    """Constrain every leaf to replicated — the all-gather at kernel entry
+    that turns storage-sharded params back into single-device-identical
+    compute.  Data movement only: no cross-shard float reduction is
+    introduced, which is what keeps mesh serving bitwise equal to the
+    unsharded engine.  No-op without a mesh (the NOSHARD path)."""
+    if mesh is None:
+        return tree
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
+
+
 # -- step inputs ------------------------------------------------------------------------
 
 def named(mesh: Mesh, tree):

@@ -192,6 +192,55 @@ def build_decode(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
                 donate_argnums=(1,), meta={"long_context": long_ctx})
 
 
+def build_serving_decode(cfg: ModelConfig, mesh: Mesh, *,
+                         max_batch: int = 8, max_len: int = 256,
+                         page_size: int = 16, num_pages: int = 0):
+    """Dry-run builder for one *serving* paged decode step under the PR 10
+    mesh shardings: params storage-sharded (``serving_param_specs``) and
+    gathered to replicated inside the step, the paged pool / page table /
+    slot vectors sharded along 'data' — the same placement the engine's
+    block kernels run with, lowerable without building an engine."""
+    from repro.models import init_cache
+    from repro.models.kvcache import STACKED_CAPACITY_AXIS
+    B = max_batch
+    n_pages_per = -(-max_len // page_size)
+    pool = num_pages or (B * n_pages_per + 1)
+    shd = SH.make_serving_shard_ctx(mesh)
+    pspecs, pshapes = SH.serving_param_specs(cfg, mesh)
+    cshapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, max_len, dtype=jnp.bfloat16,
+                           paged_pool=(pool, page_size)))
+    cspecs = SH.serving_cache_specs(cshapes, mesh)
+    row = SH.sanitize_spec(P("data"), (B,), mesh)
+    pt_spec = SH.sanitize_spec(P("data", None), (B, n_pages_per), mesh)
+    batch = {
+        "tok": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "active": jax.ShapeDtypeStruct((B,), jnp.bool_),
+        "page_table": jax.ShapeDtypeStruct((B, n_pages_per), jnp.int32),
+    }
+    batch_specs = {"tok": row, "pos": row, "active": row,
+                   "page_table": pt_spec}
+
+    def serving_step(params, caches, inputs):
+        params = SH.gather_replicated(params, mesh)
+        logits, caches = decode_step(params, cfg, inputs["tok"][:, None],
+                                     caches, inputs["pos"], shd,
+                                     page_table=inputs["page_table"],
+                                     active=inputs["active"])
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    in_shardings = (SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                    SH.named(mesh, batch_specs))
+    out_shardings = (SH.named(mesh, row), SH.named(mesh, cspecs))
+    return dict(fn=serving_step, args=(pshapes, cshapes, batch),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(1,),
+                meta={"pool_pages": pool,
+                      "capacity_axis": STACKED_CAPACITY_AXIS})
+
+
 def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
     if shape.kind == "train":
         return build_train(cfg, shape, mesh)

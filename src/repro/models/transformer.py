@@ -273,6 +273,13 @@ def _apply_attn(cfg: ModelConfig, p, x, kind, *, mode, positions, cache, pos,
                                  (B,))
         new_cache = KV.paged_cache_write_decode(cache, k, v, pos_v, page_table)
         k_att, v_att = KV.paged_cache_kv_arrays(new_cache, page_table, q.dtype)
+        # serving mesh: the pool's page axis is data-sharded while the
+        # gathered per-row context is batch-sharded — constrain the gather
+        # output so GSPMD routes pages once instead of replicating the pool
+        # into every shard's gather (guidance only; rows are independent, so
+        # placement cannot change the bits)
+        k_att = shd.cs(k_att, "b", None, None, None)
+        v_att = shd.cs(v_att, "b", None, None, None)
         k_pos = jnp.broadcast_to(
             KV.paged_key_positions(k_att.shape[1], pos_v + 1),
             (B, k_att.shape[1]))

@@ -236,7 +236,11 @@ class ServingCluster:
         self.slo = slo if slo is not None else SLOConfig()
         base = ecfg if ecfg is not None else EngineConfig()
         greenllm = base.governor.lower() == "greenllm"
-        # handoff moves page chains: force the paged slot-native plane
+        # handoff moves page chains: force the paged slot-native plane.
+        # ``base.mesh`` (if any) rides this single ecfg into every replica,
+        # so all replicas serve on one mesh shape and stream handoffs never
+        # cross meshes — ``import_stream`` asserts the shape match anyway,
+        # making a mixed-mesh cluster fail loudly at the first migration.
         self.ecfg = dataclasses.replace(base, paged=True,
                                         chunked_prefill=True, slo=self.slo)
         if params is None:
@@ -793,6 +797,7 @@ class ServingCluster:
         rep = self.report()
         return {
             "replicas": [dataclasses.asdict(w) for w in rep.replicas],
+            "mesh": self.ecfg.mesh,
             "completed": rep.completed,
             "failed": rep.failed,
             "shed": rep.shed,

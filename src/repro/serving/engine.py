@@ -78,8 +78,11 @@ from repro.core import (CounterfactualPricer, DualLoopController,
                         SamplingParams, ServingReport, SLOConfig, StateEvent,
                         TokenEvent, build_report, make_router)
 from repro.core.telemetry import OccupancyMeter, TBTMeter
-from repro.models import (ModelConfig, init_cache, init_params, prefill,
-                          prefill_into_slot, prefill_chunk_into_slot,
+from repro.launch.shardings import (gather_replicated, make_serving_shard_ctx,
+                                    named, serving_param_specs,
+                                    shard_serving_caches)
+from repro.models import (ModelConfig, NOSHARD, init_cache, init_params,
+                          prefill, prefill_into_slot, prefill_chunk_into_slot,
                           decode_step, sample_tokens_batched)
 from repro.models.config import FULL_ATTN, LOCAL_ATTN
 from repro.models.kvcache import (attn_buffer_len, is_paged,
@@ -157,28 +160,34 @@ def _sample_rows(sampled, logits, pos_next, keys, temps, topk, topp):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
-                   donate_argnums=(7,))
-def _decode_block_kernel(cfg, ctx, k, max_len, sampled,
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5),
+                   donate_argnums=(8,))
+def _decode_block_kernel(cfg, shd, ctx, k, max_len, sampled,
                          params, tok, caches, pos, active, keys, temps,
                          topk, topp):
     """k fused decode steps (lax.scan) over caches sliced to ``ctx`` positions.
 
-    One compile per (cfg, ctx_bucket, k_block, sampled).  While every active
-    position stays < ctx, the sliced cache behaves exactly like a
+    One compile per (cfg, shd, ctx_bucket, k_block, sampled).  While every
+    active position stays < ctx, the sliced cache behaves exactly like a
     max_len==ctx cache (slot == position, nothing masked away), so the block
     is equivalent to k single full-cache steps; the donated full caches are
     updated in place via a slice-in/slice-out pair amortized over the k
     steps.  The sampled token at row r lands at position ``pos[r] + 1``, so
     its subkey is ``fold_in(keys[r], pos[r] + 1)`` — no key state threads
     through the scan.
+
+    ``shd`` (a hashable ShardCtx; NOSHARD off-mesh) is the serving mesh
+    context: storage-sharded params are gathered to replicated at entry and
+    every other operand stays sharded along the data axis only, so the
+    sharded block is bit-identical to the single-device one.
     """
+    params = gather_replicated(params, shd.mesh)
     sliced = _slice_caches(caches, ctx, max_len)
 
     def body(carry, _):
         tok, sl, pos = carry
         logits, sl = decode_step(params, cfg, tok[:, None], sl, pos,
-                                 active=active)
+                                 shd=shd, active=active)
         nxt = _sample_rows(sampled, logits, pos + 1, keys, temps, topk, topp)
         tok = jnp.where(active, nxt, tok)
         pos = pos + active.astype(jnp.int32)
@@ -190,21 +199,28 @@ def _decode_block_kernel(cfg, ctx, k, max_len, sampled,
     return tok, caches, pos, toks
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(5,))
-def _paged_decode_block_kernel(cfg, k, sampled, params, tok, caches, pt, pos,
-                               active, keys, temps, topk, topp):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3), donate_argnums=(6,))
+def _paged_decode_block_kernel(cfg, shd, k, sampled, params, tok, caches, pt,
+                               pos, active, keys, temps, topk, topp):
     """k fused decode steps against paged K/V pools.
 
     Context bucketing rides on the *shape* of ``pt`` (the page table sliced to
-    the pages covering the current ctx bucket): one compile per (cfg,
+    the pages covering the current ctx bucket): one compile per (cfg, shd,
     n_ctx_pages, k_block, sampled).  The caller guarantees every active chain
     covers ``pos + k`` before dispatch, so the in-scan writes never leave the
     table slice; retired rows' table entries point at the scratch page.
+
+    On a serving mesh (``shd.mesh`` set) the pool's page axis and the
+    table's slot axis are sharded along 'data'; the page gather/scatter is
+    cross-shard data movement, so tokens stay bit-identical to the
+    single-device kernel.
     """
+    params = gather_replicated(params, shd.mesh)
+
     def body(carry, _):
         tok, cs, pos = carry
         logits, cs = decode_step(params, cfg, tok[:, None], cs, pos,
-                                 page_table=pt, active=active)
+                                 shd=shd, page_table=pt, active=active)
         nxt = _sample_rows(sampled, logits, pos + 1, keys, temps, topk, topp)
         tok = jnp.where(active, nxt, tok)
         pos = pos + active.astype(jnp.int32)
@@ -225,16 +241,17 @@ def _slot_row(v, slot):
     return jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(5,))
-def _prefill_kernel(cfg, sampled, params, toks, length, caches, slot, pt_row,
-                    tok, pos, keys, temps, topk, topp):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(6,))
+def _prefill_kernel(cfg, shd, sampled, params, toks, length, caches, slot,
+                    pt_row, tok, pos, keys, temps, topk, topp):
     """Bucketed slot prefill + first-token sampling (one compile per
-    (bucket size, sampled), the former carried by the static shape of
+    (bucket size, shd, sampled), the former carried by the static shape of
     ``toks``).  ``pt_row`` is the stream's (1, n_pages) page-table row for
     paged caches, or None.  The first token lands at position ``length``,
     so its draw subkey is ``fold_in(keys[slot], length)``."""
+    params = gather_replicated(params, shd.mesh)
     logits, caches, _ = prefill_into_slot(params, cfg, toks, length, caches,
-                                          slot, page_table=pt_row)
+                                          slot, shd=shd, page_table=pt_row)
     L = jnp.asarray(length, jnp.int32)
     ptok = _sample_rows(sampled, logits, L[None], _slot_row(keys, slot),
                         _slot_row(temps, slot), _slot_row(topk, slot),
@@ -244,9 +261,10 @@ def _prefill_kernel(cfg, sampled, params, toks, length, caches, slot, pt_row,
     return tok, caches, pos
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(6,))
-def _chunk_prefill_kernel(cfg, sampled, params, toks, start, length, caches,
-                          slot, pt_row, tok, pos, keys, temps, topk, topp):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(7,))
+def _chunk_prefill_kernel(cfg, shd, sampled, params, toks, start, length,
+                          caches, slot, pt_row, tok, pos, keys, temps, topk,
+                          topp):
     """One chunk of a chunked prefill + (provisional) next-token sampling.
 
     Compile count is |chunk buckets| x |ctx buckets| x sampled (the ctx
@@ -261,8 +279,10 @@ def _chunk_prefill_kernel(cfg, sampled, params, toks, start, length, caches,
     recompute-on-resume replay (which discards even the final draw in favor
     of ``resume_tok``) cannot perturb the stream's draw sequence.
     """
+    params = gather_replicated(params, shd.mesh)
     logits, caches = prefill_chunk_into_slot(params, cfg, toks, start, length,
-                                             caches, slot, page_table=pt_row)
+                                             caches, slot, shd=shd,
+                                             page_table=pt_row)
     end = jnp.asarray(start, jnp.int32) + jnp.asarray(length, jnp.int32)
     ptok = _sample_rows(sampled, logits, end[None], _slot_row(keys, slot),
                         _slot_row(temps, slot), _slot_row(topk, slot),
@@ -328,6 +348,12 @@ class EngineConfig:
     # SLO targets for stats() pass-rate reporting (parity with
     # sim.replay.Metrics); virtual-time accounting itself is unaffected
     slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    # (data, model) serving mesh shape: the replica's data plane spans a
+    # device mesh slice instead of one chip.  Per-slot state, cache rows and
+    # the page pool/table shard along 'data'; params are storage-sharded and
+    # gathered at kernel entry, so every mesh shape serves bit-identically
+    # to mesh=None (the sharded==single-device invariant).  None: unsharded.
+    mesh: Optional[tuple] = None
 
     def __post_init__(self):
         """Reject impossible configurations here, with a readable message,
@@ -370,6 +396,33 @@ class EngineConfig:
                     f"num_pages={self.num_pages} leaves no usable pages: "
                     "page 0 is the reserved scratch page (need num_pages "
                     ">= 2, or 0 for dense-equivalent capacity)")
+        if self.mesh is not None:
+            try:
+                dp, tp = (int(v) for v in self.mesh)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"mesh must be a (data, model) pair, got {self.mesh!r}")
+            self.mesh = (dp, tp)
+            if dp < 1 or tp < 1:
+                raise ValueError(
+                    f"mesh axes must be >= 1, got mesh=({dp},{tp})")
+            if not self.slot_native:
+                raise ValueError(
+                    "mesh serving requires the slot-native data plane "
+                    "(slot_native=True): the legacy plane is a single-"
+                    "device benchmark baseline")
+            if self.max_batch % dp:
+                raise ValueError(
+                    f"max_batch={self.max_batch} is not divisible by the "
+                    f"data axis dp={dp}: per-slot state, cache rows, and "
+                    "the page table shard max_batch rows along 'data' — "
+                    "raise max_batch or shrink dp")
+            if self.paged and self.num_pages and self.num_pages % dp:
+                raise ValueError(
+                    f"num_pages={self.num_pages} is not divisible by the "
+                    f"data axis dp={dp}: the paged KV pool shards its page "
+                    "axis along 'data' — round num_pages up to a multiple "
+                    "of dp (or pass num_pages=0 for an auto-sized pool)")
         if self.prefix_cache and not self.paged:
             raise ValueError(
                 "prefix_cache=True requires paged=True: cache entries are "
@@ -411,6 +464,11 @@ class StreamHandoff:
     # migrated requests keep their attributed joules across replicas.  A
     # no-op on adoption when both replicas share one ledger (the cluster).
     ledger_carry: Optional[object] = None
+    # exporter's (data, model) mesh shape (None = unsharded): the adopter
+    # rejects a mismatch the same way it rejects cfg/page_size mismatches —
+    # handoff payloads are sharded pytrees, and adopting them onto a
+    # different mesh would silently reshard mid-stream
+    mesh_shape: Optional[tuple] = None
 
 
 class _Stream:
@@ -482,6 +540,22 @@ class ServingEngine:
             self.controller = MaxFreqController(hw)
 
         B = ecfg.max_batch
+        # serving mesh (None = classic single-device plane).  Built before
+        # any device allocation so params/caches/slot vectors land sharded.
+        self.mesh = None
+        self._shd = NOSHARD
+        if ecfg.mesh is not None:
+            self._validate_mesh(cfg, ecfg)
+            from repro.launch.mesh import make_serving_mesh
+            self.mesh = make_serving_mesh(*ecfg.mesh)
+            self._shd = make_serving_shard_ctx(self.mesh)
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._dp_rows = NamedSharding(self.mesh, PartitionSpec("data"))
+            self._dp_keys = NamedSharding(self.mesh,
+                                          PartitionSpec("data", None))
+            specs, _ = serving_param_specs(cfg, self.mesh)
+            self.params = jax.device_put(self.params,
+                                         named(self.mesh, specs))
         # paged mode needs chunking (preemption resume replays arbitrary-
         # length contexts); tracked engine-side, the caller's config is
         # never mutated
@@ -490,7 +564,14 @@ class ServingEngine:
             ps = ecfg.page_size
             self._max_pages = -(-ecfg.max_len // ps)
             n_pages = ecfg.num_pages or (B * self._max_pages + 1)
+            if self.mesh is not None:
+                # auto-sized pools round up so the page axis stays divisible
+                dp = ecfg.mesh[0]
+                n_pages = -(-n_pages // dp) * dp
             self.pager = PageAllocator(n_pages, ps, B, self._max_pages)
+            if self.mesh is not None:
+                # (max_streams, max_pages) table rows shard along 'data'
+                self.pager.device_sharding = self._dp_keys
             pool = (n_pages, ps)
         else:
             self.pager = None
@@ -498,6 +579,8 @@ class ServingEngine:
         self.caches = init_cache(cfg, B, ecfg.max_len,
                                  dtype=jnp.dtype(ecfg.cache_dtype),
                                  paged_pool=pool)
+        if self.mesh is not None:
+            self.caches = shard_serving_caches(self.caches, self.mesh)
         # prefix sharing is only sound when *every* cache leaf is a page
         # pool: ring buffers and recurrent states carry per-position context
         # outside the pages, so a shared chain would not reconstruct the
@@ -551,10 +634,10 @@ class ServingEngine:
             self.install_observability(metrics, tracer, ledger)
 
         # device-resident decode state (slot-native path)
-        self._tok = jnp.zeros((B,), jnp.int32)
-        self._pos = jnp.zeros((B,), jnp.int32)
+        self._tok = self._row_pin(jnp.zeros((B,), jnp.int32))
+        self._pos = self._row_pin(jnp.zeros((B,), jnp.int32))
         self._active_host = np.zeros(B, bool)
-        self._active = jnp.asarray(self._active_host)
+        self._active = self._row_pin(jnp.asarray(self._active_host))
         # per-slot sampling lanes: temperature / top-k / top-p vectors plus
         # each row's PRNG *base* key.  Draw subkeys fold the token position
         # into the base lane (see _row_subkeys), so lanes never advance —
@@ -562,10 +645,10 @@ class ServingEngine:
         # is what makes migration and recompute-on-resume replay identical
         # draws.  Rows are written at slot assignment (admission / chunked
         # start / import), read only inside the jitted kernels.
-        self._temps = jnp.zeros((B,), jnp.float32)
-        self._topk = jnp.zeros((B,), jnp.int32)
-        self._topp = jnp.ones((B,), jnp.float32)
-        self._keys = jnp.zeros((B, 2), jnp.uint32)
+        self._temps = self._row_pin(jnp.zeros((B,), jnp.float32))
+        self._topk = self._row_pin(jnp.zeros((B,), jnp.int32))
+        self._topp = self._row_pin(jnp.ones((B,), jnp.float32))
+        self._keys = self._row_pin(jnp.zeros((B, 2), jnp.uint32))
         self._sampled_host = np.zeros(B, bool)  # host mirror of temps > 0
         self._base_key = jax.random.PRNGKey(seed + 1)  # unseeded-lane source
 
@@ -621,6 +704,54 @@ class ServingEngine:
         # accounting excludes a kernel's first block (XLA compile time would
         # otherwise be billed as decode latency and wreck the controller)
         self._warmed: set = set()
+
+    # -- serving mesh ----------------------------------------------------------
+    @staticmethod
+    def _validate_mesh(cfg: ModelConfig, ecfg: "EngineConfig") -> None:
+        """Model-dependent mesh divisibility, rejected with an actionable
+        message instead of an opaque XLA sharding failure deep inside the
+        first jitted kernel.  (Model-independent checks — max_batch/num_pages
+        vs dp — live in ``EngineConfig.__post_init__``.)"""
+        dp, tp = ecfg.mesh
+        if tp > 1 and cfg.num_heads % tp:
+            raise ValueError(
+                f"model '{cfg.name}' has num_heads={cfg.num_heads}, not "
+                f"divisible by the model axis tp={tp}: attention heads "
+                "partition over 'model' — pick tp from the divisors of "
+                "num_heads (or tp=1)")
+        if tp > 1 and cfg.is_moe and cfg.num_experts % tp:
+            raise ValueError(
+                f"MoE model '{cfg.name}' has num_experts={cfg.num_experts}, "
+                f"not divisible by the model axis tp={tp}: expert weights "
+                "place each expert on exactly one model shard — pick tp "
+                "from the divisors of num_experts (or tp=1)")
+
+    def _row_pin(self, x):
+        """Pin a per-slot device vector (leading dim max_batch) to its
+        data-axis sharding.  Functional updates (``.at[slot].set``) and
+        host re-uploads can silently drop to single-device placement; the
+        re-put is a device-to-device no-op when the sharding already
+        matches, and keeping operand shardings stable is what holds the
+        kernel compile count at its single-device budget.  Identity off
+        mesh."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(
+            x, self._dp_keys if x.ndim >= 2 else self._dp_rows)
+
+    def _pin_caches(self, caches):
+        """Re-pin a cache pytree after an eager host-side rebuild (legacy
+        splice, handoff import).  Device-to-device no-op when layouts already
+        match; identity off mesh."""
+        if self.mesh is None:
+            return caches
+        from repro.launch.shardings import shard_serving_caches
+        return shard_serving_caches(caches, self.mesh)
+
+    def _sync_active(self) -> None:
+        """Re-upload the host active mask (one small transfer per stream
+        join/leave, the pre-mesh cadence; sharded along 'data' on a mesh)."""
+        self._active = self._row_pin(jnp.asarray(self._active_host))
 
     # -- observability ---------------------------------------------------------
     def install_observability(self, metrics=None, tracer=None,
@@ -904,11 +1035,11 @@ class ServingEngine:
         the resolved (temperature, top_k, top_p) for callers that also
         sample host-side."""
         temp, top_k, top_p = self._resolve_sampling(req)
-        self._temps = self._temps.at[slot].set(temp)
-        self._topk = self._topk.at[slot].set(top_k)
-        self._topp = self._topp.at[slot].set(top_p)
-        self._keys = self._keys.at[slot].set(
-            jnp.asarray(self._lane_for(req), jnp.uint32))
+        self._temps = self._row_pin(self._temps.at[slot].set(temp))
+        self._topk = self._row_pin(self._topk.at[slot].set(top_k))
+        self._topp = self._row_pin(self._topp.at[slot].set(top_p))
+        self._keys = self._row_pin(self._keys.at[slot].set(
+            jnp.asarray(self._lane_for(req), jnp.uint32)))
         self._sampled_host[slot] = temp > 0.0
         return temp, top_k, top_p
 
@@ -952,7 +1083,7 @@ class ServingEngine:
         self._emit(StateEvent(req.rid, self.vtime, RequestState.DECODING))
         self.active[slot] = st
         self._active_host[slot] = True
-        self._active = jnp.asarray(self._active_host)
+        self._sync_active()
 
     def _pt_rows(self, slot: int, upto: int):
         """(1, n_ctx) page-table row covering positions < the smallest ctx
@@ -975,7 +1106,7 @@ class ServingEngine:
             pt_row = self._pt_rows(slot, bucket)
         self._set_slot_sampling(slot, req)
         self._tok, self.caches, self._pos = _prefill_kernel(
-            self.cfg, bool(self._sampled_host[slot]),
+            self.cfg, self._shd, bool(self._sampled_host[slot]),
             self.params, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
             self.caches, jnp.asarray(slot, jnp.int32), pt_row,
             self._tok, self._pos, self._keys, self._temps, self._topk,
@@ -1000,9 +1131,9 @@ class ServingEngine:
         caches = init_cache(self.cfg, 1, self.ecfg.max_len,
                             dtype=jnp.dtype(self.ecfg.cache_dtype))
         logits, caches, pos = prefill(self.params, self.cfg, toks, caches)
-        self.caches = jax.tree.map(
+        self.caches = self._pin_caches(jax.tree.map(
             lambda full, one: full.at[:, slot:slot + 1].set(one)
-            if full.ndim >= 2 else full, self.caches, caches)
+            if full.ndim >= 2 else full, self.caches, caches))
         temp, top_k, top_p = self._set_slot_sampling(slot, req)
         sub = jax.random.fold_in(
             jnp.asarray(self._lane_for(req), jnp.uint32), len(req.prompt))
@@ -1010,8 +1141,8 @@ class ServingEngine:
             logits, jnp.asarray([temp], jnp.float32),
             jnp.asarray([top_k], jnp.int32),
             jnp.asarray([top_p], jnp.float32), sub[None])[0])
-        self._tok = self._tok.at[slot].set(tok)
-        self._pos = self._pos.at[slot].set(len(req.prompt))
+        self._tok = self._row_pin(self._tok.at[slot].set(tok))
+        self._pos = self._row_pin(self._pos.at[slot].set(len(req.prompt)))
         t0 = self.vtime
         self._account_prefill(req)
         if self.tracer is not None:
@@ -1121,7 +1252,7 @@ class ServingEngine:
                 self.caches = _page_copy_kernel(
                     self.caches, jnp.asarray(old, jnp.int32),
                     jnp.asarray(new, jnp.int32))
-        self._pos = self._pos.at[slot].set(hit_tok)
+        self._pos = self._row_pin(self._pos.at[slot].set(hit_tok))
         if self.tracer is not None:
             self.tracer.instant("prefix_hit", -1, self.vtime, self.name,
                                 pages=len(pages), tokens=hit_tok)
@@ -1172,8 +1303,8 @@ class ServingEngine:
                 pt_row = self._pt_rows(slot, cs.start + bucket)
             self._tok, self.caches, self._pos = \
                 _chunk_prefill_kernel(
-                    self.cfg, bool(self._sampled_host[slot]), self.params,
-                    jnp.asarray(padded),
+                    self.cfg, self._shd, bool(self._sampled_host[slot]),
+                    self.params, jnp.asarray(padded),
                     jnp.asarray(cs.start, jnp.int32),
                     jnp.asarray(len(chunk), jnp.int32),
                     self.caches, jnp.asarray(slot, jnp.int32), pt_row,
@@ -1201,7 +1332,7 @@ class ServingEngine:
             if cs.resume_tok is not None:
                 # recomputed stream: next token was already sampled before
                 # preemption; restore it instead of the chunk's provisional
-                self._tok = self._tok.at[slot].set(cs.resume_tok)
+                self._tok = self._row_pin(self._tok.at[slot].set(cs.resume_tok))
                 self._start_stream(cs.req, slot, cs.resume_tok,
                                    len(cs.tokens), resumed=True)
             else:
@@ -1288,7 +1419,7 @@ class ServingEngine:
             self.pager.free_chain(slot)
         self._active_host[slot] = False
         self._sampled_host[slot] = False
-        self._active = jnp.asarray(self._active_host)
+        self._sync_active()
         self.free_slots.append(slot)
 
     def _mark_terminal(self, req: Request, state: RequestState) -> bool:
@@ -1353,7 +1484,7 @@ class ServingEngine:
         st = self.active.pop(slot)
         self._active_host[slot] = False
         self._sampled_host[slot] = False
-        self._active = jnp.asarray(self._active_host)
+        self._sync_active()
         self.free_slots.append(slot)
         chain = list(self.pager.chains.get(slot, [])) \
             if self.pager is not None else []
@@ -1391,7 +1522,8 @@ class ServingEngine:
             cfg_name=self.cfg.name, sampling=sp,
             rng_lane=self._lane_for(st.req),
             ledger_carry=self.ledger.export_carry(self.name, st.req.rid)
-            if self.ledger is not None else None)
+            if self.ledger is not None else None,
+            mesh_shape=self.ecfg.mesh)
 
     def import_stream(self, ho: StreamHandoff) -> bool:
         """Adopt a migrated stream: allocate a slot + an equal-length page
@@ -1402,6 +1534,11 @@ class ServingEngine:
         """
         assert ho.cfg_name == self.cfg.name, (
             f"cross-model handoff: {ho.cfg_name} -> {self.cfg.name}")
+        assert ho.mesh_shape == self.ecfg.mesh, (
+            f"cross-mesh handoff: exporter mesh {ho.mesh_shape} -> adopter "
+            f"mesh {self.ecfg.mesh}; replicas in one cluster must share a "
+            "mesh shape (handoff blocks are extracted per-shard-agnostic, "
+            "but mixed shapes break the bit-exactness contract)")
         if ho.n_pages:
             assert self.pager is not None and \
                 ho.page_size == self.ecfg.page_size, \
@@ -1427,9 +1564,9 @@ class ServingEngine:
                 else:
                     sblocks.append(cache_row_insert(d, payload, slot))
             caches.append(tuple(sblocks))
-        self.caches = caches
-        self._tok = self._tok.at[slot].set(ho.last_token)
-        self._pos = self._pos.at[slot].set(ho.pos)
+        self.caches = self._pin_caches(caches)
+        self._tok = self._row_pin(self._tok.at[slot].set(ho.last_token))
+        self._pos = self._row_pin(self._pos.at[slot].set(ho.pos))
         # the RNG lane and the exporter-resolved sampling config travel with
         # the stream: the adopter continues the exporter's draw sequence and
         # sampling mode instead of re-resolving against its own defaults
@@ -1503,7 +1640,7 @@ class ServingEngine:
             if self.pager is not None:
                 self.pager.free_chain(slot)   # whole chain back to the pool
         if slots:
-            self._active = jnp.asarray(self._active_host)
+            self._sync_active()
 
     def _grow_for_block(self, k: int) -> int:
         """Grow every active chain to cover ``pos + k`` before the block is
@@ -1577,14 +1714,15 @@ class ServingEngine:
                 pt = self.pager.table_device()[:, :n_ctx]
                 (self._tok, self.caches, self._pos, tk) = \
                     _paged_decode_block_kernel(
-                        self.cfg, kb, sampled,
+                        self.cfg, self._shd, kb, sampled,
                         self.params, self._tok, self.caches, pt, self._pos,
                         self._active, self._keys, self._temps, self._topk,
                         self._topp)
             else:
                 (self._tok, self.caches, self._pos, tk) = \
                     _decode_block_kernel(
-                        self.cfg, ctx, kb, self.ecfg.max_len, sampled,
+                        self.cfg, self._shd, ctx, kb, self.ecfg.max_len,
+                        sampled,
                         self.params, self._tok, self.caches, self._pos,
                         self._active, self._keys, self._temps, self._topk,
                         self._topp)

@@ -83,6 +83,9 @@ class PageAllocator:
                              SCRATCH_PAGE, np.int32)
         self._dev = None          # cached device copy, refreshed when dirty
         self._dirty = True
+        # optional jax.sharding.Sharding applied at upload (mesh serving
+        # shards rows along the data axis); None -> default placement
+        self.device_sharding = None
 
     # -- capacity queries -----------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -288,8 +291,11 @@ class PageAllocator:
     def table_device(self):
         """jnp copy of the table; re-uploaded only after host mutations."""
         if self._dirty or self._dev is None:
+            import jax
             import jax.numpy as jnp
             self._dev = jnp.asarray(self.table)
+            if self.device_sharding is not None:
+                self._dev = jax.device_put(self._dev, self.device_sharding)
             self._dirty = False
         return self._dev
 

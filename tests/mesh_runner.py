@@ -1,0 +1,172 @@
+"""Subprocess worker for tests/test_mesh_serving.py.
+
+Runs the same serving trace on one mesh shape (or unsharded) and prints a
+JSON digest — token sequences per request, ServingReport energy/SLO fields,
+host-drain and compile counters — to stdout.  The parent test launches one
+worker per mesh under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+and compares digests bitwise: sharded serving must be indistinguishable from
+single-device serving, down to the last float.
+
+Runs standalone too (the CI mesh-smoke job calls it directly)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python tests/mesh_runner.py --mesh 2,4
+"""
+import argparse
+import json
+import sys
+
+
+def _dense_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="mesh-dense", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+                       d_ff=128, vocab_size=128, dtype="float32", max_seq=512)
+
+
+def _moe_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="mesh-moe", arch_type="moe", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab_size=128, num_experts=4,
+                       experts_per_token=2, dtype="float32", max_seq=512)
+
+
+def _requests(n, vocab, seed=3, out_len=10, dup_every=3):
+    """Mixed greedy / seeded-sampled requests; every ``dup_every``-th prompt
+    repeats an earlier one so the prefix cache takes real hits."""
+    import numpy as np
+    from repro.core import Request, SamplingParams
+    rng = np.random.default_rng(seed)
+    base = [rng.integers(1, vocab - 1, size=int(rng.integers(9, 22)))
+            for _ in range(dup_every)]
+    prompts, reqs = [], []
+    for i in range(n):
+        prompts.append(base[i % dup_every])
+        sp = SamplingParams(max_tokens=out_len, temperature=0.7,
+                            seed=100 + i) if i % 2 else \
+            SamplingParams(max_tokens=out_len)
+        reqs.append(Request(rid=i, arrival=0.0, prompt_len=len(prompts[-1]),
+                            output_len=out_len, sampling=sp))
+    return prompts, reqs
+
+
+def _report_digest(rep):
+    return {
+        "completed": rep.completed, "cancelled": rep.cancelled,
+        "failed": rep.failed, "shed": rep.shed, "preempted": rep.preempted,
+        "migrated": rep.migrated,
+        "prefill_energy_j": rep.prefill_energy_j,
+        "decode_energy_j": rep.decode_energy_j,
+        "idle_energy_j": rep.idle_energy_j,
+        "prefill_tokens": rep.prefill_tokens,
+        "decode_tokens": rep.decode_tokens,
+        "duration_s": rep.duration_s,
+        "ttft_pass": rep.ttft_pass, "tbt_pass": rep.tbt_pass,
+    }
+
+
+def run_engine(mesh, cfg, cancel=False, out_len=10):
+    """Engine scenario: paged + prefix cache + chunked prefill on a pool
+    tight enough to preempt, a mid-run cancel, mixed sampling."""
+    from repro.serving import EngineConfig, Server, ServingEngine
+    ecfg = EngineConfig(max_batch=8, max_len=96, paged=True,
+                        prefix_cache=True, num_pages=16, page_size=16,
+                        cache_dtype="float32", governor="defaultnv",
+                        mesh=mesh)
+    eng = ServingEngine(cfg, ecfg=ecfg, seed=0)
+    prompts, reqs = _requests(10, cfg.vocab_size, out_len=out_len)
+    for p, r in zip(prompts, reqs):
+        eng.submit(r, p)
+    eng.step()                        # progress, then cancel a live request
+    cancelled = None
+    if cancel:
+        live = [r.rid for r in eng.pending] + \
+            sorted(st.req.rid for st in eng.active.values())
+        assert live, "nothing left to cancel after one block"
+        cancelled = live[0]
+        assert eng.cancel(cancelled)
+    Server(eng).run()
+    rep = eng.report()
+    pc = eng.prefix_cache.stats()
+    return {
+        "tokens": {r.rid: list(map(int, r.tokens)) for r in reqs},
+        "cancelled_rid": cancelled,
+        "report": _report_digest(rep),
+        "host_drains": eng._host_drains,
+        "prefix_hits": pc["hits"], "prefix_hit_tokens": pc["hit_tokens"],
+        "buckets": list(eng.buckets), "ctx_buckets": list(eng.ctx_buckets),
+        "k_blocks": list(eng._k_blocks),
+    }
+
+
+def run_cluster(mesh):
+    """Disaggregated cluster scenario: prefill->decode handoffs on every
+    request, plus a replica kill at a deterministic fraction of the healthy
+    run's makespan (identical across meshes because tokens are)."""
+    from repro.serving import (EngineConfig, FaultPlan, ReplicaKill, Server,
+                               ServingCluster)
+    cfg = _dense_cfg()
+    prompts, reqs = _requests(6, cfg.vocab_size, seed=11, dup_every=6)
+
+    def once(faults=None):
+        ecfg = EngineConfig(max_batch=8, max_len=96, cache_dtype="float32",
+                            governor="defaultnv", num_pages=32, mesh=mesh)
+        cl = ServingCluster(cfg, n_prefill=1, n_decode=2, ecfg=ecfg,
+                            seed=0, faults=faults)
+        srv = Server(cl)
+        handles = [srv.submit(p, r.sampling) for p, r in zip(prompts, reqs)]
+        rep = srv.run()
+        toks = {i: list(map(int, h.request.tokens))
+                for i, h in enumerate(handles)}
+        drains = sum(r.engine._host_drains for r in cl.replicas)
+        return rep, toks, drains
+
+    healthy_rep, healthy_toks, healthy_drains = once()
+    plan = FaultPlan([ReplicaKill(at=0.4 * healthy_rep.duration_s,
+                                  replica="decode1")])
+    faulted_rep, faulted_toks, _ = once(faults=plan)
+    assert faulted_toks == healthy_toks, \
+        "replica-kill recovery lost token-exactness"
+    return {
+        "tokens": healthy_toks,
+        "report": _report_digest(healthy_rep),
+        "host_drains": healthy_drains,
+        "faulted_report": _report_digest(faulted_rep),
+    }
+
+
+def kernel_compiles():
+    """Module-level kernel compile counts, accumulated over every scenario
+    this worker ran (the satellite compile-budget regression reads these)."""
+    from repro.serving import engine as E
+    return {name: getattr(E, name)._cache_size()
+            for name in ("_prefill_kernel", "_chunk_prefill_kernel",
+                         "_decode_block_kernel", "_paged_decode_block_kernel")}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="none",
+                    help="'none' (unsharded) or 'dp,tp'")
+    ap.add_argument("--scenarios", default="dense,moe,cluster")
+    args = ap.parse_args(argv)
+    mesh = None if args.mesh == "none" else \
+        tuple(int(v) for v in args.mesh.split(","))
+
+    out = {"mesh": args.mesh}
+    scenarios = args.scenarios.split(",")
+    if "dense" in scenarios:
+        out["dense"] = run_engine(mesh, _dense_cfg(), cancel=True,
+                                  out_len=24)
+    if "moe" in scenarios:
+        out["moe"] = run_engine(mesh, _moe_cfg())
+    if "cluster" in scenarios:
+        out["cluster"] = run_cluster(mesh)
+    out["compiles"] = kernel_compiles()
+    json.dump(out, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Mesh-sharded serving equivalence: the PR 10 tentpole harness.
+
+The contract under test is *bit-exactness*: the same serving trace on a
+``(data, model)`` device mesh — per-slot state, cache rows, the page table
+and the paged KV pool sharded along ``data``; parameters storage-sharded and
+gathered to replicated at kernel entry — produces tokens, ServingReport
+energy/SLO floats, and host-drain counts identical to the single-device
+engine, bit for bit.  Not allclose: batch rows are independent and the
+parameter gather is pure data movement, so nothing may drift.
+
+Multi-device meshes need more than one XLA device, which on CPU requires
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax import —
+so those runs happen in subprocess workers (``tests/mesh_runner.py``), one
+per mesh shape, each running the full scenario set: dense and MoE engines
+with prefix-cache hits, a mid-run cancel, pool-pressure preemption, mixed
+greedy/seeded sampling; a disaggregated cluster with prefill->decode
+handoffs and a replica kill.  The in-process tests cover the mesh=(1,1)
+degenerate case and the config/handoff validation surface.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MESHES = ["1,1", "8,1", "2,4", "4,2"]
+
+
+def _run_worker(mesh: str, scenarios: str = "dense,moe,cluster") -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "mesh_runner.py"),
+         "--mesh", mesh, "--scenarios", scenarios],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT)
+    assert proc.returncode == 0, \
+        f"mesh worker {mesh} failed:\n{proc.stderr[-4000:]}"
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+@pytest.fixture(scope="module")
+def digests():
+    """One worker per mesh shape plus the unsharded anchor, all under the
+    same forced-8-device topology, all scenarios per worker."""
+    return {m: _run_worker(m) for m in ["none"] + MESHES}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh", MESHES)
+@pytest.mark.parametrize("scenario", ["dense", "moe", "cluster"])
+def test_mesh_bit_identical_to_single_device(digests, mesh, scenario):
+    """Tokens, report floats, drains, prefix hits, cancelled rid — the whole
+    digest — must match the unsharded baseline bitwise on every mesh shape,
+    from the degenerate (1,1) to the full 8-device layouts."""
+    base, got = digests["none"][scenario], digests[mesh][scenario]
+    assert got["tokens"] == base["tokens"], f"{scenario} tokens on {mesh}"
+    assert got == base, f"{scenario} digest diverged on mesh {mesh}"
+
+
+@pytest.mark.slow
+def test_scenarios_exercise_the_hard_paths(digests):
+    """The equivalence above is only as strong as the trace: assert the
+    scenarios really hit preemption, cancel, prefix hits, and migration."""
+    d = digests["none"]
+    assert d["dense"]["report"]["preempted"] > 0
+    assert d["dense"]["report"]["cancelled"] == 1
+    assert d["dense"]["cancelled_rid"] is not None
+    assert d["dense"]["prefix_hits"] > 0
+    assert d["dense"]["prefix_hit_tokens"] > 0
+    assert d["cluster"]["report"]["migrated"] > 0
+    assert d["cluster"]["faulted_report"]["completed"] == \
+        d["cluster"]["report"]["completed"]
+    for scen in ("dense", "moe", "cluster"):
+        assert d[scen]["host_drains"] > 0
+
+
+@pytest.mark.slow
+def test_mesh_compile_budget(digests):
+    """Compile-count regression on the forced-8-device meshes: sharded
+    operands must hit the same jit cache entries block after block (a pin
+    that drifts to a different sharding forces a recompile), so every
+    multi-device mesh's kernel cache sizes equal the unsharded baseline's
+    exactly.  The degenerate (1,1) mesh pays a handful of warm-up
+    recompiles — XLA normalizes 1-device NamedSharding outputs back to
+    plain single-device placement, so second calls see different input
+    shardings — and is held to the bucket-arithmetic bound only: x2
+    (sampled/greedy) x the distinct model configs the worker ran
+    (dense, moe, cluster-dense)."""
+    base = digests["none"]["compiles"]
+    for m in MESHES:
+        if m == "1,1":
+            continue
+        assert digests[m]["compiles"] == base, f"compile drift on mesh {m}"
+    n_cfgs = 3                       # mesh-dense, mesh-moe, cluster's dense
+    dense = digests["none"]["dense"]
+    buckets = len(dense["buckets"])
+    ctx = len(dense["ctx_buckets"])
+    kblocks = len(dense["k_blocks"])
+    for m in ["none"] + MESHES:
+        got = digests[m]["compiles"]
+        assert got["_prefill_kernel"] <= buckets * 2 * n_cfgs, m
+        assert got["_chunk_prefill_kernel"] <= buckets * ctx * 2 * n_cfgs, m
+        assert got["_paged_decode_block_kernel"] \
+            <= ctx * kblocks * 2 * n_cfgs, m
+        assert got["_decode_block_kernel"] <= ctx * kblocks * 2 * n_cfgs, m
+
+
+# -- in-process: the degenerate mesh and the validation surface ---------------
+
+def _cfg(**kw):
+    from repro.models.config import ModelConfig
+    base = dict(name="tm", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                vocab_size=128, dtype="float32", max_seq=512)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _trace(mesh):
+    from repro.core import Request, SamplingParams
+    from repro.serving import EngineConfig, Server, ServingEngine
+    cfg = _cfg()
+    ecfg = EngineConfig(max_batch=4, max_len=96, paged=True,
+                        prefix_cache=True, cache_dtype="float32",
+                        governor="defaultnv", mesh=mesh)
+    eng = ServingEngine(cfg, ecfg=ecfg, seed=0)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(6):
+        sp = SamplingParams(max_tokens=8, temperature=0.6, seed=50 + i) \
+            if i % 2 else SamplingParams(max_tokens=8)
+        r = Request(rid=i, arrival=0.0, prompt_len=9 + i, output_len=8,
+                    sampling=sp)
+        eng.submit(r, rng.integers(1, cfg.vocab_size - 1, size=9 + i))
+        reqs.append(r)
+    Server(eng).run()
+    rep = eng.report()
+    return ([list(r.tokens) for r in reqs],
+            rep.prefill_energy_j, rep.decode_energy_j, rep.duration_s,
+            rep.ttft_pass, rep.tbt_pass, eng._host_drains)
+
+
+def test_one_by_one_mesh_equals_unsharded():
+    """mesh=(1,1) must be the identity: same tokens, same energy floats,
+    same drain count as mesh=None — in one process, no forced devices."""
+    assert _trace(None) == _trace((1, 1))
+
+
+def test_engine_config_rejects_bad_mesh():
+    from repro.serving import EngineConfig
+    with pytest.raises(ValueError, match="pair"):
+        EngineConfig(mesh=(2,))
+    with pytest.raises(ValueError, match=">= 1"):
+        EngineConfig(mesh=(0, 2))
+    with pytest.raises(ValueError, match="max_batch"):
+        EngineConfig(mesh=(3, 1), max_batch=8)
+    with pytest.raises(ValueError, match="num_pages"):
+        EngineConfig(mesh=(2, 1), paged=True, num_pages=7)
+    with pytest.raises(ValueError, match="slot-native"):
+        EngineConfig(mesh=(1, 1), slot_native=False)
+    assert EngineConfig(mesh=[4, "2"]).mesh == (4, 2)  # normalized
+
+
+def test_engine_rejects_indivisible_model_axes():
+    """Model-dependent divisibility fails at construction with an actionable
+    error, not deep inside XLA — raised before any device is touched, so a
+    1-device process can cover tp=2."""
+    from repro.serving import EngineConfig, ServingEngine
+    with pytest.raises(ValueError, match="num_heads"):
+        ServingEngine(_cfg(num_heads=3, num_kv_heads=3),
+                      ecfg=EngineConfig(mesh=(1, 2), max_len=96))
+    with pytest.raises(ValueError, match="num_experts"):
+        ServingEngine(
+            _cfg(arch_type="moe", num_experts=3, experts_per_token=2),
+            ecfg=EngineConfig(mesh=(1, 2), max_len=96))
+
+
+def test_cross_mesh_handoff_rejected():
+    """An adopter whose mesh shape differs from the exporter's must refuse
+    the stream outright — same contract as cfg_name/page_size mismatches."""
+    import dataclasses
+    from repro.core import Request
+    from repro.models import init_params
+    import jax
+    from repro.serving import EngineConfig, ServingEngine
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(max_batch=4, max_len=96, paged=True,
+                        cache_dtype="float32", governor="defaultnv")
+    A = ServingEngine(cfg, params=params, ecfg=ecfg)
+    B = ServingEngine(cfg, params=params,
+                      ecfg=dataclasses.replace(ecfg, mesh=(1, 1)))
+    r = Request(rid=0, arrival=0.0, prompt_len=9, output_len=6)
+    A.submit(r, np.arange(1, 10))
+    A.step(1)
+    slot = next(iter(A.active))
+    ho = A.export_stream(slot)
+    assert ho.mesh_shape is None
+    with pytest.raises(AssertionError, match="cross-mesh handoff"):
+        B.import_stream(ho)
+    # and the matching shape is accepted: same-mesh adoption still works
+    C = ServingEngine(cfg, params=params, ecfg=ecfg)
+    assert C.import_stream(ho)
+
+
+def test_build_serving_decode_lowers():
+    """The dry-run builder mirrors the engine's sharded paged-decode step:
+    it must lower (dense and MoE) with the serving param/cache shardings
+    attached, without constructing an engine."""
+    import jax
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.specs import build_serving_decode
+    mesh = make_serving_mesh(1, 1)
+    for cfg in (_cfg(), _cfg(name="tm-moe", arch_type="moe", num_kv_heads=2,
+                          num_experts=4, experts_per_token=2)):
+        b = build_serving_decode(cfg, mesh, max_batch=4, max_len=64,
+                                 page_size=16)
+        jax.jit(b["fn"], in_shardings=b["in_shardings"],
+                out_shardings=b["out_shardings"],
+                donate_argnums=b["donate_argnums"]).lower(*b["args"])
+        assert b["meta"]["pool_pages"] > 0
